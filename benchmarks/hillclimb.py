@@ -1,0 +1,184 @@
+"""§Perf hillclimbing: lower/compile variants of chosen (arch x shape)
+cells, re-derive the roofline, and append hypothesis->change->before->
+after records to experiments/perf_log.json.
+
+Variants are *rule/config* deltas on the same production mesh:
+
+  skip_causal        band-limited blockwise attention (visits only valid
+                     kv blocks): attention FLOPs ~halve for causal train,
+                     ~S/window for SWA prefill.  FLOP delta is analytic
+                     (the cost probe's direct-attention path cannot see
+                     block skipping); memory/collectives measured.
+  remat_dots         checkpoint policy full->dots: layer FLOPs 4x->3x fwd
+                     at the cost of saved matmul outputs.
+  remat_none         no remat (memory permitting).
+  fsdp256            pure ZeRO-3: batch and weight-embed over BOTH mesh
+                     axes, no tensor parallelism — removes the seq-
+                     parallel residual gathers; weights gathered per
+                     layer instead (wins when weight bytes << activation
+                     traffic, i.e. small models / big batches).
+  resident_ffn       decode: FFN inputs' d_model sharded over 'data' so
+                     the contraction aligns with the weights' FSDP shards
+                     — per-step psum of (B,F/16) activations instead of
+                     per-step all-gather of the full FFN weights.
+  ep_experts         expert dim of MoE weights sharded over 'model'
+                     (divisibility permitting: phi3.5's 16 experts).
+
+  PYTHONPATH=src python -m benchmarks.hillclimb --cell qwen3-1.7b:train_4k \
+      --variant fsdp256 --hypothesis "..."
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+PERF_LOG = ROOT / "experiments" / "perf_log.json"
+
+VARIANTS = {
+    "pad_heads": dict(cfg_overrides={"pad_heads_multiple": 16}),
+    "pad_heads_skip": dict(cfg_overrides={"pad_heads_multiple": 16},
+                           skip_masked_blocks=True),
+    "skip_causal": dict(skip_masked_blocks=True),
+    "bf16_params": dict(cfg_overrides={"param_dtype": "bfloat16"}),
+    "remat_dots": dict(cfg_overrides={"remat": "dots"}),
+    "remat_none": dict(cfg_overrides={"remat": "none"}),
+    "fsdp256": dict(extra_rules={
+        "batch": (("data", "model"),),
+        "embed": (("data", "model"), ("data",)),
+        "vocab": (),
+        "heads": (),
+        "kv_heads": (),
+        "head_dim": (),
+        "mlp": (),
+        "rnn": (),
+        "rnn_in": (),
+        "res_seq": (),
+        "act_heads": (),
+        "act_mlp": (),
+    }),
+    "resident_ffn": dict(extra_rules={
+        "ffn_batch": (),
+        "ffn_embed": (("data",),),
+    }),
+    "ep_experts": dict(extra_rules={
+        "expert": (("model",),),
+        "mlp": (("data",),),  # TP moves to data; experts own the model axis
+    }),
+    "fsdp256_skip": dict(skip_masked_blocks=True, extra_rules={
+        "batch": (("data", "model"),),
+        "embed": (("data", "model"), ("data",)),
+        "vocab": (), "heads": (), "kv_heads": (), "head_dim": (),
+        "mlp": (), "rnn": (), "rnn_in": (), "res_seq": (),
+        "act_heads": (), "act_mlp": (),
+    }),
+}
+
+
+def run_variant(arch: str, shape: str, variant: str, hypothesis: str = "",
+                probe: bool = True):
+    from repro.launch import dryrun as dr
+    from repro.configs import SHAPES, get_config
+    from repro.roofline import analytic, compute_roofline, model_flops
+
+    spec = VARIANTS[variant]
+    kw = dict(
+        extra_rules=spec.get("extra_rules"),
+        cfg_overrides=spec.get("cfg_overrides"),
+        skip_masked_blocks=spec.get("skip_masked_blocks", False),
+    )
+    t0 = time.time()
+    rec = dr.lower_cell(arch, shape, multi_pod=False, **kw)
+    shape_cfg = SHAPES[shape]
+    cfg = get_config(arch)
+    if spec.get("cfg_overrides"):
+        cfg = cfg.replace(**spec["cfg_overrides"])
+
+    if rec["status"] == "OK":
+        pattern = cfg.resolved_pattern
+        analytic_only = shape_cfg.kind == "decode" or (
+            any(k in ("mlstm", "slstm") for k in pattern) and shape_cfg.seq_len > 4096
+        )
+        skip = spec.get("skip_masked_blocks", False)
+        Sk_eff = 0
+        if skip and shape_cfg.kind in ("train", "prefill"):
+            w = cfg.window if cfg.attn_kind in ("swa", "local") and cfg.window else 0
+            Sk_eff = min((shape_cfg.seq_len + 1024) // 2,
+                         (w + 1024) if w else shape_cfg.seq_len)
+        if analytic_only or skip or not probe:
+            f = analytic.forward_flops(cfg, shape_cfg.global_batch,
+                                       shape_cfg.seq_len if shape_cfg.kind != "decode" else 1,
+                                       Sk_eff=Sk_eff,
+                                       decode_cache=shape_cfg.seq_len if shape_cfg.kind == "decode" else 0)
+            mult = {"train": (3.0, 4.0 if cfg.remat == "full" else 3.0),
+                    "prefill": (1.0, 1.0), "decode": (1.0, 1.0)}[shape_cfg.kind]
+            flops = (mult[0] * f["stem"] + mult[1] * f["layers"]) / rec["n_chips"]
+            src = "flops=analytic(+skip)" if skip else "flops=analytic"
+        else:
+            pr = dr.probe_costs(arch, shape, False,
+                                extra_rules=spec.get("extra_rules"),
+                                base_overrides=spec.get("cfg_overrides"))
+            flops = pr["flops"]
+            rec["cost_probe"] = pr
+            src = "flops=probe"
+        an_bytes = analytic.step_bytes(
+            cfg, shape_cfg.kind, shape_cfg.global_batch, shape_cfg.seq_len,
+            chips=rec["n_chips"],
+            fsdp="fsdp" not in variant or True,
+        )
+        tokens = rec["tokens_per_step"]
+        mf = model_flops(shape_cfg.kind, rec["n_active_params"], tokens)
+        roof = compute_roofline(
+            {"flops": flops, "bytes accessed": an_bytes["total"]},
+            rec["collectives"]["wire_bytes"], mf, rec["n_chips"],
+        )
+        rec["roofline"] = roof.to_dict()
+        rec["roofline"]["source"] = src + " bytes=analytic collectives=weighted-hlo"
+
+    # append to the perf log
+    log = json.loads(PERF_LOG.read_text()) if PERF_LOG.exists() else []
+    entry = {
+        "cell": f"{arch}:{shape}",
+        "variant": variant,
+        "hypothesis": hypothesis,
+        "wall_s": round(time.time() - t0, 1),
+        "status": rec["status"],
+        "roofline": rec.get("roofline"),
+        "memory_gib": rec.get("memory", {}).get("peak_bytes_est", 0) / 2**30,
+        "collectives_wire_gb": rec.get("collectives", {}).get("wire_bytes", 0) / 1e9,
+        "error": rec.get("error"),
+    }
+    log.append(entry)
+    PERF_LOG.parent.mkdir(exist_ok=True, parents=True)
+    PERF_LOG.write_text(json.dumps(log, indent=2, default=float))
+    out = ROOT / "experiments" / "dryrun" / (
+        f"{arch}__{shape}__singlepod__{variant}.json"
+    )
+    out.write_text(json.dumps(rec, indent=2, default=float))
+    return entry
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="arch:shape")
+    ap.add_argument("--variant", required=True, choices=list(VARIANTS))
+    ap.add_argument("--hypothesis", default="")
+    ap.add_argument("--no-probe", action="store_true")
+    args = ap.parse_args()
+    arch, shape = args.cell.split(":")
+    e = run_variant(arch, shape, args.variant, args.hypothesis,
+                    probe=not args.no_probe)
+    r = e.get("roofline") or {}
+    print(json.dumps({k: e[k] for k in ("cell", "variant", "status")},), flush=True)
+    if r:
+        print(f"compute={r['compute_s']*1e3:.1f}ms mem={r['memory_s']*1e3:.1f}ms "
+              f"coll={r['collective_s']*1e3:.1f}ms dom={r['dominant']} "
+              f"mfu={r['mfu']:.4f} mem/dev={e['memory_gib']:.1f}GiB")
+    else:
+        print(e.get("error", "")[:300])
+
+
+if __name__ == "__main__":
+    main()

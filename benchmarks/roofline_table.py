@@ -1,0 +1,71 @@
+"""Assemble the §Dry-run / §Roofline tables from experiments/dryrun/*.json.
+
+  PYTHONPATH=src python -m benchmarks.roofline_table [--markdown]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs import ARCH_IDS, SHAPES
+
+DRY = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load(mesh_tag: str):
+    recs = {}
+    for f in DRY.glob(f"*__{mesh_tag}.json"):
+        r = json.loads(f.read_text())
+        recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def fmt_ms(s):
+    return f"{s * 1e3:.1f}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="singlepod")
+    args = ap.parse_args()
+    recs = load(args.mesh)
+    hdr = ("| arch | shape | status | mem/dev GiB | compute ms | memory ms | "
+           "coll ms | dominant | useful | MFU | note |")
+    print(hdr)
+    print("|" + "---|" * 11)
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            r = recs.get((arch, shape))
+            if r is None:
+                print(f"| {arch} | {shape} | MISSING |  |  |  |  |  |  |  |  |")
+                continue
+            if r["status"] == "SKIP":
+                print(f"| {arch} | {shape} | SKIP |  |  |  |  |  |  |  | "
+                      f"{r['reason'][:60]} |")
+                continue
+            if r["status"] == "FAIL":
+                print(f"| {arch} | {shape} | FAIL |  |  |  |  |  |  |  | "
+                      f"{r['error'][:60]} |")
+                continue
+            rf = r.get("roofline", {})
+            mem = r["memory"]["peak_bytes_est"] / 2**30
+            note = rf.get("source", "")[:40]
+            print(
+                f"| {arch} | {shape} | OK | {mem:.1f} | {fmt_ms(rf['compute_s'])} | "
+                f"{fmt_ms(rf['memory_s'])} | {fmt_ms(rf['collective_s'])} | "
+                f"{rf['dominant']} | {rf['useful_ratio']:.2f} | {rf['mfu']:.3f} | {note} |"
+            )
+    # aggregate
+    ok = [r for r in recs.values() if r["status"] == "OK" and "roofline" in r]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline"]["mfu"])
+        coll = max(ok, key=lambda r: r["roofline"]["collective_s"]
+                   / max(r["roofline"]["step_time_s"], 1e-12))
+        print(f"\nworst MFU: {worst['arch']} x {worst['shape']} "
+              f"({worst['roofline']['mfu']:.4f})")
+        print(f"most collective-bound: {coll['arch']} x {coll['shape']}")
+
+
+if __name__ == "__main__":
+    main()

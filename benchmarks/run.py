@@ -1,0 +1,321 @@
+"""Benchmark harness — one function per paper table/figure (§6).
+
+Prints ``name,us_per_call,derived`` CSV rows.  Wall-clock numbers are
+CPU-container numbers; what reproduces the paper is the *relative*
+behavior per figure (parallel-fetch speedup, partition-size trade-off,
+incremental-vs-version computation, index-size ordering).  BENCH_SCALE
+env (default 1.0) scales event counts.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig11,...]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+from typing import Callable, Dict
+
+import numpy as np
+
+SCALE = float(os.environ.get("BENCH_SCALE", "1.0"))
+N_EVENTS = int(12_000 * SCALE)
+
+
+def _timeit(fn, repeat=3):
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6  # us
+
+
+def _row(name, us, derived=""):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def _build(n_events=None, seed=7, **cfg_kw):
+    from repro.core.tgi import TGI, TGIConfig
+    from repro.data.temporal_graph_gen import generate
+    from repro.storage.kvstore import DeltaStore
+
+    n_events = n_events or N_EVENTS
+    events = generate(n_events, seed=seed)
+    defaults = dict(n_shards=4, parts_per_shard=2, events_per_span=n_events // 4,
+                    eventlist_size=256, checkpoints_per_span=4)
+    defaults.update(cfg_kw)
+    cfg = TGIConfig(**defaults)
+    store = DeltaStore(m=4, r=1, backend="mem")
+    tgi = TGI.build(events, cfg, store)
+    return events, cfg, store, tgi
+
+
+# ---------------------------------------------------------------------------
+
+
+def fig11_snapshot_vs_c():
+    """Fig 11: snapshot retrieval vs parallel fetch factor c (file backend
+    so threads overlap real I/O)."""
+    import tempfile
+
+    from repro.core.tgi import TGI, TGIConfig
+    from repro.data.temporal_graph_gen import generate
+    from repro.storage.kvstore import DeltaStore
+
+    events = generate(N_EVENTS, seed=7)
+    cfg = TGIConfig(n_shards=8, parts_per_shard=2,
+                    events_per_span=N_EVENTS // 4, eventlist_size=256)
+    with tempfile.TemporaryDirectory() as root:
+        store = DeltaStore(m=8, r=1, backend="file", root=root)
+        tgi = TGI.build(events, cfg, store)
+        t = int(np.mean(events.time_range()))
+        for c in (1, 2, 4, 8):
+            us = _timeit(lambda: tgi.get_snapshot(t, c=c))
+            _row(f"fig11/snapshot_c{c}", us,
+                 f"deltas={tgi.last_cost.n_deltas};bytes={tgi.last_cost.n_bytes}")
+
+
+def fig12_snapshot_vs_m_r():
+    """Fig 12: m (storage nodes) x r (replication)."""
+    from repro.core.tgi import TGI, TGIConfig
+    from repro.data.temporal_graph_gen import generate
+    from repro.storage.kvstore import DeltaStore
+
+    events = generate(N_EVENTS, seed=7)
+    t = int(np.mean(events.time_range()))
+    for m, r in ((1, 1), (2, 1), (2, 2), (4, 1), (4, 2)):
+        cfg = TGIConfig(n_shards=4, parts_per_shard=2,
+                        events_per_span=N_EVENTS // 4, eventlist_size=256)
+        store = DeltaStore(m=m, r=r, backend="mem")
+        from repro.core.tgi import TGI as _TGI
+
+        tgi = _TGI.build(events, cfg, store)
+        us = _timeit(lambda: tgi.get_snapshot(t, c=min(m, 4)))
+        _row(f"fig12/snapshot_m{m}_r{r}", us)
+
+
+def fig13b_snapshot_vs_ps():
+    """Fig 13b: micro-delta partition count barely moves snapshot latency
+    (micro-partitions of a delta are clustered contiguously)."""
+    from repro.data.temporal_graph_gen import generate
+
+    events = generate(N_EVENTS, seed=7)
+    t = int(np.mean(events.time_range()))
+    for pps in (1, 2, 4, 8):
+        _, _, _, tgi = _build(parts_per_shard=pps)
+        us = _timeit(lambda: tgi.get_snapshot(t))
+        _row(f"fig13b/snapshot_pps{pps}", us,
+             f"deltas={tgi.last_cost.n_deltas}")
+
+
+def fig14_node_history():
+    """Fig 14/16: node-version retrieval vs eventlist size l, parallel c,
+    and partition count (smaller l / finer partitions win — the opposite
+    of the snapshot trend: the paper's central trade-off)."""
+    events, cfg, store, tgi0 = _build()
+    t0g, t1g = events.time_range()
+    t0 = int(t0g + 0.2 * (t1g - t0g))
+    t1 = int(t0g + 0.9 * (t1g - t0g))
+    from repro.data.temporal_graph_gen import naive_state_at
+
+    hub = int(np.argmax(naive_state_at(events, t1).degree()))
+    for l in (64, 256, 1024):
+        _, _, _, tgi = _build(eventlist_size=l)
+        us = _timeit(lambda: tgi.get_node_history(hub, t0, t1))
+        _row(f"fig14a/nodehist_l{l}", us,
+             f"deltas={tgi.last_cost.n_deltas};bytes={tgi.last_cost.n_bytes}")
+    for pps in (1, 4):
+        _, _, _, tgi = _build(parts_per_shard=pps)
+        us = _timeit(lambda: tgi.get_node_history(hub, t0, t1))
+        _row(f"fig14c/nodehist_pps{pps}", us,
+             f"bytes={tgi.last_cost.n_bytes}")
+    for c in (1, 4):
+        us = _timeit(lambda: tgi0.get_node_history(hub, t0, t1, c=c))
+        _row(f"fig14b/nodehist_c{c}", us)
+
+
+def fig15a_1hop_partitioning():
+    """Fig 15a: 1-hop retrieval — random vs locality vs locality+repl."""
+    from repro.data.temporal_graph_gen import naive_state_at
+
+    configs = [
+        ("random", dict(partition_strategy="hash")),
+        ("locality", dict(partition_strategy="locality")),
+        ("locality_repl", dict(partition_strategy="locality", replicate_1hop=True)),
+    ]
+    for name, kw in configs:
+        events, cfg, store, tgi = _build(n_events=N_EVENTS // 2, **kw)
+        t = int(np.mean(events.time_range()))
+        hub = int(np.argmax(naive_state_at(events, t).degree()))
+        us = _timeit(lambda: tgi.get_k_hop(hub, t, 1, method="expand"))
+        _row(f"fig15a/1hop_{name}", us,
+             f"deltas={tgi.last_cost.n_deltas};bytes={tgi.last_cost.n_bytes}")
+
+
+def fig15b_growing_data():
+    """Fig 15b: snapshot latency vs total history size (~flat — timespan
+    indexing isolates the touched span)."""
+    for mult in (1, 2, 4):
+        events, cfg, store, tgi = _build(n_events=(N_EVENTS // 2) * mult,
+                                         events_per_span=N_EVENTS // 4)
+        t0g, t1g = events.time_range()
+        t = int(t0g + 0.4 * (t1g - t0g))
+        us = _timeit(lambda: tgi.get_snapshot(t))
+        _row(f"fig15b/snapshot_events{(N_EVENTS // 2) * mult}", us)
+
+
+def fig15c_taf_scaling():
+    """Fig 15c: analytics (max LCC) compute + SoTS fetch vs parallelism."""
+    from repro.taf import analytics, build_sots
+
+    events, cfg, store, tgi = _build()
+    t0g, t1g = events.time_range()
+    t0 = int(t0g + 0.4 * (t1g - t0g))
+    t1 = int(t0g + 0.8 * (t1g - t0g))
+    for c in (1, 2, 4):
+        us = _timeit(lambda: build_sots(tgi, t0, t1, c=c), repeat=2)
+        _row(f"fig15c/sots_fetch_c{c}", us)
+    sots = build_sots(tgi, t0, t1)
+    us = _timeit(lambda: analytics.max_lcc(sots, (t0 + t1) // 2), repeat=2)
+    _row("fig15c/max_lcc", us, f"nodes={len(sots)}")
+
+
+def fig17_incremental_vs_temporal():
+    """Fig 17: NodeComputeDelta vs NodeComputeTemporal cumulative time vs
+    number of evaluated versions."""
+    from repro.taf import analytics, build_sots
+
+    events, cfg, store, tgi = _build(n_events=N_EVENTS // 2)
+    t0g, t1g = events.time_range()
+    sots = build_sots(tgi, int(t0g + 0.3 * (t1g - t0g)), int(t1g))
+    pts_all = sots.change_points()
+    for n_versions in (8, 32, 128):
+        pts = pts_all[:: max(len(pts_all) // n_versions, 1)][:n_versions]
+        us_t = _timeit(lambda: analytics.degree_series_temporal(sots, pts), repeat=1)
+        us_d = _timeit(lambda: analytics.degree_series_delta(sots, pts), repeat=1)
+        _row(f"fig17/temporal_v{n_versions}", us_t)
+        _row(f"fig17/delta_v{n_versions}", us_d,
+             f"speedup={us_t / max(us_d, 1):.2f}x")
+
+
+def table1_index_comparison():
+    """Table 1: measured fetch cost (deltas, cardinality, bytes) and index
+    size for Log, DeltaGraph (monolithic), and TGI on the same history."""
+    from repro.data.temporal_graph_gen import naive_state_at
+
+    n = N_EVENTS // 2
+    variants = [
+        ("log", dict(events_per_span=10**9, checkpoints_per_span=1,
+                     n_shards=1, parts_per_shard=1, eventlist_size=256)),
+        ("deltagraph", dict(events_per_span=n // 4, checkpoints_per_span=4,
+                            n_shards=1, parts_per_shard=1, eventlist_size=256)),
+        ("tgi", dict(events_per_span=n // 4, checkpoints_per_span=4,
+                     n_shards=4, parts_per_shard=2, eventlist_size=256)),
+    ]
+    for name, kw in variants:
+        events, cfg, store, tgi = _build(n_events=n, **kw)
+        t0g, t1g = events.time_range()
+        t = int(t0g + 0.7 * (t1g - t0g))
+        hub = int(np.argmax(naive_state_at(events, t).degree()))
+        us = _timeit(lambda: tgi.get_snapshot(t))
+        _row(f"table1/{name}/snapshot", us,
+             f"deltas={tgi.last_cost.n_deltas};card={tgi.last_cost.sum_cardinality}")
+        us = _timeit(lambda: tgi.get_node_history(hub, int(t0g + 0.3 * (t1g - t0g)), t))
+        _row(f"table1/{name}/node_versions", us,
+             f"deltas={tgi.last_cost.n_deltas};bytes={tgi.last_cost.n_bytes}")
+        us = _timeit(lambda: tgi.get_k_hop(hub, t, 1))
+        _row(f"table1/{name}/1hop", us,
+             f"deltas={tgi.last_cost.n_deltas}")
+        _row(f"table1/{name}/index_size", 0.0,
+             f"bytes={store.stats.bytes_written}")
+
+
+def bench_checkpoint_store():
+    """Beyond-paper: TGI checkpoint store — delta-vs-snapshot bytes and
+    restore latency vs parallel fetch (the LM-plane integration)."""
+    import jax
+
+    from repro.storage.checkpoint import CheckpointConfig, CheckpointStore
+    from repro.storage.kvstore import DeltaStore
+
+    rng = np.random.RandomState(0)
+    tree = {"w": rng.randn(512, 1024).astype(np.float32),
+            "m": rng.randn(512, 1024).astype(np.float32)}
+    store = CheckpointStore(DeltaStore(m=4, r=2, backend="mem"),
+                            CheckpointConfig(snapshot_every=4))
+    b_prev = 0
+    for s in range(8):
+        tree = jax.tree.map(
+            lambda x: x + rng.randn(*x.shape).astype(np.float32) * 1e-3, tree
+        )
+        store.save(s, tree)
+        b = store.store.stats.bytes_written
+        _row(f"ckpt/save{s}_{store.saves[-1]['kind']}", 0.0, f"bytes={b - b_prev}")
+        b_prev = b
+    for c in (1, 4):
+        us = _timeit(lambda: store.restore(step=7, c=c), repeat=2)
+        _row(f"ckpt/restore_c{c}", us)
+
+
+def bench_delta_overlay_kernel():
+    """Kernel micro-bench: fused overlay (jit'd jnp mirror of the Pallas
+    kernel) vs the numpy pairwise chain, h=2..8 (DESIGN §7 HBM argument)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.delta import Delta, delta_sum
+    from repro.kernels.delta_overlay import ref as ov_ref
+
+    P, S, K = 8, 2048, 4
+    rng = np.random.RandomState(0)
+    for h in (2, 4, 8):
+        valid = rng.rand(h, P, S) < 0.3
+        present = (rng.rand(h, P, S) < 0.8).astype(np.int8)
+        attrs = rng.randint(-1, 5, size=(h, P, S, K)).astype(np.int32)
+        fold = jax.jit(ov_ref.overlay_ref)
+        jax.block_until_ready(fold(jnp.asarray(valid), jnp.asarray(present),
+                                   jnp.asarray(attrs)))  # warm
+        us_k = _timeit(lambda: jax.block_until_ready(
+            fold(jnp.asarray(valid), jnp.asarray(present), jnp.asarray(attrs))))
+        ds = []
+        for i in range(h):
+            d = Delta.empty(P, S, K)
+            d.valid, d.present, d.attrs = valid[i], present[i], attrs[i]
+            ds.append(d)
+
+        def chain():
+            acc = ds[0]
+            for d in ds[1:]:
+                acc = delta_sum(acc, d)
+
+        us_c = _timeit(chain)
+        _row(f"kernel/overlay_fused_h{h}", us_k, f"chain_us={us_c:.0f}")
+
+
+BENCHES: Dict[str, Callable] = {
+    "fig11": fig11_snapshot_vs_c,
+    "fig12": fig12_snapshot_vs_m_r,
+    "fig13b": fig13b_snapshot_vs_ps,
+    "fig14": fig14_node_history,
+    "fig15a": fig15a_1hop_partitioning,
+    "fig15b": fig15b_growing_data,
+    "fig15c": fig15c_taf_scaling,
+    "fig17": fig17_incremental_vs_temporal,
+    "table1": table1_index_comparison,
+    "ckpt": bench_checkpoint_store,
+    "kernel": bench_delta_overlay_kernel,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated bench names")
+    args, _ = ap.parse_known_args()
+    names = args.only.split(",") if args.only else list(BENCHES)
+    print("name,us_per_call,derived")
+    for n in names:
+        BENCHES[n]()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""End-to-end driver: train a (reduced) assigned architecture on random
+walks over the temporal graph — the graph plane feeding the LM plane —
+with TGI-backed delta checkpointing, a simulated crash, and an elastic
+resume.  ~2-3 minutes on CPU.
+
+  PYTHONPATH=src python examples/train_lm.py [--arch granite-3-8b]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.tgi import TGI, TGIConfig
+from repro.data.pipeline import GraphWalkLM, PipelineConfig
+from repro.data.temporal_graph_gen import generate
+from repro.models import lm
+from repro.models.sharding import Sharder, split_tree
+from repro.optim import adamw
+from repro.storage.checkpoint import CheckpointConfig, CheckpointStore
+from repro.storage.kvstore import DeltaStore
+from repro.train import make_train_step
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="qwen3-1.7b")
+ap.add_argument("--steps", type=int, default=24)
+args = ap.parse_args()
+
+BATCH, SEQ = 8, 64
+cfg = get_config(args.arch).reduced()
+print(f"arch {args.arch} (reduced): {cfg.n_layers}L d={cfg.d_model}")
+
+# --- graph plane: history + index + walk dataset
+events = generate(6_000, seed=3)
+tgi = TGI.build(events, TGIConfig(n_shards=2, parts_per_shard=2,
+                                  events_per_span=2_000),
+                DeltaStore(m=2, r=1, backend="mem"))
+pipe = GraphWalkLM(PipelineConfig(BATCH, SEQ, cfg.vocab_size), tgi, seed=0)
+print("pipeline: random walks over TGI snapshots at "
+      f"{len(pipe.times)} timepoints")
+
+# --- LM plane
+shd = Sharder(mesh=None)
+params, _ = split_tree(lm.init(jax.random.PRNGKey(0), cfg, max_seq=4 * SEQ))
+opt_state = adamw.init(params)
+ocfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=4, decay_steps=args.steps)
+step_fn = jax.jit(make_train_step(cfg, shd, ocfg))
+
+ckpt = CheckpointStore(DeltaStore(m=4, r=2, backend="mem"),
+                       CheckpointConfig(snapshot_every=3))
+
+
+def extra_inputs(step):
+    out = {}
+    if cfg.n_img_tokens:
+        out["img_embeds"] = np.zeros((BATCH, cfg.n_img_tokens, cfg.d_model), np.float32)
+    if cfg.is_encdec:
+        out["frames"] = (np.random.RandomState(step)
+                         .randn(BATCH, cfg.enc_seq, cfg.d_model).astype(np.float32) * 0.02)
+    return out
+
+
+crash_at = args.steps * 2 // 3
+crashed = False
+losses = []
+step = 0
+while step < args.steps:
+    batch = dict(pipe.batch(step), **extra_inputs(step))
+    params, opt_state, metrics = step_fn(
+        params, opt_state, {k: jnp.asarray(v) for k, v in batch.items()})
+    losses.append(float(metrics["loss"]))
+    if step % 4 == 0:
+        print(f"step {step:3d} loss {losses[-1]:.4f}")
+    if (step + 1) % 4 == 0:
+        ckpt.save(step, (params, opt_state))
+    if step == crash_at and not crashed:
+        crashed = True
+        print(f"--- simulated crash after step {step}; killing storage node 1 "
+              "and restoring from replicas ---")
+        ckpt.store.fail_node(1)
+        (params, opt_state), restored = ckpt.restore(c=4, example_tree=(params, opt_state))
+        step = restored + 1
+        print(f"--- resumed from step {restored} (failovers: "
+              f"{ckpt.store.stats.failovers}) ---")
+        continue
+    step += 1
+
+print(f"done: loss {losses[0]:.4f} -> {losses[-1]:.4f}; "
+      f"checkpoint store wrote {ckpt.storage_cost()['bytes_written']/1e6:.1f} MB "
+      f"across {ckpt.storage_cost()['n_saves']} saves "
+      f"(delta saves compress vs snapshots)")
+assert losses[-1] < losses[0], "training should reduce loss"
+print("OK")

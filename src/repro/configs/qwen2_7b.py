@@ -1,0 +1,26 @@
+"""qwen2-7b [dense] — GQA with QKV bias.
+
+28L d_model=3584 28H (GQA kv=4) d_ff=18944 vocab=152064
+[arXiv:2407.10671; hf tier]
+
+Full attention => long_500k SKIPPED.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-7b",
+    family="dense",
+    n_layers=28,
+    d_model=3584,
+    n_heads=28,
+    n_kv_heads=4,
+    d_ff=18944,
+    vocab_size=152_064,
+    head_dim=128,
+    attn_kind="full",
+    qkv_bias=True,
+    mlp_kind="swiglu",
+    rope_theta=1_000_000.0,
+    norm_kind="rmsnorm",
+    supports_long_context=False,
+)

@@ -1,0 +1,615 @@
+"""Temporal Graph Index (paper §4): build + retrieval.
+
+Index anatomy per timespan (all stored in the DeltaStore under
+``{tsid, sid, did, pid}`` keys, placement-keyed by ``(tsid, sid)``):
+
+* ``E:<bucket>``            partitioned micro-eventlists (paper §4.3a) —
+                            event columns, replicated to both endpoints'
+                            shards, carrying a pid column for micro reads;
+* ``S:<level>:<idx>``       the derived-partitioned-snapshot hierarchy
+                            (§4.3b): leaf idx at level 0 = checkpoint
+                            state diffs vs. their parent; one root per
+                            span stored fully; parents are intersections
+                            and are NOT stored (paper Fig. 3a);
+* ``X:<bucket>``            auxiliary 1-hop replication micro-deltas
+                            (§4.5, Fig. 5d) when enabled — read only by
+                            neighborhood queries;
+* version chains + slot maps + span table: index metadata (``META``).
+
+Retrieval implements Algorithms 1-5.  Fetch cost accounting (deltas
+fetched, bytes) is recorded per query for the Table-1 benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import partition as part_mod
+from repro.core.delta import SENTINEL, Delta, delta_difference, delta_intersection
+from repro.core.events import EventLog
+from repro.core.slots import SlotMap
+from repro.core.snapshot import (
+    GraphState,
+    delta_to_graph,
+    events_to_delta,
+    overlay_fold,
+)
+from repro.core.timespan import TimeSpan, span_for_time, split_timespans
+from repro.core.version_chain import VersionChains
+from repro.storage.kvstore import DeltaKey, DeltaStore
+
+
+@dataclasses.dataclass
+class TGIConfig:
+    n_shards: int = 4  # horizontal partitions (sid) — placement width
+    parts_per_shard: int = 4  # micro-delta partitions per shard (pid)
+    events_per_span: int = 4096  # timespan length (in events)
+    eventlist_size: int = 256  # micro-eventlist bucket size l
+    checkpoints_per_span: int = 4  # leaves of the derived hierarchy (r)
+    n_attrs: int = 4  # node-attribute slots K
+    partition_strategy: str = "hash"  # hash | locality
+    omega: str = "union_max"  # time-collapse for locality partitioning
+    replicate_1hop: bool = False  # auxiliary edge-cut replication
+    pad_multiple: int = 128
+
+    @property
+    def n_parts(self) -> int:
+        return self.n_shards * self.parts_per_shard
+
+
+@dataclasses.dataclass
+class SpanIndex:
+    span: TimeSpan
+    smap: SlotMap
+    checkpoint_ts: List[int]  # state times of hierarchy leaves
+    bucket_bounds: List[Tuple[int, int]]  # event-index ranges per bucket
+
+
+@dataclasses.dataclass
+class FetchCost:
+    n_deltas: int = 0
+    n_bytes: int = 0
+    sum_cardinality: int = 0
+
+    def add(self, n=1, b=0, card=0):
+        self.n_deltas += n
+        self.n_bytes += b
+        self.sum_cardinality += card
+
+
+class TGI:
+    """Build with ``TGI.build(events, cfg, store)``; query with
+    get_snapshot / get_node_history / get_k_hop / get_node_1hop_history."""
+
+    def __init__(self, cfg: TGIConfig, store: DeltaStore):
+        self.cfg = cfg
+        self.store = store
+        self.spans: List[SpanIndex] = []
+        self.vc: Optional[VersionChains] = None
+        self.n_nodes = 0
+        self.last_cost = FetchCost()
+
+    # ------------------------------------------------------------------
+    # Construction (paper §4.4 'Construction and Update')
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def build(cls, events: EventLog, cfg: TGIConfig, store: DeltaStore) -> "TGI":
+        tgi = cls(cfg, store)
+        tgi._build_from(events, GraphState.empty(events.n_nodes, cfg.n_attrs))
+        return tgi
+
+    def _build_from(self, events: EventLog, state: GraphState):
+        cfg = self.cfg
+        spans = split_timespans(events, cfg.events_per_span)
+        self.n_nodes = max(events.n_nodes, len(state.present))
+        span_of_event = np.zeros(len(events), np.int32)
+        bucket_of_event = np.zeros(len(events), np.int32)
+
+        for sp in spans:
+            ev_span = events.take(slice(sp.ev_lo, sp.ev_hi))
+            span_of_event[sp.ev_lo : sp.ev_hi] = sp.tsid
+            # nodes live in this span = existing state nodes + touched
+            touched = np.unique(np.concatenate([
+                ev_span.src, ev_span.dst[ev_span.dst >= 0],
+                state.node_ids(),
+            ])) if len(ev_span) else state.node_ids()
+            touched = touched[touched >= 0]
+            assignment = None
+            if cfg.partition_strategy == "locality" and len(ev_span):
+                nids_l, assignment = part_mod.partition_timespan(
+                    ev_span, cfg.n_parts, "locality", cfg.omega, seed=sp.tsid
+                )
+                # locality assigns only touched-by-edges; extend w/ hash
+                if len(nids_l) < len(touched):
+                    from repro.core.slots import hash32
+
+                    assign_full = (hash32(touched) % np.uint32(cfg.n_parts)).astype(np.int32)
+                    pos = np.searchsorted(touched, nids_l)
+                    assign_full[pos] = assignment
+                    assignment = assign_full
+            smap = SlotMap.build(touched, cfg.n_parts, assignment, cfg.pad_multiple)
+
+            # --- buckets + checkpoints ---
+            n_ev = sp.ev_hi - sp.ev_lo
+            n_buckets = max(math.ceil(n_ev / cfg.eventlist_size), 1)
+            ckpt_every = max(math.ceil(n_buckets / cfg.checkpoints_per_span), 1)
+            checkpoint_ts: List[int] = []
+            bucket_bounds: List[Tuple[int, int]] = []
+            leaves: List[Delta] = []
+            leaf_graphs: List[GraphState] = []
+
+            # leaf 0: state at span start
+            checkpoint_ts.append(sp.t_start - 1)
+            leaves.append(state.to_delta(smap, cfg.n_attrs))
+            leaf_graphs.append(state.copy())
+
+            for b in range(n_buckets):
+                lo = sp.ev_lo + b * cfg.eventlist_size
+                hi = min(sp.ev_lo + (b + 1) * cfg.eventlist_size, sp.ev_hi)
+                bucket_bounds.append((lo, hi))
+                bucket_of_event[lo:hi] = b
+                ev_b = events.take(slice(lo, hi))
+                self._store_eventlist(sp.tsid, b, ev_b, smap)
+                state.apply_bucket(ev_b)
+                # checkpoints only at bucket boundaries that don't split a
+                # timestamp — otherwise later same-t events would be in
+                # neither the checkpoint nor the (t > t_ck) replay filter
+                if ((b + 1) % ckpt_every == 0 and b + 1 < n_buckets
+                        and events.t[hi - 1] != events.t[hi]):
+                    checkpoint_ts.append(int(events.t[hi - 1]))
+                    leaves.append(state.to_delta(smap, cfg.n_attrs))
+                    leaf_graphs.append(state.copy())
+
+            self._store_hierarchy(sp.tsid, leaves, smap)
+            if cfg.replicate_1hop:
+                self._store_aux_replication(sp.tsid, leaf_graphs[-1], smap)
+            self.spans.append(
+                SpanIndex(span=sp, smap=smap, checkpoint_ts=checkpoint_ts,
+                          bucket_bounds=bucket_bounds)
+            )
+
+        self.vc = VersionChains.build(events, span_of_event, bucket_of_event,
+                                      self.n_nodes)
+        self._final_state = state  # retained for update()
+        self._events = events
+
+    def update(self, new_events: EventLog):
+        """Batch update (paper: 'accepts updates in batches of timespan
+        length'): builds spans for the new events on the running state and
+        merges metadata (an independent-TGI merge specialization)."""
+        assert len(new_events)
+        t_last = self._events.t[-1] if len(self._events) else -(2**62)
+        assert new_events.t[0] >= t_last, "updates must be append-only"
+        base = len(self._events)
+        all_events = self._events.concat(new_events, sort=False)
+        state = self._final_state
+        old_spans = self.spans
+        self.spans = list(old_spans)
+        # rebuild only the new spans
+        spans = split_timespans(new_events, self.cfg.events_per_span)
+        span_of, bucket_of = [], []
+        tsid0 = len(old_spans)
+        cfg = self.cfg
+        for sp in spans:
+            sp2 = TimeSpan(tsid0 + sp.tsid, sp.t_start, sp.t_end,
+                           base + sp.ev_lo, base + sp.ev_hi)
+            ev_span = new_events.take(slice(sp.ev_lo, sp.ev_hi))
+            touched = np.unique(np.concatenate([
+                ev_span.src, ev_span.dst[ev_span.dst >= 0], state.node_ids()
+            ]))
+            touched = touched[touched >= 0]
+            smap = SlotMap.build(touched, cfg.n_parts, None, cfg.pad_multiple)
+            n_ev = sp.ev_hi - sp.ev_lo
+            n_buckets = max(math.ceil(n_ev / cfg.eventlist_size), 1)
+            ckpt_every = max(math.ceil(n_buckets / cfg.checkpoints_per_span), 1)
+            checkpoint_ts = [sp2.t_start - 1]
+            leaves = [state.to_delta(smap, cfg.n_attrs)]
+            bucket_bounds = []
+            for b in range(n_buckets):
+                lo = sp.ev_lo + b * cfg.eventlist_size
+                hi = min(sp.ev_lo + (b + 1) * cfg.eventlist_size, sp.ev_hi)
+                bucket_bounds.append((base + lo, base + hi))
+                ev_b = new_events.take(slice(lo, hi))
+                self._store_eventlist(sp2.tsid, b, ev_b, smap)
+                state.apply_bucket(ev_b)
+                span_of.extend([sp2.tsid] * (hi - lo))
+                bucket_of.extend([b] * (hi - lo))
+                if ((b + 1) % ckpt_every == 0 and b + 1 < n_buckets
+                        and new_events.t[hi - 1] != new_events.t[hi]):
+                    checkpoint_ts.append(int(new_events.t[hi - 1]))
+                    leaves.append(state.to_delta(smap, cfg.n_attrs))
+            self._store_hierarchy(sp2.tsid, leaves, smap)
+            self.spans.append(SpanIndex(sp2, smap, checkpoint_ts, bucket_bounds))
+        self._events = all_events
+        self.n_nodes = max(self.n_nodes, all_events.n_nodes)
+        old_span_of = self.vc  # rebuild VC from scratch (append-merge)
+        full_span_of = np.concatenate([
+            np.repeat(
+                [s.span.tsid for s in old_spans],
+                [s.span.ev_hi - s.span.ev_lo for s in old_spans],
+            ).astype(np.int32) if old_spans else np.empty(0, np.int32),
+            np.asarray(span_of, np.int32),
+        ])
+        full_bucket_of = np.concatenate([
+            self._bucket_of_old(old_spans),
+            np.asarray(bucket_of, np.int32),
+        ])
+        self.vc = VersionChains.build(all_events, full_span_of, full_bucket_of,
+                                      self.n_nodes)
+
+    def _bucket_of_old(self, old_spans) -> np.ndarray:
+        out = []
+        for s in old_spans:
+            for b, (lo, hi) in enumerate(s.bucket_bounds):
+                out.extend([b] * (hi - lo))
+        return np.asarray(out, np.int32)
+
+    # ---- storage helpers ----
+    def _sid_of_pid(self, pid: int) -> int:
+        return pid // self.cfg.parts_per_shard
+
+    def _store_eventlist(self, tsid: int, bucket: int, ev: EventLog, smap: SlotMap):
+        """Partitioned eventlists: events replicated to both endpoints'
+        shards, pid column included for micro-partition filtering."""
+        if not len(ev):
+            return
+        pid_src, _, _ = smap.lookup(ev.src)
+        pid_dst = np.full(len(ev), -1, np.int32)
+        has_dst = ev.dst >= 0
+        if has_dst.any():
+            pid_dst[has_dst] = smap.lookup(ev.dst[has_dst])[0]
+        for sid in range(self.cfg.n_shards):
+            ppl = self.cfg.parts_per_shard
+            in_shard = (pid_src // ppl == sid) | ((pid_dst >= 0) & (pid_dst // ppl == sid))
+            idx = np.nonzero(in_shard)[0]
+            if not len(idx):
+                continue
+            sub = ev.take(idx)
+            arrays = sub.to_dict()
+            arrays["pid"] = pid_src[idx] % ppl
+            self.store.put(DeltaKey(tsid, sid, f"E:{bucket}", 0), arrays)
+
+    def _delta_arrays(self, d: Delta, p: int) -> Dict[str, np.ndarray]:
+        """Micro-delta = one partition slice of a Delta.  Edge runs are
+        keyed by global slot, so partition p's run is a contiguous
+        [p*psize, (p+1)*psize) range of the sorted e_src."""
+        psize = d.valid.shape[1]
+        lo = np.searchsorted(d.e_src, p * psize)
+        hi = np.searchsorted(d.e_src, (p + 1) * psize)
+        return {
+            "valid": d.valid[p],
+            "present": d.present[p],
+            "attrs": d.attrs[p],
+            "e_src": d.e_src[lo:hi],
+            "e_dst": d.e_dst[lo:hi],
+            "e_op": d.e_op[lo:hi],
+            "e_val": d.e_val[lo:hi],
+        }
+
+    def _store_delta(self, tsid: int, did: str, d: Delta):
+        for p in range(self.cfg.n_parts):
+            sid = self._sid_of_pid(p)
+            self.store.put(
+                DeltaKey(tsid, sid, did, p % self.cfg.parts_per_shard),
+                self._delta_arrays(d, p),
+            )
+
+    def _store_hierarchy(self, tsid: int, leaves: List[Delta], smap: SlotMap):
+        """DeltaGraph-style binary intersection tree; store root + all
+        parent->child differences (paper §4.3b)."""
+        level = 0
+        nodes = leaves
+        while len(nodes) > 1:
+            parents = []
+            for i in range(0, len(nodes), 2):
+                if i + 1 < len(nodes):
+                    parent = delta_intersection(nodes[i], nodes[i + 1])
+                    self._store_delta(tsid, f"S:{level}:{i}",
+                                      delta_difference(nodes[i], parent))
+                    self._store_delta(tsid, f"S:{level}:{i+1}",
+                                      delta_difference(nodes[i + 1], parent))
+                else:
+                    # odd tail: node is its own parent; store an empty diff
+                    # so the root->leaf path naming stays uniform
+                    parent = nodes[i]
+                    self._store_delta(tsid, f"S:{level}:{i}",
+                                      delta_difference(nodes[i], nodes[i]))
+                parents.append(parent)
+            nodes = parents
+            level += 1
+        self._store_delta(tsid, f"S:{level}:0", nodes[0])  # root, stored fully
+        self._root_level = level
+
+    def _store_aux_replication(self, tsid: int, g: GraphState, smap: SlotMap):
+        """Aux micro-deltas with 1-hop external neighbors per partition."""
+        src, dst, val = g.edges()
+        pid_s, _, _ = smap.lookup(src)
+        pid_d, _, _ = smap.lookup(dst)
+        cut = pid_s != pid_d
+        for p in range(self.cfg.n_parts):
+            sel = cut & ((pid_s == p) | (pid_d == p))
+            if not sel.any():
+                continue
+            self.store.put(
+                DeltaKey(tsid, self._sid_of_pid(p), "X:0", p % self.cfg.parts_per_shard),
+                {"src": src[sel], "dst": dst[sel], "val": val[sel]},
+            )
+
+    # ------------------------------------------------------------------
+    # Retrieval
+    # ------------------------------------------------------------------
+
+    def _span_index(self, t: int) -> SpanIndex:
+        for si in reversed(self.spans):
+            if t >= si.span.t_start:
+                return si
+        return self.spans[0]
+
+    def _hierarchy_path(self, si: SpanIndex, leaf: int) -> List[str]:
+        """did names root->leaf for a given leaf index."""
+        n_leaves = len(si.checkpoint_ts)
+        # reconstruct the tree shape
+        names = []
+        level = 0
+        idx = leaf
+        width = n_leaves
+        while width > 1:
+            names.append(f"S:{level}:{idx}")
+            idx //= 2
+            width = (width + 1) // 2
+            level += 1
+        names.append(f"S:{level}:0")
+        return list(reversed(names))
+
+    def _fetch_delta(self, tsid: int, did: str, pids: Optional[Sequence[int]],
+                     si: SpanIndex, c: int = 1) -> Delta:
+        cfg = self.cfg
+        pids = list(range(cfg.n_parts)) if pids is None else list(pids)
+        keys = [
+            DeltaKey(tsid, self._sid_of_pid(p), did, p % cfg.parts_per_shard)
+            for p in pids
+        ]
+        got = self.store.multiget(keys, c=c)
+        psize = si.smap.psize
+        d = Delta.empty(cfg.n_parts, psize, cfg.n_attrs, ecap=1)
+        e_parts = []
+        for p, k in zip(pids, keys):
+            a = got[k]
+            d.valid[p] = a["valid"]
+            d.present[p] = a["present"]
+            d.attrs[p] = a["attrs"]
+            ne = int((a["e_src"] != SENTINEL).sum())
+            e_parts.append((a["e_src"][:ne], a["e_dst"][:ne], a["e_op"][:ne], a["e_val"][:ne]))
+            self.last_cost.add(1, sum(x.nbytes for x in a.values()),
+                               int(a["valid"].sum()) + ne)
+        if e_parts:
+            d.e_src = np.concatenate([e[0] for e in e_parts])
+            d.e_dst = np.concatenate([e[1] for e in e_parts])
+            d.e_op = np.concatenate([e[2] for e in e_parts])
+            d.e_val = np.concatenate([e[3] for e in e_parts])
+            if len(d.e_src) == 0:
+                d.e_src = np.full(1, SENTINEL, np.int32)
+                d.e_dst = np.full(1, SENTINEL, np.int32)
+                d.e_op = np.zeros(1, np.int8)
+                d.e_val = np.full(1, -1, np.int32)
+        return d
+
+    def _fetch_eventlists(self, si: SpanIndex, b_lo: int, b_hi: int,
+                          c: int = 1) -> EventLog:
+        """Micro-eventlists for buckets [b_lo, b_hi) across all shards."""
+        keys = []
+        for b in range(b_lo, b_hi):
+            for sid in range(self.cfg.n_shards):
+                keys.append(DeltaKey(si.span.tsid, sid, f"E:{b}", 0))
+        out = EventLog.empty()
+        got = {}
+        ok_keys = []
+        for k in keys:
+            try:
+                got[k] = self.store.get(k)
+                ok_keys.append(k)
+            except KeyError:
+                continue
+        logs = []
+        for k in ok_keys:
+            a = got[k]
+            self.last_cost.add(1, sum(x.nbytes for x in a.values()), len(a["t"]))
+            logs.append(a)
+        if not logs:
+            return out
+        cat = {c2: np.concatenate([l[c2] for l in logs]) for c2 in
+               ("t", "kind", "src", "dst", "key", "val")}
+        ev = EventLog(**cat)
+        # events were replicated across shards: dedup identical rows
+        rows = np.stack([ev.t, ev.kind.astype(np.int64), ev.src.astype(np.int64),
+                         ev.dst.astype(np.int64), ev.key.astype(np.int64),
+                         ev.val.astype(np.int64)], 1)
+        _, uniq = np.unique(rows, axis=0, return_index=True)
+        ev = ev.take(np.sort(uniq))
+        return ev.take(np.argsort(ev.t, kind="stable"))
+
+    def get_snapshot(self, t: int, c: int = 1, pids: Optional[Sequence[int]] = None,
+                     use_kernel: bool = False) -> GraphState:
+        """Algorithm 1.  pids restricts to a partition subset (used by the
+        k-hop and partition-parallel TAF fetch paths)."""
+        self.last_cost = FetchCost()
+        si = self._span_index(t)
+        # nearest checkpoint at or before t
+        leaf = max(
+            i for i, ct in enumerate(si.checkpoint_ts) if ct <= t
+        ) if any(ct <= t for ct in si.checkpoint_ts) else 0
+        path = self._hierarchy_path(si, leaf)
+        deltas = [self._fetch_delta(si.span.tsid, did, pids, si, c) for did in path]
+        state = overlay_fold(deltas, use_kernel=use_kernel)
+        # replay eventlists from checkpoint to t
+        t_ck = si.checkpoint_ts[leaf]
+        ev_buckets = [
+            b for b, (lo, hi) in enumerate(si.bucket_bounds)
+            if hi > lo and self._events.t[lo] <= t and self._events.t[hi - 1] > t_ck
+        ]
+        if ev_buckets:
+            ev = self._fetch_eventlists(si, min(ev_buckets), max(ev_buckets) + 1, c)
+            ev = ev.take(np.nonzero((ev.t > t_ck) & (ev.t <= t))[0])
+            if pids is not None:
+                # keep events with EITHER endpoint in the fetched pids —
+                # a deletion whose src lives elsewhere must still clear
+                # the mirrored copy, or the edge resurrects
+                pid_s, _, found_s = si.smap.lookup(ev.src)
+                keep = found_s & np.isin(pid_s, np.asarray(pids))
+                has_dst = ev.dst >= 0
+                if has_dst.any():
+                    pid_d, _, found_d = si.smap.lookup(ev.dst)
+                    keep |= has_dst & found_d & np.isin(pid_d, np.asarray(pids))
+                ev = ev.take(np.nonzero(keep)[0])
+            if len(ev):
+                state = overlay_fold(
+                    [state, events_to_delta(ev, si.smap, self.cfg.n_attrs)],
+                    use_kernel=use_kernel,
+                )
+        if pids is not None:
+            # materialize only the fetched partitions: unfetched ones hold
+            # partial (event-only) state and must not leak into the result
+            mask = np.zeros(self.cfg.n_parts, bool)
+            mask[np.asarray(pids)] = True
+            state.valid &= mask[:, None]
+            psize = si.smap.psize
+            e_pid = (state.e_src.astype(np.int64) // psize)
+            bad = (state.e_src != SENTINEL) & ~mask[np.clip(e_pid, 0, self.cfg.n_parts - 1)]
+            keep = ~bad  # keeps trailing SENTINEL pads -> prefix invariant holds
+            state.e_src = state.e_src[keep]
+            state.e_dst = state.e_dst[keep]
+            state.e_op = state.e_op[keep]
+            state.e_val = state.e_val[keep]
+        return delta_to_graph(state, si.smap)
+
+    def get_node_history(self, nid: int, t0: int, t1: int, c: int = 1):
+        """Algorithm 2: (initial state at t0, EventLog of changes (t0,t1])."""
+        self.last_cost = FetchCost()
+        si = self._span_index(t0)
+        pid, slot, found = si.smap.lookup(np.asarray([nid]))
+        init = None
+        if found[0]:
+            snap = self.get_snapshot(t0, c=c, pids=[int(pid[0])])
+            if nid < len(snap.present) and snap.present[nid]:
+                init = {
+                    "present": 1,
+                    "attrs": snap.attrs[nid].copy(),
+                    "neighbors": self._neighbors_of(snap, nid),
+                }
+        ts, tsids, buckets = self.vc.get(nid, t0, t1)
+        ev = EventLog.empty()
+        for tsid in np.unique(tsids):
+            si2 = self.spans[int(tsid)]
+            bks = np.unique(buckets[tsids == tsid])
+            got = self._fetch_eventlists(si2, int(bks.min()), int(bks.max()) + 1, c)
+            ev = ev.concat(got, sort=False)
+        ev = ev.take(np.argsort(ev.t, kind="stable"))
+        sel = ((ev.src == nid) | (ev.dst == nid)) & (ev.t > t0) & (ev.t <= t1)
+        return init, ev.take(np.nonzero(sel)[0])
+
+    def _neighbors_of(self, g: GraphState, nid: int) -> np.ndarray:
+        src, dst, _ = g.edges()
+        return np.unique(np.concatenate([dst[src == nid], src[dst == nid]]))
+
+    def get_k_hop(self, nid: int, t: int, k: int, c: int = 1,
+                  method: str = "auto") -> GraphState:
+        """Algorithms 3/4.  'snapshot' filters a full snapshot; 'expand'
+        fetches partitions on demand (wins for k<=2, per the paper)."""
+        if method == "auto":
+            method = "expand" if k <= 2 else "snapshot"
+        if method == "snapshot":
+            g = self.get_snapshot(t, c=c)
+            return self._filter_k_hop(g, nid, k)
+        # expand: fetch the node's partition, then neighbors' partitions
+        self.last_cost = FetchCost()
+        si = self._span_index(t)
+        frontier = np.asarray([nid], np.int32)
+        fetched_pids: set = set()
+        g_acc: Optional[GraphState] = None
+        nodes_seen = set([int(nid)])
+        for _ in range(k + 1):
+            pid, _, found = si.smap.lookup(frontier)
+            need = sorted(set(int(p) for p in pid[found]) - fetched_pids)
+            if need:
+                g_new = self.get_snapshot(t, c=c, pids=need)
+                fetched_pids |= set(need)
+                g_acc = g_new if g_acc is None else _merge_states(g_acc, g_new)
+            if g_acc is None:
+                break
+            nxt = []
+            src, dst, _ = g_acc.edges()
+            for n in frontier:
+                nxt.append(dst[src == n])
+                nxt.append(src[dst == n])
+            nxt = np.unique(np.concatenate(nxt)) if nxt else np.empty(0, np.int32)
+            frontier = np.asarray([x for x in nxt if int(x) not in nodes_seen], np.int32)
+            nodes_seen |= set(int(x) for x in nxt)
+            if not len(frontier):
+                break
+        return self._filter_k_hop(g_acc if g_acc is not None else
+                                  GraphState.empty(self.n_nodes, self.cfg.n_attrs), nid, k)
+
+    def _filter_k_hop(self, g: GraphState, nid: int, k: int) -> GraphState:
+        keep = {int(nid)}
+        frontier = {int(nid)}
+        src, dst, _ = g.edges()
+        for _ in range(k):
+            nxt = set()
+            for n in frontier:
+                nxt |= set(dst[src == n].tolist())
+                nxt |= set(src[dst == n].tolist())
+            nxt -= keep
+            keep |= nxt
+            frontier = nxt
+        out = GraphState.empty(len(g.present), g.attrs.shape[1])
+        ids = np.asarray(sorted(keep), np.int64)
+        ids = ids[ids < len(g.present)]
+        out.present[ids] = g.present[ids]
+        out.attrs[ids] = g.attrs[ids]
+        m = np.isin(src, ids) & np.isin(dst, ids)
+        key = src[m].astype(np.int64) * (2**31) + dst[m].astype(np.int64)
+        order = np.argsort(key)
+        out.edge_key = key[order]
+        out.edge_val = g.edge_val[m][order] if len(g.edge_val) else np.empty(0, np.int32)
+        return out
+
+    def get_node_1hop_history(self, nid: int, t0: int, t1: int, c: int = 1):
+        """Algorithm 5: initial 1-hop state + per-neighbor change events."""
+        init, ev = self.get_node_history(nid, t0, t1, c=c)
+        hood = self.get_k_hop(nid, t0, 1, c=c)
+        neigh_ids = hood.node_ids()
+        neigh_events = {}
+        for m in neigh_ids:
+            if int(m) == int(nid):
+                continue
+            _, ev_m = self.get_node_history(int(m), t0, t1, c=c)
+            neigh_events[int(m)] = ev_m
+        return {"center_init": init, "center_events": ev,
+                "hood": hood, "neighbor_events": neigh_events}
+
+    # ---- stats ----
+    def index_size_bytes(self) -> int:
+        return self.store.stats.bytes_written
+
+
+def _merge_states(a: GraphState, b: GraphState) -> GraphState:
+    n = max(len(a.present), len(b.present))
+    a.grow(n)
+    b.grow(n)
+    out = GraphState.empty(n, a.attrs.shape[1])
+    on_b = b.present == 1
+    out.present = np.where(on_b, b.present, a.present)
+    out.attrs = np.where(on_b[:, None], b.attrs, a.attrs)
+    keys = np.concatenate([a.edge_key, b.edge_key])
+    vals = np.concatenate([a.edge_val, b.edge_val])
+    order = np.argsort(keys, kind="stable")
+    keys, vals = keys[order], vals[order]
+    keep = np.ones(len(keys), bool)
+    if len(keys) > 1:
+        keep[1:] = keys[1:] != keys[:-1]
+    out.edge_key, out.edge_val = keys[keep], vals[keep]
+    return out

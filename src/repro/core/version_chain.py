@@ -1,0 +1,62 @@
+"""Version chains (paper §4.3c): per-node chronological pointers into the
+delta sets — CSR arrays over the node-id space, keyed by (t, tsid,
+eventlist bucket).  This is the entity-centric index leg that gives TGI
+its |V|+1-fetch node-history cost (Table 1)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core.events import EventLog
+
+
+@dataclasses.dataclass
+class VersionChains:
+    indptr: np.ndarray  # (N+1,) int64
+    t: np.ndarray  # (R,) int64 — event time
+    tsid: np.ndarray  # (R,) int32 — timespan of the reference
+    bucket: np.ndarray  # (R,) int32 — micro-eventlist bucket within span
+
+    @classmethod
+    def build(cls, events: EventLog, span_of_event: np.ndarray,
+              bucket_of_event: np.ndarray, n_nodes: int) -> "VersionChains":
+        """span_of_event / bucket_of_event: per-event placement, aligned
+        with the (chronologically sorted) global log."""
+        src = events.src
+        dst = events.dst
+        # each event references its src node, and its dst node for edges
+        has_dst = dst >= 0
+        nid = np.concatenate([src, dst[has_dst]])
+        t = np.concatenate([events.t, events.t[has_dst]])
+        ts = np.concatenate([span_of_event, span_of_event[has_dst]])
+        bk = np.concatenate([bucket_of_event, bucket_of_event[has_dst]])
+        order = np.lexsort((t, nid))
+        nid, t, ts, bk = nid[order], t[order], ts[order], bk[order]
+        indptr = np.searchsorted(nid, np.arange(n_nodes + 1))
+        return cls(indptr=indptr.astype(np.int64), t=t.astype(np.int64),
+                   tsid=ts.astype(np.int32), bucket=bk.astype(np.int32))
+
+    def get(self, nid: int, t0=None, t1=None):
+        """References for node nid with t in (t0, t1] (paper Alg. 2 l.2-3)."""
+        lo, hi = int(self.indptr[nid]), int(self.indptr[nid + 1])
+        t = self.t[lo:hi]
+        sel = np.ones(hi - lo, bool)
+        if t0 is not None:
+            sel &= t > t0
+        if t1 is not None:
+            sel &= t <= t1
+        idx = np.nonzero(sel)[0] + lo
+        return self.t[idx], self.tsid[idx], self.bucket[idx]
+
+    def n_versions(self, nid: int) -> int:
+        return int(self.indptr[nid + 1] - self.indptr[nid])
+
+    def to_arrays(self):
+        return {"indptr": self.indptr, "t": self.t, "tsid": self.tsid,
+                "bucket": self.bucket}
+
+    @classmethod
+    def from_arrays(cls, d):
+        return cls(d["indptr"], d["t"], d["tsid"], d["bucket"])

@@ -1,0 +1,42 @@
+"""Jit'd wrapper for the delta_overlay kernel: padding, dtype handling,
+interpret-mode fallback (CPU container) / native lowering (TPU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.delta_overlay import ref
+from repro.kernels.delta_overlay.delta_overlay import TILE_S, overlay_pallas
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:
+        return False
+
+
+def overlay(valid, present, attrs, use_pallas: bool = True):
+    """Fold stacked deltas (h, P, S[, K]) -> (P, S[, K]).
+
+    Accepts numpy or jnp; bool valid is cast to int8 for the kernel.
+    """
+    valid = jnp.asarray(valid)
+    present = jnp.asarray(present)
+    attrs = jnp.asarray(attrs)
+    v8 = valid.astype(jnp.int8)
+    if not use_pallas:
+        return ref.overlay_ref(valid, present, attrs)
+    S = valid.shape[-1]
+    pad = (-S) % TILE_S
+    if pad:
+        v8 = jnp.pad(v8, ((0, 0), (0, 0), (0, pad)))
+        present = jnp.pad(present, ((0, 0), (0, 0), (0, pad)))
+        attrs = jnp.pad(attrs, ((0, 0), (0, 0), (0, pad), (0, 0)), constant_values=-1)
+    out_v, out_p, out_a = overlay_pallas(
+        v8, present, attrs, interpret=not _on_tpu()
+    )
+    if pad:
+        out_v, out_p, out_a = out_v[:, :S], out_p[:, :S], out_a[:, :S]
+    return out_v.astype(valid.dtype) != 0, out_p, out_a

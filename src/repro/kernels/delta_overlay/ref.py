@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the delta_overlay kernel: sequential last-writer-
+wins fold over a stacked delta chain (node payload of Algorithm 1's
+Σ Δ_si + Σ Δ_ei).  Semantics mirror repro.core.delta._node_sum exactly,
+including the per-step attribute clear on deletion."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def overlay_ref(valid, present, attrs):
+    """valid: (h, P, S) int8/bool; present: (h, P, S) int8;
+    attrs: (h, P, S, K) int32.  Returns folded (valid, present, attrs)."""
+    acc_v = valid[0].astype(jnp.bool_)
+    acc_p = present[0]
+    acc_a = attrs[0]
+    for i in range(1, valid.shape[0]):
+        vi = valid[i].astype(jnp.bool_)
+        acc_p = jnp.where(vi, present[i], acc_p)
+        ai = attrs[i]
+        acc_a = jnp.where(vi[..., None] & (ai != -1), ai, acc_a)
+        acc_a = jnp.where((acc_p == 0)[..., None], -1, acc_a)
+        acc_v = acc_v | vi
+    return acc_v, acc_p, acc_a

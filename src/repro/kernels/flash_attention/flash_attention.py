@@ -1,0 +1,103 @@
+"""Pallas TPU flash attention (GQA-ready: callers expand KV heads).
+
+Online-softmax attention with KV tiling: grid (B, H, nq, nk), the last
+axis sequential ('arbitrary') carrying (m, l, acc) in VMEM scratch.
+Causal and sliding-window masks are composed from position blocks, so
+ring-buffer caches (k_pos with -1 holes) work unchanged.
+
+BlockSpecs: q (1,1,BQ,D), k/v (1,1,BK,D), positions (BQ,1)/(BK,1) int32 —
+D and BQ/BK multiples of the (8,128) TPU tile.  Validated in interpret
+mode against ref.attention_ref; lowers natively on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _fa_kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref, o_ref,
+               m_ref, l_ref, acc_ref, *, scale, causal, window, nk):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (BQ, D)
+    k = k_ref[0, 0].astype(jnp.float32)  # (BK, D)
+    v = v_ref[0, 0].astype(jnp.float32)
+    qpos = qpos_ref[:, 0]  # (BQ,)
+    kpos = kpos_ref[:, 0]  # (BK,)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (BQ, BK)
+    ok = (kpos >= 0)[None, :]
+    if causal:
+        ok = ok & (kpos[None, :] <= qpos[:, None])
+    if window > 0:
+        ok = ok & (kpos[None, :] > (qpos[:, None] - window))
+    s = jnp.where(ok, s, NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(ok, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _done():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, q_pos, k_pos, *, causal=True, window=0,
+                           blk_q=128, blk_k=128, interpret=True):
+    """q: (B,H,Sq,D); k,v: (B,H,Sk,D); q_pos (Sq,), k_pos (Sk,).
+    Shapes must be pre-padded to block multiples (ops.py does this)."""
+    B, H, Sq, D = q.shape
+    Sk = k.shape[2]
+    assert Sq % blk_q == 0 and Sk % blk_k == 0, (Sq, Sk)
+    nq, nk = Sq // blk_q, Sk // blk_k
+    scale = D**-0.5
+    grid = (B, H, nq, nk)
+
+    qpos2 = q_pos.astype(jnp.int32).reshape(Sq, 1)
+    kpos2 = k_pos.astype(jnp.int32).reshape(Sk, 1)
+
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, window=window, nk=nk
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk_q, 1), lambda b, h, iq, ik: (iq, 0)),
+            pl.BlockSpec((blk_k, 1), lambda b, h, iq, ik: (ik, 0)),
+            pl.BlockSpec((1, 1, blk_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, blk_k, D), lambda b, h, iq, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, blk_k, D), lambda b, h, iq, ik: (b, h, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, blk_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, 1), jnp.float32),  # m (running max)
+            pltpu.VMEM((blk_q, 1), jnp.float32),  # l (running denom)
+            pltpu.VMEM((blk_q, D), jnp.float32),  # acc
+        ],
+        interpret=interpret,
+    )(qpos2, kpos2, q, k, v)
+    return out

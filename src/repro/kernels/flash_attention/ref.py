@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the flash_attention kernel: naive masked softmax
+(materializes the full score matrix — small test shapes only)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def attention_ref(q, k, v, q_pos, k_pos, *, causal=True, window=0, scale=None):
+    """q: (B,H,Sq,D); k,v: (B,H,Sk,D); q_pos: (Sq,); k_pos: (Sk,) (-1 pad).
+    Returns (B,H,Sq,D) f32."""
+    D = q.shape[-1]
+    scale = scale or D**-0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    ok = k_pos[None, :] >= 0
+    if causal:
+        ok = ok & (k_pos[None, :] <= q_pos[:, None])
+    if window > 0:
+        ok = ok & (k_pos[None, :] > (q_pos[:, None] - window))
+    s = jnp.where(ok[None, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows (padded queries): zero output
+    any_ok = ok.any(axis=-1)[None, None, :, None]
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return jnp.where(any_ok, out, 0.0)

@@ -1,0 +1,18 @@
+"""Oracle for the rglru_scan kernel: log-depth associative scan of the
+first-order linear recurrence h_t = exp(log_a_t) * h_{t-1} + b_t."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_ref(log_a, b):
+    """log_a, b: (B, S, W) f32 -> h: (B, S, W) f32."""
+
+    def combine(e1, e2):
+        la1, b1 = e1
+        la2, b2 = e2
+        return la1 + la2, jnp.exp(la2) * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (log_a, b), axis=1)
+    return h

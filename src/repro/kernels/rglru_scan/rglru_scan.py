@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: chunked RG-LRU linear-recurrence scan.
+
+The associative-scan lowering materializes O(log S) intermediate
+(B,S,W) tensors in HBM; the chunked kernel streams (CHUNK, TILE_W) tiles
+through VMEM, carrying the recurrent state h (TILE_W lanes) in scratch
+across the sequential chunk axis — one HBM read of (log_a, b) and one
+write of h, which is the bandwidth floor for this memory-bound op.
+
+Grid (B, W//TILE_W, S//CHUNK): last axis sequential (carries state).
+Within a chunk the recurrence is a static unrolled loop over CHUNK steps
+of (TILE_W,)-lane vector ops — sequential in time, parallel across lanes,
+exactly the TPU-native shape of a depthwise recurrence.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+CHUNK = 64
+TILE_W = 128
+
+
+def _rglru_kernel(la_ref, b_ref, o_ref, h_ref, *, chunk):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    h = h_ref[...]  # (1, TILE_W)
+    la = la_ref[0]  # (chunk, TILE_W)
+    bb = b_ref[0]
+    out = jnp.zeros_like(bb)
+    for t in range(chunk):  # static unroll; vectorized over TILE_W lanes
+        h = jnp.exp(la[t : t + 1]) * h + bb[t : t + 1]
+        out = jax.lax.dynamic_update_slice(out, h, (t, 0))
+    o_ref[0] = out
+    h_ref[...] = h
+
+
+def rglru_pallas(log_a, b, *, chunk=CHUNK, tile_w=TILE_W, interpret=True):
+    """log_a, b: (B, S, W) f32, S % chunk == 0, W % tile_w == 0."""
+    B, S, W = log_a.shape
+    assert S % chunk == 0 and W % tile_w == 0, (S, W)
+    grid = (B, W // tile_w, S // chunk)
+    spec = pl.BlockSpec((1, chunk, tile_w), lambda bdim, w, c: (bdim, c, w))
+    return pl.pallas_call(
+        functools.partial(_rglru_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((B, S, W), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, tile_w), jnp.float32)],
+        interpret=interpret,
+    )(log_a, b)

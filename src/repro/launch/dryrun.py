@@ -1,0 +1,383 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS_EXTRA", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first — jax locks the device count on first
+init, and the production meshes need 512 placeholder CPU devices.  Do NOT
+export this flag globally: smoke tests and benches see 1 device.
+
+Per cell this script:
+  1. builds the production mesh (16x16 or 2x16x16),
+  2. constructs abstract params / optimizer / batch / cache specs
+     (ShapeDtypeStruct — nothing is allocated),
+  3. jits the train_step / prefill_step / serve_step with explicit
+     in/out shardings + donation,
+  4. .lower().compile()s, printing memory_analysis() and cost_analysis(),
+  5. parses collective traffic from the compiled HLO and writes one JSON
+     artifact under experiments/dryrun/ for the roofline table.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--skip-existing]
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch import specs as specs_mod
+from repro.models.sharding import (
+    LONG_CONTEXT_OVERRIDES,
+    Sharder,
+    make_rules,
+    split_tree,
+)
+from repro.optim import adamw
+from repro.roofline import compute_roofline, model_flops, summarize_collectives
+from repro.roofline import analytic
+from repro.train import make_prefill_step, make_serve_step, make_train_step
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+# XLA's cost analysis counts while-loop bodies ONCE, so the scanned
+# compile under-reports flops/bytes/collectives by ~n_units.  The cost
+# PROBE compiles 1-unit and 2-unit UNROLLED variants (direct attention, no
+# inner scans) and extrapolates linearly: total = c1 + (n_units-1)*(c2-c1).
+# Exact for per-layer-linear costs; the sLSTM per-timestep scan is added
+# analytically (see repro.roofline.analytic).
+
+
+def cell_supported(cfg, shape) -> (bool, str):
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, (
+            "pure full-attention arch: 500k-token decode has no sub-quadratic "
+            "path (unbounded KV); skipped per DESIGN.md §Arch-applicability"
+        )
+    return True, ""
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, extra_rules=None,
+               cfg_overrides=None, skip_masked_blocks: bool = False):
+    """Lower+compile one cell; returns the result record dict."""
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    shape = SHAPES[shape_name]
+    ok, reason = cell_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "SKIP", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    model_axis = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    overrides = dict(LONG_CONTEXT_OVERRIDES) if shape_name == "long_500k" else {}
+    if extra_rules:
+        overrides.update(extra_rules)
+    rules = make_rules(**overrides)
+    shd = Sharder(mesh=mesh, rules=rules)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        params_pl = specs_mod.abstract_params(cfg, max_seq=shape.seq_len)
+        params_sds, axes = split_tree(params_pl)
+        p_sh = shd.tree_shardings(params_sds, axes)
+        opt_sds = specs_mod.abstract_opt_state(params_sds)
+        o_sh = specs_mod.opt_state_shardings(p_sh, mesh)
+        bspecs = specs_mod.batch_specs(cfg, shape)
+        b_sh = specs_mod.batch_shardings(bspecs, shd)
+        step = make_train_step(cfg, shd, skip_masked_blocks=skip_masked_blocks)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, None),
+            donate_argnums=(0, 1),
+        )
+        lowered = jitted.lower(params_sds, opt_sds, bspecs)
+        tokens = shape.global_batch * shape.seq_len
+    elif shape.kind == "prefill":
+        scfg = cfg.replace(param_dtype=cfg.dtype)  # serve in bf16
+        params_pl = specs_mod.abstract_params(scfg, max_seq=shape.seq_len)
+        params_sds, axes = split_tree(params_pl)
+        p_sh = shd.tree_shardings(params_sds, axes)
+        bspecs = specs_mod.batch_specs(scfg, shape)
+        b_sh = specs_mod.batch_shardings(bspecs, shd)
+        step = make_prefill_step(scfg, shd, model_axis, cache_len=shape.seq_len)
+        jitted = jax.jit(step, in_shardings=(p_sh, b_sh))
+        lowered = jitted.lower(params_sds, bspecs)
+        cfg = scfg
+        tokens = shape.global_batch * shape.seq_len
+    else:  # decode
+        scfg = cfg.replace(param_dtype=cfg.dtype)
+        params_pl = specs_mod.abstract_params(scfg, max_seq=shape.seq_len)
+        params_sds, axes = split_tree(params_pl)
+        p_sh = shd.tree_shardings(params_sds, axes)
+        cache_pl, tok_sds, pos_sds = specs_mod.decode_specs(scfg, shape, model_axis)
+        cache_sds, cache_axes = split_tree(cache_pl)
+        c_sh = shd.tree_shardings(cache_sds, cache_axes)
+        tok_sh = shd.param_sharding(tok_sds, ("batch", None))
+        pos_sh = shd.param_sharding(pos_sds, ("batch",))
+        step = make_serve_step(scfg, shd)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_sh, c_sh, tok_sh, pos_sh),
+            out_shardings=(None, None, c_sh),
+            donate_argnums=(1,),
+        )
+        lowered = jitted.lower(params_sds, cache_sds, tok_sds, pos_sds)
+        cfg = scfg
+        tokens = shape.global_batch  # one token per sequence
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = summarize_collectives(hlo)
+
+    n_par = specs_mod.n_params(params_sds)
+    n_act = specs_mod.n_active_params(cfg, params_sds)
+    mf = model_flops(shape.kind, n_act, tokens)
+    roof = compute_roofline(cost, coll["wire_bytes"], mf, n_chips)
+
+    rec = {
+        "cfg_overrides": {k: str(v) for k, v in (cfg_overrides or {}).items()},
+        "arch": arch,
+        "shape": shape_name,
+        "multi_pod": multi_pod,
+        "status": "OK",
+        "n_chips": n_chips,
+        "n_params": n_par,
+        "n_active_params": n_act,
+        "tokens_per_step": tokens,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_bytes_est": mem.argument_size_in_bytes
+            + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes
+            - mem.alias_size_in_bytes,
+        },
+        "cost": {k: v for k, v in cost.items() if k in ("flops", "bytes accessed", "transcendentals")},
+        "collectives": coll,
+        "roofline": roof.to_dict(),
+    }
+    return rec
+
+
+def probe_costs(arch, shape_name, multi_pod, extra_rules=None, base_overrides=None,
+                skip_masked_blocks=False):
+    """Linear-extrapolated per-device costs from unrolled 1/2-unit probes."""
+    cfg = get_config(arch)
+    if base_overrides:
+        cfg = cfg.replace(**base_overrides)
+    shape = SHAPES[shape_name]
+    unit, rem = cfg.unit_len, cfg.n_rem_layers
+    n_units = cfg.n_units
+    probe_base = {"scan_layers": False, "attn_impl": "direct"}
+    if base_overrides:
+        probe_base.update(base_overrides)
+
+    def one(k_dec: int, k_enc: int):
+        ov = dict(probe_base, n_layers=k_dec * unit + rem)
+        if cfg.is_encdec:
+            ov["n_enc_layers"] = k_enc
+        rec = lower_cell(arch, shape_name, multi_pod, extra_rules=extra_rules,
+                         cfg_overrides=ov, skip_masked_blocks=skip_masked_blocks)
+        return rec
+
+    r1 = one(1, 1)
+    r2 = one(2, 1)
+    r3 = one(1, 2) if (cfg.is_encdec and cfg.n_enc_layers > 1) else None
+
+    def metric(rec, path):
+        d = rec
+        for p in path:
+            d = d[p]
+        return float(d or 0.0)
+
+    paths = {
+        "flops": ("cost", "flops"),
+        "bytes": ("cost", "bytes accessed"),
+        "wire_bytes": ("collectives", "wire_bytes"),
+        "operand_bytes": ("collectives", "operand_bytes"),
+        "cross_pod_wire_bytes": ("collectives", "cross_pod_wire_bytes"),
+    }
+    out = {}
+    for name, path in paths.items():
+        c1, c2 = metric(r1, path), metric(r2, path)
+        total = c1 + (n_units - 1) * (c2 - c1)
+        if r3 is not None:
+            c3 = metric(r3, path)
+            total += (cfg.n_enc_layers - 1) * (c3 - c1)
+        out[name] = max(total, 0.0)
+        out[f"probe_{name}_1u"] = c1
+        out[f"probe_{name}_2u"] = c2
+    # analytic correction for per-timestep scans the probe cannot see
+    n_chips = 512 if multi_pod else 256
+    corr = analytic.slstm_scan_correction(
+        cfg, shape.global_batch, shape.seq_len if shape.kind != "decode" else 1
+    )
+    out["flops"] += corr / n_chips
+    out["slstm_corr_flops_per_dev"] = corr / n_chips
+    return out
+
+
+def _fix_encdec_probe(cfg):  # placeholder for clarity
+    return cfg
+
+
+def run_cell(arch, shape_name, multi_pod, skip_existing=False, verbose=True, tag="",
+             with_probe=True):
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    mesh_tag = "multipod" if multi_pod else "singlepod"
+    suffix = f"_{tag}" if tag else ""
+    fname = OUT_DIR / f"{arch}__{shape_name}__{mesh_tag}{suffix}.json"
+    if skip_existing and fname.exists():
+        print(f"[skip-existing] {fname.name}")
+        return json.loads(fname.read_text())
+    try:
+        rec = lower_cell(arch, shape_name, multi_pod)
+        shape_kind = SHAPES[shape_name].kind
+        # Cells where the unrolled probe is unnecessary or pathological:
+        #  - decode: per-layer math is simple;
+        #  - mlstm/slstm archs at >4k seq: unrolling the chunk loop (128
+        #    chunks at 32k) explodes compile time — the chunkwise math is
+        #    exactly what the analytic model counts.
+        pattern = get_config(arch).resolved_pattern
+        analytic_only = shape_kind == "decode" or (
+            any(k in ("mlstm", "slstm") for k in pattern)
+            and SHAPES[shape_name].seq_len > 4096
+        )
+        if rec["status"] == "OK" and not multi_pod and analytic_only:
+            # analytic flops/bytes + trip-weighted HLO collectives
+            cfg = get_config(arch)
+            shape = SHAPES[shape_name]
+            an_flops = analytic.step_flops(cfg, shape.kind, shape.global_batch, shape.seq_len)
+            an_bytes = analytic.step_bytes(cfg, shape.kind, shape.global_batch,
+                                           shape.seq_len, chips=rec["n_chips"])
+            rec["analytic"] = {
+                "flops_global": an_flops,
+                "flops_per_dev": an_flops / rec["n_chips"],
+                "bytes_per_dev": an_bytes,
+            }
+            mf = model_flops(shape.kind, rec["n_active_params"], rec["tokens_per_step"])
+            roof = compute_roofline(
+                {"flops": an_flops / rec["n_chips"], "bytes accessed": an_bytes["total"]},
+                rec["collectives"]["wire_bytes"], mf, rec["n_chips"],
+            )
+            rec["roofline"] = roof.to_dict()
+            rec["roofline"]["source"] = "flops=analytic bytes=analytic collectives=weighted-hlo"
+        elif rec["status"] == "OK" and with_probe and not multi_pod:
+            # roofline table is single-pod only; probe there.
+            # Three-source accounting (see EXPERIMENTS.md §Roofline):
+            #   compute   <- unrolled 1u/2u probe extrapolation (exact matmul flops)
+            #   collective<- trip-count-weighted parse of the REAL scanned HLO
+            #   memory    <- itemized analytic HBM model (XLA 'bytes accessed'
+            #                is not TPU-fusion-aware; kept as diagnostic)
+            probe = probe_costs(arch, shape_name, multi_pod)
+            rec["cost_probe"] = probe
+            shape = SHAPES[shape_name]
+            cfg = get_config(arch)
+            an_flops = analytic.step_flops(
+                cfg, shape.kind, shape.global_batch, shape.seq_len
+            )
+            an_bytes = analytic.step_bytes(
+                cfg, shape.kind, shape.global_batch, shape.seq_len,
+                chips=rec["n_chips"],
+            )
+            rec["analytic"] = {
+                "flops_global": an_flops,
+                "flops_per_dev": an_flops / rec["n_chips"],
+                "probe_vs_analytic": (
+                    probe["flops"] / (an_flops / rec["n_chips"])
+                    if an_flops
+                    else 0.0
+                ),
+                "bytes_per_dev": an_bytes,
+            }
+            mf = model_flops(shape.kind, rec["n_active_params"], rec["tokens_per_step"])
+            roof = compute_roofline(
+                {"flops": probe["flops"], "bytes accessed": an_bytes["total"]},
+                rec["collectives"]["wire_bytes"],  # weighted real-HLO parse
+                mf,
+                rec["n_chips"],
+            )
+            rec["roofline"] = roof.to_dict()
+            rec["roofline"]["source"] = (
+                "flops=probe bytes=analytic collectives=weighted-hlo"
+            )
+    except Exception as e:  # a failure here is a sharding bug — record it
+        rec = {
+            "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+            "status": "FAIL", "error": f"{type(e).__name__}: {e}",
+            "traceback": traceback.format_exc()[-4000:],
+        }
+    fname.write_text(json.dumps(rec, indent=2, default=float))
+    if verbose:
+        s = rec["status"]
+        if s == "OK":
+            r = rec["roofline"]
+            print(
+                f"[{s}] {arch} x {shape_name} ({mesh_tag}): "
+                f"compile={rec['compile_s']}s "
+                f"mem/dev={rec['memory']['peak_bytes_est']/2**30:.2f}GiB "
+                f"compute={r['compute_s']*1e3:.2f}ms mem={r['memory_s']*1e3:.2f}ms "
+                f"coll={r['collective_s']*1e3:.2f}ms dom={r['dominant']} "
+                f"useful={r['useful_ratio']:.2f} mfu={r['mfu']:.3f}"
+            )
+        elif s == "SKIP":
+            print(f"[{s}] {arch} x {shape_name} ({mesh_tag}): {rec['reason'][:90]}")
+        else:
+            print(f"[{s}] {arch} x {shape_name} ({mesh_tag}): {rec['error'][:200]}")
+    sys.stdout.flush()
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS), default=None)
+    ap.add_argument("--shape", choices=list(SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--no-probe", action="store_true",
+                    help="compile-check only (skip the unrolled cost probe)")
+    args = ap.parse_args()
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    archs = list(ARCH_IDS) if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+
+    n_fail = 0
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                rec = run_cell(a, s, mp, skip_existing=args.skip_existing,
+                               with_probe=not args.no_probe)
+                n_fail += rec["status"] == "FAIL"
+    if n_fail:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""ShapeDtypeStruct stand-ins for every model input / state tree.
+
+``input_specs(cfg, shape)`` produces exactly what each lowered step
+consumes — weak-type-correct, shardable, and never allocated.  The same
+functions back the dry-run, the benchmarks, and the elastic launcher's
+restore-time shape checks.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import lm
+from repro.models.common import Init
+from repro.models.sharding import Sharder, split_tree
+from repro.optim import adamw
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Training / prefill batch: tokens + labels (+ stub modality inputs)."""
+    B, S = shape.global_batch, shape.seq_len
+    n_img = cfg.n_img_tokens or 0
+    n_txt = S - n_img
+    specs = {"tokens": jax.ShapeDtypeStruct((B, n_txt), jnp.int32)}
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((B, n_txt), jnp.int32)
+    if n_img:
+        specs["img_embeds"] = jax.ShapeDtypeStruct((B, n_img, cfg.d_model), jnp.float32)
+    if cfg.is_encdec:
+        specs["frames"] = jax.ShapeDtypeStruct((B, cfg.enc_seq, cfg.d_model), jnp.float32)
+    return specs
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig, model_axis: int):
+    """(cache_specs ParamLeaf tree, tokens, pos) for one decode step with a
+    cache of shape.seq_len entries."""
+    B, S = shape.global_batch, shape.seq_len
+    ini = Init(rng=jax.random.PRNGKey(0), abstract=True)
+    cache = lm.init_cache(ini, cfg, B, S, model_axis)
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((B,), jnp.int32)
+    return cache, tokens, pos
+
+
+def abstract_params(cfg: ModelConfig, max_seq: int):
+    """ParamLeaf tree of ShapeDtypeStructs (values, axes)."""
+    return lm.init(jax.random.PRNGKey(0), cfg, max_seq=max_seq, abstract=True)
+
+
+def abstract_opt_state(params_sds):
+    return jax.eval_shape(adamw.init, params_sds)
+
+
+def opt_state_shardings(param_shardings, mesh):
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    return {
+        "m": param_shardings,
+        "v": param_shardings,
+        "count": NamedSharding(mesh, PartitionSpec()),
+    }
+
+
+def batch_shardings(specs: Dict[str, jax.ShapeDtypeStruct], shd: Sharder):
+    out = {}
+    for k, v in specs.items():
+        axes = ("batch",) + (None,) * (len(v.shape) - 1)
+        out[k] = shd.param_sharding(v, axes)
+    return out
+
+
+def n_params(params_sds) -> int:
+    import math
+
+    # python ints (jnp.prod overflows int32 on stacked-layer leaves)
+    return sum(math.prod(l.shape) for l in jax.tree.leaves(params_sds))
+
+
+def n_active_params(cfg: ModelConfig, params_sds) -> int:
+    """Active params per token (MoE: top_k of n_experts expert params)."""
+    total = n_params(params_sds)
+    if not cfg.is_moe:
+        return total
+    # expert weights are the (..., E, D, F) tensors under 'ffn'
+    flat = jax.tree_util.tree_flatten_with_path(params_sds)[0]
+    expert_total = 0
+    import math
+
+    for path, leaf in flat:
+        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        if any(n in ("w_gate", "w_up", "w_down") for n in names) and len(leaf.shape) >= 3:
+            expert_total += math.prod(leaf.shape)
+    dense = total - expert_total
+    return dense + expert_total * cfg.top_k // cfg.n_experts

@@ -1,0 +1,21 @@
+from repro.models import lm
+from repro.models.sharding import (
+    DEFAULT_RULES,
+    ParamLeaf,
+    Sharder,
+    make_rules,
+    n_kv_virtual,
+    spec_for,
+    split_tree,
+)
+
+__all__ = [
+    "lm",
+    "DEFAULT_RULES",
+    "ParamLeaf",
+    "Sharder",
+    "make_rules",
+    "n_kv_virtual",
+    "spec_for",
+    "split_tree",
+]

@@ -1,0 +1,462 @@
+"""Attention: GQA/MQA/MHA with full / sliding-window / local masking.
+
+Full-sequence paths (train & prefill) use a two-level blockwise
+online-softmax scan (flash-attention access pattern in pure jnp) so the
+(Sq x Sk) score matrix is never materialized — mandatory for the 32k
+shapes.  On TPU the Pallas kernel in repro.kernels.flash_attention
+replaces the inner loop; the jnp path below is also its oracle's
+structure (see kernels/flash_attention/ref.py for the naive oracle).
+
+The baseline scan visits ALL (q-block, kv-block) pairs and masks — the
+causal/window block-skipping variant (visiting only the valid band) is a
+§Perf hillclimb lever, toggled by ``skip_masked_blocks``.
+
+KV heads are repeated ("virtual KV heads", repro.models.sharding
+.n_kv_virtual) to the smallest count that shards over the model axis and
+divides n_heads; when impossible (qwen2: 28H/4kv), heads stay unsharded
+and the head_dim picks up the model axis via the rule fallback.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import Init, apply_rope, rope_tables, softcap
+from repro.models.sharding import Sharder, n_kv_virtual
+
+NEG = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def init_attention(ini: Init, cfg, cross: bool = False):
+    D, hd = cfg.d_model, cfg.resolved_head_dim
+    H, KV = cfg.n_heads_p, cfg.n_kv_p  # padded (== raw when padding off)
+    p = {
+        "wq": ini.fan_in((D, H, hd), ("embed", "heads", "head_dim"), fan_axes=(0,)),
+        "wk": ini.fan_in((D, KV, hd), ("embed", "kv_heads", "head_dim"), fan_axes=(0,)),
+        "wv": ini.fan_in((D, KV, hd), ("embed", "kv_heads", "head_dim"), fan_axes=(0,)),
+        "wo": ini.fan_in((H, hd, D), ("heads", "head_dim", "embed"), fan_axes=(0, 1)),
+    }
+    if H != cfg.n_heads and not ini.abstract:
+        # zero the padded heads' output rows: function-preserving padding
+        import jax.numpy as _jnp
+
+        mask = _jnp.arange(H)[:, None, None] < cfg.n_heads
+        from repro.models.sharding import ParamLeaf as _PL
+
+        p["wo"] = _PL(p["wo"].value * mask.astype(p["wo"].value.dtype), p["wo"].axes)
+    if cfg.qkv_bias:
+        p["bq"] = ini.zeros((H, hd), ("heads", "head_dim"))
+        p["bk"] = ini.zeros((KV, hd), ("kv_heads", "head_dim"))
+        p["bv"] = ini.zeros((KV, hd), ("kv_heads", "head_dim"))
+        p["bo"] = ini.zeros((D,), ("act_embed",))
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = ini.zeros((hd,), ("head_dim",))
+        p["k_norm"] = ini.zeros((hd,), ("head_dim",))
+    return p
+
+
+def _project_qkv(p, x, kv_x, cfg, shd: Sharder, positions, kv_positions, use_rope):
+    """Returns q (B,Sq,H,hd), k/v (B,Sk,KV,hd) — rope/norm applied."""
+    dt = jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", kv_x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", kv_x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    if cfg.qk_norm and "q_norm" in p:
+        q = common.rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = common.rms_norm(k, p["k_norm"], cfg.norm_eps)
+    # Constrain BEFORE rope: the S-gather (residual stream is seq-sharded)
+    # then moves bf16 projections, not the f32 tensors inside the rope/norm
+    # islands — XLA otherwise hoists the f32 convert above the all-gather
+    # and doubles the wire bytes.  Rope itself is per-position => local.
+    # k/v are NOT constrained on the (pre-expansion) kv-head or head_dim
+    # axes — for kv counts that don't divide the model axis a constraint
+    # here forces an involuntary reshard; the post-expansion constraint in
+    # _expand_kv is the authoritative one.
+    q = shd.act(q, "batch", "seq", "act_heads", "head_dim")
+    k = shd.act(k, "batch", "kv_seq", None, None)
+    v = shd.act(v, "batch", "kv_seq", None, None)
+    if use_rope:
+        sin_q, cos_q = rope_tables(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, sin_q, cos_q)
+        sin_k, cos_k = rope_tables(kv_positions, hd, cfg.rope_theta)
+        k = apply_rope(k, sin_k, cos_k)
+    return q, k, v
+
+
+def _expand_kv(k, v, n_heads: int, shd: Sharder):
+    """Repeat KV heads to n_heads (virtual heads). HF-consecutive grouping:
+    q head h belongs to kv head h // (H // KV)."""
+    kvh = k.shape[2]
+    rep = n_heads // kvh
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    k = shd.act(k, "batch", "kv_seq", "act_heads", "head_dim")
+    v = shd.act(v, "batch", "kv_seq", "act_heads", "head_dim")
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# Blockwise full-sequence attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _pad_to(x, axis, mult):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def blockwise_attention(
+    q,
+    k,
+    v,
+    q_pos,
+    k_pos,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    logit_cap: float = 0.0,
+    blk_q: int = 512,
+    blk_k: int = 1024,
+    skip_masked_blocks: bool = False,
+):
+    """q: (B,Sq,H,hd) k,v: (B,Sk,H,hd) (kv already expanded to H heads).
+    q_pos: (Sq,) int32 absolute positions; k_pos: (Sk,) with -1 = invalid.
+    Returns (B,Sq,H,hd) in q.dtype.
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    out_dt = q.dtype
+    scale = hd**-0.5
+
+    blk_q = min(blk_q, max(Sq, 1))
+    blk_k = min(blk_k, max(Sk, 1))
+    qp = _pad_to(q, 1, blk_q)
+    kp = _pad_to(k, 1, blk_k)
+    vp = _pad_to(v, 1, blk_k)
+    q_pos_p = _pad_to(q_pos.astype(jnp.int32), 0, blk_q)
+    k_pos_p = jnp.pad(
+        k_pos.astype(jnp.int32), (0, (-Sk) % blk_k), constant_values=-1
+    )
+    nq, nk = qp.shape[1] // blk_q, kp.shape[1] // blk_k
+
+    # (n, B, H, blk, hd) layout so scan slices the leading axis
+    qb = qp.reshape(B, nq, blk_q, H, hd).transpose(1, 0, 3, 2, 4)
+    kb = kp.reshape(B, nk, blk_k, H, hd).transpose(1, 0, 3, 2, 4)
+    vb = vp.reshape(B, nk, blk_k, H, hd).transpose(1, 0, 3, 2, 4)
+    qpb = q_pos_p.reshape(nq, blk_q)
+    kpb = k_pos_p.reshape(nk, blk_k)
+
+    def one_pair(acc, q_i, qpos_i, k_j, v_j, kpos_j):
+        m, l, o = acc
+        s = jnp.einsum(
+            "bhqd,bhkd->bhqk", q_i, k_j, preferred_element_type=jnp.float32
+        ) * scale
+        if logit_cap > 0:
+            s = softcap(s, logit_cap)
+        ok = kpos_j[None, :] >= 0
+        if causal:
+            ok &= kpos_j[None, :] <= qpos_i[:, None]
+        if window > 0:
+            ok &= kpos_j[None, :] > (qpos_i[:, None] - window)
+        s = jnp.where(ok[None, None], s, NEG)
+        m2 = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m2[..., None])
+        alpha = jnp.exp(m - m2)
+        l2 = l * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum(
+            "bhqk,bhkd->bhqd",
+            p.astype(v_j.dtype),
+            v_j,
+            preferred_element_type=jnp.float32,
+        )
+        o2 = o * alpha[..., None] + pv
+        return (m2, l2, o2)
+
+    def q_body(q_i, qpos_i):
+        init = (
+            jnp.full((B, H, blk_q), NEG, jnp.float32),
+            jnp.zeros((B, H, blk_q), jnp.float32),
+            jnp.zeros((B, H, blk_q, hd), jnp.float32),
+        )
+        if skip_masked_blocks and causal:
+            # Band-limited inner loop: only kv blocks intersecting
+            # [q_lo - window, q_hi] can contribute.  We roll the kv block
+            # index so the scan length can stay static while the *work* is
+            # bounded by gathering only `n_needed` blocks via dynamic_slice
+            # in a fori_loop (true FLOP skipping — hillclimb lever).
+            q_hi = qpos_i[-1]
+            lo_pos = jnp.maximum(qpos_i[0] - (window if window > 0 else 10**9) + 1, 0)
+            j_lo = jnp.maximum(lo_pos // blk_k, 0)
+            j_hi = jnp.minimum(q_hi // blk_k, nk - 1)
+
+            def body(j, acc):
+                k_j = jax.lax.dynamic_index_in_dim(kb, j, 0, keepdims=False)
+                v_j = jax.lax.dynamic_index_in_dim(vb, j, 0, keepdims=False)
+                kpos_j = jax.lax.dynamic_index_in_dim(kpb, j, 0, keepdims=False)
+                return one_pair(acc, q_i, qpos_i, k_j, v_j, kpos_j)
+
+            m, l, o = jax.lax.fori_loop(j_lo, j_hi + 1, body, init)
+        else:
+
+            def kv_step(acc, kj):
+                k_j, v_j, kpos_j = kj
+                return one_pair(acc, q_i, qpos_i, k_j, v_j, kpos_j), None
+
+            (m, l, o), _ = jax.lax.scan(kv_step, init, (kb, vb, kpb))
+        out_i = o / jnp.maximum(l, 1e-30)[..., None]
+        return out_i.astype(out_dt)
+
+    # Checkpoint per q-block: backward recomputes one q-row of score blocks
+    # at a time instead of materializing all (nq x nk) f32 score blocks —
+    # this is what makes the jnp path flash-memory-equivalent under
+    # autodiff (the Pallas kernel does the same by construction).
+    q_body_ckpt = jax.checkpoint(q_body)
+
+    def q_step(_, qi):
+        q_i, qpos_i = qi
+        return None, q_body_ckpt(q_i, qpos_i)
+
+    _, ob = jax.lax.scan(q_step, None, (qb, qpb))
+    out = ob.transpose(1, 0, 3, 2, 4).reshape(B, nq * blk_q, H, hd)
+    return out[:, :Sq]
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence block forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def direct_attention(q, k, v, q_pos, k_pos, *, causal, window, logit_cap):
+    """Plain masked-softmax attention (materializes Sq x Sk scores).
+    Numerically equivalent to blockwise_attention — used as its oracle and
+    as the dry-run cost-probe implementation (no inner while loops)."""
+    s = jnp.einsum(
+        "bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32
+    ) * (q.shape[-1] ** -0.5)
+    if logit_cap > 0:
+        s = softcap(s, logit_cap)
+    ok = k_pos[None, :] >= 0
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        ok &= k_pos[None, :] > (q_pos[:, None] - window)
+    s = jnp.where(ok[None, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bhqk,bkhd->bqhd", p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+    return out.astype(q.dtype)
+
+
+def attention_forward(
+    p,
+    x,
+    cfg,
+    shd: Sharder,
+    positions,
+    *,
+    causal: bool = True,
+    kv_x=None,
+    kv_positions=None,
+    use_rope: Optional[bool] = None,
+    skip_masked_blocks: bool = False,
+):
+    """Full-sequence attention sub-layer (pre-norm residual handled by
+    caller).  kv_x != None => cross attention (no rope, no causal)."""
+    cross = kv_x is not None
+    kv_x = x if kv_x is None else kv_x
+    kv_positions = positions if kv_positions is None else kv_positions
+    if use_rope is None:
+        use_rope = cfg.pos_kind == "rope" and not cross
+    q, k, v = _project_qkv(p, x, kv_x, cfg, shd, positions, kv_positions, use_rope)
+    k, v = _expand_kv(k, v, cfg.n_heads_p, shd)
+    window = cfg.window if cfg.attn_kind in ("swa", "local") else 0
+    impl = direct_attention if cfg.attn_impl == "direct" else blockwise_attention
+    kwargs = {} if cfg.attn_impl == "direct" else {"skip_masked_blocks": skip_masked_blocks}
+    out = impl(
+        q,
+        k,
+        v,
+        positions,
+        kv_positions,
+        causal=causal and not cross,
+        window=window,
+        logit_cap=cfg.attn_logit_softcap,
+        **kwargs,
+    )
+    out = shd.act(out, "batch", "seq", "act_heads", "head_dim")
+    dt = jnp.dtype(cfg.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+    if cfg.qkv_bias:
+        y = y + p["bo"].astype(dt)
+    return shd.act(y, "batch", "res_seq", "act_embed")
+
+
+# ---------------------------------------------------------------------------
+# Decode (single new token against a cache)
+# ---------------------------------------------------------------------------
+
+
+def cache_len(cfg, seq_len: int) -> int:
+    """Ring-buffer length: window-bounded archs keep only `window` entries
+    (this is what makes long_500k sub-quadratic for swa archs)."""
+    if cfg.attn_kind in ("swa", "local") and cfg.window > 0:
+        return min(cfg.window, seq_len)
+    return seq_len
+
+
+def init_attn_cache(ini: Init, cfg, batch: int, seq_len: int, model_axis: int, cross_len: int = 0):
+    """Cache pytree (as ParamLeaf tree so the dry-run can shard it).
+
+    k/v: (B, Sc, KVv, hd) with KVv virtual (sharded) kv heads;
+    k_pos: (B, Sc) absolute positions of the stored entries, -1 = empty.
+    """
+    hd = cfg.resolved_head_dim
+    kvv = n_kv_virtual(cfg.n_heads_p, cfg.n_kv_p, model_axis)
+    sc = cache_len(cfg, seq_len)
+    dt = jnp.dtype(cfg.dtype)
+    c = {
+        "k": ini.zeros((batch, sc, kvv, hd), ("batch", "kv_seq", "kv_heads", "head_dim"), dtype=dt),
+        "v": ini.zeros((batch, sc, kvv, hd), ("batch", "kv_seq", "kv_heads", "head_dim"), dtype=dt),
+        "k_pos": ini.const((batch, sc), ("batch", "kv_seq"), -1, dtype=jnp.int32),
+    }
+    if cross_len:
+        c["ck"] = ini.zeros(
+            (batch, cross_len, kvv, hd), ("batch", "kv_seq", "kv_heads", "head_dim"), dtype=dt
+        )
+        c["cv"] = ini.zeros(
+            (batch, cross_len, kvv, hd), ("batch", "kv_seq", "kv_heads", "head_dim"), dtype=dt
+        )
+    return c
+
+
+def _decode_mha(q, k, v, k_pos, pos, window, logit_cap):
+    """q: (B,1,H,hd); k/v: (B,Sc,KVv,hd); k_pos: (B,Sc). -> (B,1,H,hd)"""
+    B, _, H, hd = q.shape
+    kvv = k.shape[2]
+    rep = H // kvv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32) * (
+        hd**-0.5
+    )
+    if logit_cap > 0:
+        s = softcap(s, logit_cap)
+    ok = (k_pos >= 0) & (k_pos <= pos[:, None])
+    if window > 0:
+        ok &= k_pos > (pos[:, None] - window)
+    s = jnp.where(ok[:, None, None, :], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum(
+        "bhqk,bkhd->bqhd", p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    ).astype(q.dtype)
+
+
+def attention_decode(p, x, cache, pos, cfg, shd: Sharder, cross: bool = False):
+    """x: (B,1,D) current token activations; pos: (B,) int32 positions.
+    Returns (y (B,1,D), new_cache)."""
+    dt = jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    use_rope = cfg.pos_kind == "rope" and not cross
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+    if cfg.qk_norm and "q_norm" in p:
+        q = common.rms_norm(q, p["q_norm"], cfg.norm_eps)
+    if use_rope:
+        sin, cos = rope_tables(pos[:, None], hd, cfg.rope_theta)  # (B,1,half)
+        q = apply_rope(q, sin, cos)
+
+    if cross:
+        out = _decode_mha(
+            q,
+            cache["ck"],
+            cache["cv"],
+            jnp.zeros(cache["ck"].shape[:2], jnp.int32),
+            jnp.full((x.shape[0],), 2**30, jnp.int32),
+            0,
+            cfg.attn_logit_softcap,
+        )
+        new_cache = cache
+    else:
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+        if cfg.qkv_bias:
+            k = k + p["bk"].astype(dt)
+            v = v + p["bv"].astype(dt)
+        if cfg.qk_norm and "k_norm" in p:
+            k = common.rms_norm(k, p["k_norm"], cfg.norm_eps)
+        if use_rope:
+            sin, cos = rope_tables(pos[:, None], hd, cfg.rope_theta)
+            k = apply_rope(k, sin, cos)
+        kvv = cache["k"].shape[2]
+        rep = kvv // cfg.n_kv_p
+        if rep > 1:
+            k = jnp.repeat(k, rep, axis=2)
+            v = jnp.repeat(v, rep, axis=2)
+        sc = cache["k"].shape[1]
+        slot = (pos % sc).astype(jnp.int32)  # ring-buffer write
+        bidx = jnp.arange(x.shape[0])
+        ck = cache["k"].at[bidx, slot].set(k[:, 0])
+        cv = cache["v"].at[bidx, slot].set(v[:, 0])
+        ckpos = cache["k_pos"].at[bidx, slot].set(pos.astype(jnp.int32))
+        new_cache = dict(cache, k=ck, v=cv, k_pos=ckpos)
+        window = cfg.window if cfg.attn_kind in ("swa", "local") else 0
+        out = _decode_mha(q, ck, cv, ckpos, pos, window, cfg.attn_logit_softcap)
+
+    y = jnp.einsum("bshk,hkd->bsd", out.astype(dt), p["wo"].astype(dt))
+    if cfg.qkv_bias:
+        y = y + p["bo"].astype(dt)
+    return y, new_cache
+
+
+def prefill_cache_entries(p, x, cfg, shd: Sharder, positions, seq_len: int, model_axis: int):
+    """Build the k/v cache contents from a full-sequence pass (prefill).
+    Returns cache dict with the last `cache_len` entries (ring layout)."""
+    dt = jnp.dtype(cfg.dtype)
+    _, k, v = _project_qkv(p, x, x, cfg, shd, positions, positions, cfg.pos_kind == "rope")
+    kvv = n_kv_virtual(cfg.n_heads_p, cfg.n_kv_p, model_axis)
+    rep = kvv // cfg.n_kv_p
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    sc = cache_len(cfg, seq_len)
+    S = x.shape[1]
+    if sc < S:
+        # keep the trailing window; ring slot of position p is p % sc —
+        # roll so entry order matches ring indexing
+        k_tail, v_tail = k[:, S - sc :], v[:, S - sc :]
+        pos_tail = positions[S - sc :]
+        shift = (S - sc) % sc
+        k_r = jnp.roll(k_tail, shift, axis=1)
+        v_r = jnp.roll(v_tail, shift, axis=1)
+        pos_r = jnp.roll(pos_tail, shift)
+        kpos = jnp.broadcast_to(pos_r[None], (x.shape[0], sc)).astype(jnp.int32)
+        return {"k": k_r.astype(dt), "v": v_r.astype(dt), "k_pos": kpos}
+    pad = sc - S
+    kk = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kpos = jnp.pad(positions.astype(jnp.int32), (0, pad), constant_values=-1)
+    kpos = jnp.broadcast_to(kpos[None], (x.shape[0], sc))
+    return {"k": kk.astype(dt), "v": vv.astype(dt), "k_pos": kpos}

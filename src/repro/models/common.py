@@ -1,0 +1,175 @@
+"""Common model building blocks: inits, norms, rotary embeddings, masks.
+
+All parameters are created through ``Init`` which bundles values with
+logical axes (see repro.models.sharding).  ``Init.abstract=True`` produces
+``jax.ShapeDtypeStruct`` leaves instead of real arrays — used by the
+dry-run so no multi-hundred-GB model is ever materialized.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.sharding import ParamLeaf
+
+
+@dataclasses.dataclass
+class Init:
+    """Parameter factory: tracks an rng fold-count, abstract mode, dtype."""
+
+    rng: jax.Array
+    param_dtype: jnp.dtype = jnp.float32
+    abstract: bool = False
+    _count: int = 0
+
+    def _next_rng(self):
+        self._count += 1
+        return jax.random.fold_in(self.rng, self._count)
+
+    def normal(self, shape, axes, scale=0.02, dtype=None) -> ParamLeaf:
+        dtype = dtype or self.param_dtype
+        if self.abstract:
+            return ParamLeaf(jax.ShapeDtypeStruct(tuple(shape), dtype), tuple(axes))
+        v = scale * jax.random.normal(self._next_rng(), tuple(shape), dtype=jnp.float32)
+        return ParamLeaf(v.astype(dtype), tuple(axes))
+
+    def fan_in(self, shape, axes, fan_axes=None, dtype=None) -> ParamLeaf:
+        """Normal with 1/sqrt(fan_in) scale (fan = product of fan_axes dims,
+        default: all but last dim)."""
+        if fan_axes is None:
+            fan = int(np.prod(shape[:-1])) if len(shape) > 1 else shape[0]
+        else:
+            fan = int(np.prod([shape[i] for i in fan_axes]))
+        return self.normal(shape, axes, scale=1.0 / np.sqrt(max(fan, 1)), dtype=dtype)
+
+    def zeros(self, shape, axes, dtype=None) -> ParamLeaf:
+        dtype = dtype or self.param_dtype
+        if self.abstract:
+            return ParamLeaf(jax.ShapeDtypeStruct(tuple(shape), dtype), tuple(axes))
+        return ParamLeaf(jnp.zeros(tuple(shape), dtype), tuple(axes))
+
+    def ones(self, shape, axes, dtype=None) -> ParamLeaf:
+        dtype = dtype or self.param_dtype
+        if self.abstract:
+            return ParamLeaf(jax.ShapeDtypeStruct(tuple(shape), dtype), tuple(axes))
+        return ParamLeaf(jnp.ones(tuple(shape), dtype), tuple(axes))
+
+    def const(self, shape, axes, fill, dtype=None) -> ParamLeaf:
+        dtype = dtype or self.param_dtype
+        if self.abstract:
+            return ParamLeaf(jax.ShapeDtypeStruct(tuple(shape), dtype), tuple(axes))
+        return ParamLeaf(jnp.full(tuple(shape), fill, dtype), tuple(axes))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def init_norm(ini: Init, cfg, width=None):
+    width = width or cfg.d_model
+    if cfg.norm_kind == "rmsnorm":
+        return {"scale": ini.zeros((width,), ("act_embed",))}
+    return {"scale": ini.ones((width,), ("act_embed",)), "bias": ini.zeros((width,), ("act_embed",))}
+
+
+def apply_norm(p, x, cfg):
+    if "bias" in p:
+        return layer_norm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rms_norm(x, p["scale"], cfg.norm_eps)
+
+
+def group_norm_heads(x, scale, eps=1e-5):
+    """Per-head group norm over the feature dim. x: (..., H, dh)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_tables(positions, head_dim: int, theta: float):
+    """positions: int (...,S). Returns (sin, cos) each (...,S, head_dim/2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (...,S,half)
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x, sin, cos):
+    """x: (B,S,H,D). sin/cos: (B,S,half) or (S,half). Split-half convention."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if sin.ndim == 2:  # (S, half) -> broadcast over batch & heads
+        s = sin[None, :, None, :]
+        c = cos[None, :, None, :]
+    else:  # (B,S,half)
+        s = sin[:, :, None, :]
+        c = cos[:, :, None, :]
+    dt = x.dtype
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * c - x2f * s, x2f * c + x1f * s], axis=-1)
+    return out.astype(dt)
+
+
+def sinusoidal_positions(n_pos: int, dim: int) -> np.ndarray:
+    """Whisper-style sinusoidal table (n_pos, dim), computed host-side."""
+    half = dim // 2
+    log_timescale = np.log(10_000.0) / max(half - 1, 1)
+    inv = np.exp(-log_timescale * np.arange(half))
+    ang = np.arange(n_pos)[:, None] * inv[None, :]
+    return np.concatenate([np.sin(ang), np.cos(ang)], axis=1).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Masks
+# ---------------------------------------------------------------------------
+
+NEG_INF = -2.0e38  # float32-safe additive mask
+
+
+def causal_mask_bias(q_pos, k_pos, window: int = 0) -> jnp.ndarray:
+    """Additive bias (…, Sq, Sk): 0 where k may be attended from q.
+
+    window > 0 => sliding-window causal: q attends k iff
+    q_pos - window < k_pos <= q_pos.
+    """
+    ok = k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        ok &= k_pos[None, :] > (q_pos[:, None] - window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def padded_vocab(vocab_size: int, multiple: int = 128) -> int:
+    return ((vocab_size + multiple - 1) // multiple) * multiple
+
+
+def softcap(x, cap: float):
+    return jnp.tanh(x / cap) * cap if cap > 0 else x

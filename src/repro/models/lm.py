@@ -1,0 +1,565 @@
+"""Top-level language models: decoder-only, encoder-decoder, VLM-stub.
+
+One functional API for every assigned architecture:
+
+    params_pl  = init(rng, cfg, max_seq, abstract=...)   # ParamLeaf tree
+    logits,aux = forward(params, batch, cfg, shd)        # train path
+    logits,cache = prefill(params, batch, cfg, shd, model_axis)
+    logits,cache = decode_step(params, cache, tokens, pos, cfg, shd)
+
+Layer stacks are grouped into repeating *units* (cfg.block_pattern) and
+evaluated with lax.scan over stacked unit params — compile size stays
+O(unit), not O(depth) (56-layer mixtral compiles the same program as a
+3-layer toy).  Remainder layers that don't fill a unit (e.g. griffin's
+38 = 12*3 + 2) run unscanned before the scan.  Remat wraps the unit body
+(cfg.remat: none|full|dots).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn_mod
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models import recurrent as rec_mod
+from repro.models import xlstm_blocks as xl_mod
+from repro.models.common import (
+    Init,
+    apply_norm,
+    init_norm,
+    padded_vocab,
+    sinusoidal_positions,
+)
+from repro.models.sharding import ParamLeaf, Sharder, is_param_leaf
+
+
+# ---------------------------------------------------------------------------
+# Block init / forward dispatch
+# ---------------------------------------------------------------------------
+
+
+def _init_block(ini: Init, cfg, kind: str, decoder_cross: bool = False):
+    p: Dict[str, Any] = {"norm1": init_norm(ini, cfg)}
+    if kind == "attn":
+        p["attn"] = attn_mod.init_attention(ini, cfg)
+        if decoder_cross:
+            p["norm_x"] = init_norm(ini, cfg)
+            p["xattn"] = attn_mod.init_attention(ini, cfg, cross=True)
+        if cfg.d_ff > 0:
+            p["norm2"] = init_norm(ini, cfg)
+            p["ffn"] = moe_mod.init_moe(ini, cfg) if cfg.is_moe else mlp_mod.init_mlp(ini, cfg)
+    elif kind == "rec":
+        p["rec"] = rec_mod.init_rec_block(ini, cfg)
+        if cfg.d_ff > 0:
+            p["norm2"] = init_norm(ini, cfg)
+            p["ffn"] = mlp_mod.init_mlp(ini, cfg)
+    elif kind == "mlstm":
+        p["mix"] = xl_mod.init_mlstm_block(ini, cfg)
+    elif kind == "slstm":
+        p["mix"] = xl_mod.init_slstm_block(ini, cfg)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+@dataclasses.dataclass
+class Ctx:
+    cfg: Any
+    shd: Sharder
+    mode: str  # 'train' | 'prefill' | 'decode'
+    positions: Any = None  # (S,) int32 for full-seq modes
+    pos: Any = None  # (B,) int32 for decode
+    enc_out: Any = None
+    causal: bool = True
+    model_axis: int = 1
+    seq_len: int = 0  # cache length basis (decode/prefill)
+    skip_masked_blocks: bool = False
+    cross: bool = False  # decoder-with-cross-attention blocks
+
+
+def _block_full(kind: str, p, x, ctx: Ctx):
+    """Full-sequence block (train). Returns (x, aux_loss)."""
+    cfg, shd = ctx.cfg, ctx.shd
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(p["norm1"], x, cfg)
+    if kind == "attn":
+        y = attn_mod.attention_forward(
+            p["attn"], h, cfg, shd, ctx.positions, causal=ctx.causal,
+            skip_masked_blocks=ctx.skip_masked_blocks,
+        )
+        x = x + y
+        if ctx.cross:
+            hx = apply_norm(p["norm_x"], x, cfg)
+            y = attn_mod.attention_forward(
+                p["xattn"], hx, cfg, shd, ctx.positions, kv_x=ctx.enc_out,
+                kv_positions=jnp.arange(ctx.enc_out.shape[1], dtype=jnp.int32),
+            )
+            x = x + y
+        if cfg.d_ff > 0:
+            h2 = apply_norm(p["norm2"], x, cfg)
+            if cfg.is_moe:
+                y, a = moe_mod.moe_forward(p["ffn"], h2, cfg, shd)
+                aux = aux + a
+            else:
+                y = mlp_mod.mlp_forward(p["ffn"], h2, cfg, shd)
+            x = x + y
+    elif kind == "rec":
+        x = x + rec_mod.rec_forward(p["rec"], h, cfg, shd)
+        if cfg.d_ff > 0:
+            h2 = apply_norm(p["norm2"], x, cfg)
+            x = x + mlp_mod.mlp_forward(p["ffn"], h2, cfg, shd)
+    elif kind == "mlstm":
+        x = x + xl_mod.mlstm_forward(p["mix"], h, cfg, shd)
+    elif kind == "slstm":
+        x = x + xl_mod.slstm_forward(p["mix"], h, cfg, shd)
+    return x, aux
+
+
+def _block_decode(kind: str, p, x, cache, ctx: Ctx):
+    """Single-token block. Returns (x, new_cache)."""
+    cfg, shd = ctx.cfg, ctx.shd
+    h = apply_norm(p["norm1"], x, cfg)
+    if kind == "attn":
+        y, cache_a = attn_mod.attention_decode(p["attn"], h, cache["attn"], ctx.pos, cfg, shd)
+        x = x + y
+        new = dict(cache, attn=cache_a)
+        if ctx.cross:
+            hx = apply_norm(p["norm_x"], x, cfg)
+            y, _ = attn_mod.attention_decode(
+                p["xattn"], hx, cache["attn"], ctx.pos, cfg, shd, cross=True
+            )
+            x = x + y
+        if cfg.d_ff > 0:
+            h2 = apply_norm(p["norm2"], x, cfg)
+            if cfg.is_moe:
+                y, _ = moe_mod.moe_forward(p["ffn"], h2, cfg, shd)
+            else:
+                y = mlp_mod.mlp_forward(p["ffn"], h2, cfg, shd)
+            x = x + y
+        return x, new
+    if kind == "rec":
+        y, cache_r = rec_mod.rec_decode(p["rec"], h, cache["rec"], cfg, shd)
+        x = x + y
+        if cfg.d_ff > 0:
+            h2 = apply_norm(p["norm2"], x, cfg)
+            x = x + mlp_mod.mlp_forward(p["ffn"], h2, cfg, shd)
+        return x, dict(cache, rec=cache_r)
+    if kind == "mlstm":
+        y, cache_m = xl_mod.mlstm_decode(p["mix"], h, cache["mix"], cfg, shd)
+        return x + y, dict(cache, mix=cache_m)
+    if kind == "slstm":
+        y, cache_s = xl_mod.slstm_decode(p["mix"], h, cache["mix"], cfg, shd)
+        return x + y, dict(cache, mix=cache_s)
+    raise ValueError(kind)
+
+
+def _block_prefill_cache(kind: str, p, x, ctx: Ctx):
+    """Cache contents produced by a full-sequence pass over pre-norm input x
+    (the same normed activations the block consumed)."""
+    cfg, shd = ctx.cfg, ctx.shd
+    h = apply_norm(p["norm1"], x, cfg)
+    if kind == "attn":
+        c = {
+            "attn": attn_mod.prefill_cache_entries(
+                p["attn"], h, cfg, shd, ctx.positions, ctx.seq_len, ctx.model_axis
+            )
+        }
+        if ctx.cross:
+            dtc = jnp.dtype(cfg.dtype)
+            _, ck, cv = attn_mod._project_qkv(
+                p["xattn"],
+                ctx.enc_out,
+                ctx.enc_out,
+                cfg,
+                shd,
+                jnp.arange(ctx.enc_out.shape[1], dtype=jnp.int32),
+                jnp.arange(ctx.enc_out.shape[1], dtype=jnp.int32),
+                False,
+            )
+            from repro.models.sharding import n_kv_virtual
+
+            kvv = n_kv_virtual(cfg.n_heads_p, cfg.n_kv_p, ctx.model_axis)
+            rep = kvv // cfg.n_kv_p
+            if rep > 1:
+                ck = jnp.repeat(ck, rep, axis=2)
+                cv = jnp.repeat(cv, rep, axis=2)
+            c["attn"]["ck"] = ck.astype(dtc)
+            c["attn"]["cv"] = cv.astype(dtc)
+        return c
+    if kind == "rec":
+        return {"rec": rec_mod.rec_prefill_cache(p["rec"], h, cfg, shd)}
+    if kind == "mlstm":
+        dt = jnp.dtype(cfg.dtype)
+        up = jnp.einsum("bsd,dcf->bscf", h, p["mix"]["up"].astype(dt))
+        x_in = up[:, :, 1]
+        q, k, v, i_pre, f_pre, _ = xl_mod._mlstm_qkvif(p["mix"], x_in, cfg)
+        _, (C, n, m) = xl_mod.mlstm_chunkwise(q, k, v, i_pre, f_pre, cfg.mlstm_chunk)
+        conv = x_in[:, -(cfg.conv_width - 1) :]
+        return {"mix": {"C": C, "n": n, "m": m, "conv": conv}}
+    if kind == "slstm":
+        dtf = jnp.float32
+        B = x.shape[0]
+        H, dh = cfg.n_heads, cfg.d_model // cfg.n_heads
+        z = jnp.zeros((B, H, dh), dtf)
+        _, (cst, nst, hst, mst) = xl_mod.slstm_sequence(p["mix"], h, cfg, (z, z, z, z))
+        return {"mix": {"c": cst, "n": nst, "h": hst, "m": mst}}
+    raise ValueError(kind)
+
+
+def init_block_cache(ini: Init, cfg, kind: str, batch: int, seq_len: int, model_axis: int, cross_len: int = 0):
+    if kind == "attn":
+        return {"attn": attn_mod.init_attn_cache(ini, cfg, batch, seq_len, model_axis, cross_len)}
+    if kind == "rec":
+        return {"rec": rec_mod.init_rec_cache(ini, cfg, batch)}
+    if kind == "mlstm":
+        return {"mix": xl_mod.init_mlstm_cache(ini, cfg, batch)}
+    if kind == "slstm":
+        return {"mix": xl_mod.slstm_init_state(ini, cfg, batch)}
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Stacked-unit init
+# ---------------------------------------------------------------------------
+
+
+def _stack_init(ini: Init, n: int, fn):
+    """Stack n inits along a leading 'layers' axis."""
+    if n == 0:
+        return None
+    if ini.abstract:
+        unit = fn()
+        return jax.tree.map(
+            lambda pl: ParamLeaf(
+                jax.ShapeDtypeStruct((n,) + tuple(pl.value.shape), pl.value.dtype),
+                ("layers",) + pl.axes,
+            ),
+            unit,
+            is_leaf=is_param_leaf,
+        )
+    units = [fn() for _ in range(n)]
+    return jax.tree.map(
+        lambda *ls: ParamLeaf(
+            jnp.stack([l.value for l in ls]), ("layers",) + ls[0].axes
+        ),
+        *units,
+        is_leaf=is_param_leaf,
+    )
+
+
+def _unit_init(ini: Init, cfg, cross: bool = False):
+    return {
+        f"b{i}": _init_block(ini, cfg, kind, decoder_cross=cross)
+        for i, kind in enumerate(cfg.resolved_pattern)
+    }
+
+
+# ---------------------------------------------------------------------------
+# Model init
+# ---------------------------------------------------------------------------
+
+
+def init(rng, cfg, max_seq: int, abstract: bool = False):
+    """Returns a ParamLeaf tree for the whole model."""
+    ini = Init(rng=rng, param_dtype=jnp.dtype(cfg.param_dtype), abstract=abstract)
+    Vp = padded_vocab(cfg.vocab_size)
+    D = cfg.d_model
+    p: Dict[str, Any] = {
+        "embed": ini.normal((Vp, D), ("vocab", "embed"), scale=1.0),
+        "final_norm": init_norm(ini, cfg),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = ini.fan_in((D, Vp), ("embed", "vocab"))
+    if cfg.pos_kind == "learned":
+        p["pos"] = ini.normal((max_seq, D), ("pos", "embed"), scale=0.01)
+
+    cross = cfg.is_encdec
+    p["units"] = _stack_init(ini, cfg.n_units, lambda: _unit_init(ini, cfg, cross))
+    if cfg.n_rem_layers:
+        p["rem"] = {
+            f"b{i}": _init_block(ini, cfg, cfg.resolved_pattern[i % cfg.unit_len], decoder_cross=cross)
+            for i in range(cfg.n_rem_layers)
+        }
+    if cfg.is_encdec:
+        enc_cfg = cfg.replace(block_pattern=(), is_encdec=False, n_layers=cfg.n_enc_layers)
+        p["enc_units"] = _stack_init(
+            ini, cfg.n_enc_layers, lambda: {"b0": _init_block(ini, enc_cfg, "attn")}
+        )
+        p["enc_norm"] = init_norm(ini, cfg)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Shared full-sequence trunk
+# ---------------------------------------------------------------------------
+
+
+def _remat_wrap(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+def _run_units(params, x, ctx: Ctx, collect_cache: bool = False):
+    """Remainder blocks then scanned units. Returns (x, aux, caches|None)."""
+    cfg = ctx.cfg
+    pattern = ctx.cfg.resolved_pattern
+    aux = jnp.zeros((), jnp.float32)
+    rem_caches = {}
+    if cfg.n_rem_layers:
+        for i in range(cfg.n_rem_layers):
+            kind = pattern[i % cfg.unit_len]
+            bp = params["rem"][f"b{i}"]
+            if collect_cache:
+                rem_caches[f"b{i}"] = _block_prefill_cache(kind, bp, x, ctx)
+            x, a = _block_full(kind, bp, x, ctx)
+            aux = aux + a
+
+    if params.get("units") is None:
+        return x, aux, (rem_caches if collect_cache else None)
+
+    def unit_fn(x, unit_params):
+        a_tot = jnp.zeros((), jnp.float32)
+        caches = {}
+        for i, kind in enumerate(pattern):
+            if collect_cache:
+                caches[f"b{i}"] = _block_prefill_cache(kind, unit_params[f"b{i}"], x, ctx)
+            x, a = _block_full(kind, unit_params[f"b{i}"], x, ctx)
+            a_tot = a_tot + a
+        return x, a_tot, caches
+
+    unit_fn_w = _remat_wrap(unit_fn, cfg) if cfg.remat != "none" else unit_fn
+
+    if cfg.scan_layers:
+        def body(carry, unit_params):
+            x, aux = carry
+            x, a, caches = unit_fn_w(x, unit_params)
+            return (x, aux + a), (caches if collect_cache else None)
+
+        (x, aux), unit_caches = jax.lax.scan(body, (x, aux), params["units"])
+    else:
+        # unrolled (dry-run cost probe / tiny models): python loop over
+        # unit indices into the stacked params
+        caches_list = []
+        for i in range(cfg.n_units):
+            up = jax.tree.map(lambda a: a[i], params["units"])
+            x, a, caches_i = unit_fn_w(x, up)
+            aux = aux + a
+            caches_list.append(caches_i)
+        unit_caches = (
+            jax.tree.map(lambda *ls: jnp.stack(ls), *caches_list)
+            if collect_cache and caches_list
+            else None
+        )
+    caches = None
+    if collect_cache:
+        caches = {"rem": rem_caches, "units": unit_caches}
+    return x, aux, caches
+
+
+def _embed_tokens(params, tokens, cfg, shd: Sharder):
+    dt = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    return shd.act(x, "batch", "res_seq", "act_embed")
+
+
+def _lm_logits(params, x, cfg, shd: Sharder):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x, w.astype(x.dtype), preferred_element_type=jnp.float32
+    )
+    # logits stay sequence-sharded: (B, S/model, Vp) — the f32 logits
+    # buffer is the single largest train-time activation otherwise
+    return shd.act(logits, "batch", "res_seq", None)
+
+
+def _encode(params, frames, cfg, shd: Sharder):
+    """Whisper encoder over precomputed frame embeddings (conv stub)."""
+    dt = jnp.dtype(cfg.dtype)
+    S = frames.shape[1]
+    pos_tab = jnp.asarray(sinusoidal_positions(S, cfg.d_model), dt)
+    x = frames.astype(dt) + pos_tab[None]
+    x = shd.act(x, "batch", "seq", "act_embed")
+    enc_cfg = cfg.replace(block_pattern=(), is_encdec=False)
+    ctx = Ctx(cfg=enc_cfg, shd=shd, mode="train",
+              positions=jnp.arange(S, dtype=jnp.int32), causal=False)
+
+    def unit_fn(x, up):
+        x, a = _block_full("attn", up["b0"], x, ctx)
+        return x, a
+
+    ufn = _remat_wrap(unit_fn, cfg) if cfg.remat != "none" else unit_fn
+
+    if cfg.scan_layers:
+        def body(carry, up):
+            x, aux = carry
+            x, a = ufn(x, up)
+            return (x, aux + a), None
+
+        (x, _), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), params["enc_units"])
+    else:
+        for i in range(cfg.n_enc_layers):
+            up = jax.tree.map(lambda a: a[i], params["enc_units"])
+            x, _ = ufn(x, up)
+    return apply_norm(params["enc_norm"], x, cfg)
+
+
+def _assemble_inputs(params, batch, cfg, shd: Sharder):
+    """Token embeddings (+ learned positions, + VLM image prefix).
+    Returns (x, positions, enc_out)."""
+    tokens = batch["tokens"]
+    x = _embed_tokens(params, tokens, cfg, shd)
+    enc_out = None
+    if cfg.n_img_tokens:
+        img = batch["img_embeds"].astype(x.dtype)  # (B, n_img, D) — stub frontend
+        x = jnp.concatenate([img, x], axis=1)
+        x = shd.act(x, "batch", "res_seq", "act_embed")
+    if cfg.is_encdec:
+        enc_out = _encode(params, batch["frames"], cfg, shd)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    if cfg.pos_kind == "learned":
+        x = x + params["pos"][:S].astype(x.dtype)[None]
+    return x, positions, enc_out
+
+
+def forward(params, batch, cfg, shd: Sharder, skip_masked_blocks: bool = False):
+    """Train-mode forward. batch: {'tokens', ['img_embeds'], ['frames']}.
+    Returns (logits (B, S_total, Vp) f32, aux_loss)."""
+    x, positions, enc_out = _assemble_inputs(params, batch, cfg, shd)
+    ctx = Ctx(cfg=cfg, shd=shd, mode="train", positions=positions,
+              enc_out=enc_out, cross=cfg.is_encdec,
+              skip_masked_blocks=skip_masked_blocks)
+    x, aux, _ = _run_units(params, x, ctx)
+    x = apply_norm(params["final_norm"], x, cfg)
+    return _lm_logits(params, x, cfg, shd), aux
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, batch, cfg, shd: Sharder, model_axis: int = 1, cache_len: int = 0):
+    """Full-context pass that returns (last-token logits, cache).
+
+    cache_len: total KV-cache allocation (>= prompt length + decode
+    budget); defaults to the prompt length (no decode headroom).
+    """
+    x, positions, enc_out = _assemble_inputs(params, batch, cfg, shd)
+    ctx = Ctx(cfg=cfg, shd=shd, mode="prefill", positions=positions,
+              enc_out=enc_out, cross=cfg.is_encdec,
+              model_axis=model_axis, seq_len=max(cache_len, x.shape[1]))
+    x, _, caches = _run_units(params, x, ctx, collect_cache=True)
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = _lm_logits(params, x[:, -1:], cfg, shd)
+    return logits, caches
+
+
+def init_cache(ini: Init, cfg, batch: int, seq_len: int, model_axis: int):
+    """Abstract/concrete cache tree matching _run_units(collect_cache)."""
+    pattern = cfg.resolved_pattern
+    cross_len = cfg.enc_seq if cfg.is_encdec else 0
+    rem = {
+        f"b{i}": init_block_cache(
+            ini, cfg, pattern[i % cfg.unit_len], batch, seq_len, model_axis, cross_len
+        )
+        for i in range(cfg.n_rem_layers)
+    }
+    unit = {
+        f"b{i}": init_block_cache(ini, cfg, kind, batch, seq_len, model_axis, cross_len)
+        for i, kind in enumerate(pattern)
+    }
+    units = (
+        jax.tree.map(
+            lambda pl: ParamLeaf(
+                jax.ShapeDtypeStruct((cfg.n_units,) + tuple(pl.value.shape), pl.value.dtype)
+                if ini.abstract
+                else jnp.broadcast_to(pl.value[None], (cfg.n_units,) + tuple(pl.value.shape)).copy(),
+                ("layers",) + pl.axes,
+            ),
+            unit,
+            is_leaf=is_param_leaf,
+        )
+        if cfg.n_units
+        else None
+    )
+    return {"rem": rem, "units": units}
+
+
+def decode_step(params, cache, tokens, pos, cfg, shd: Sharder):
+    """One token for every sequence in the batch.
+
+    tokens: (B, 1) int32; pos: (B,) int32 absolute position of `tokens`.
+    Returns (logits (B,1,Vp), new_cache).
+    """
+    dt = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    x = shd.act(x, "batch", None, "act_embed")
+    if cfg.pos_kind == "learned":
+        x = x + jnp.take(params["pos"], pos, axis=0).astype(dt)[:, None]
+    pattern = cfg.resolved_pattern
+    ctx = Ctx(cfg=cfg, shd=shd, mode="decode", pos=pos, cross=cfg.is_encdec)
+
+    new_rem = {}
+    for i in range(cfg.n_rem_layers):
+        kind = pattern[i % cfg.unit_len]
+        x, c = _block_decode(kind, params["rem"][f"b{i}"], x, cache["rem"][f"b{i}"], ctx)
+        new_rem[f"b{i}"] = c
+
+    new_units = None
+    if cache.get("units") is not None:
+
+        def body(x, xs):
+            unit_params, unit_cache = xs
+            new_cache = {}
+            for i, kind in enumerate(pattern):
+                x, c = _block_decode(kind, unit_params[f"b{i}"], x, unit_cache[f"b{i}"], ctx)
+                new_cache[f"b{i}"] = c
+            return x, new_cache
+
+        if cfg.scan_layers:
+            x, new_units = jax.lax.scan(body, x, (params["units"], cache["units"]))
+        else:
+            outs = []
+            for i in range(cfg.n_units):
+                xs_i = jax.tree.map(lambda a: a[i], (params["units"], cache["units"]))
+                x, c_i = body(x, xs_i)
+                outs.append(c_i)
+            new_units = jax.tree.map(lambda *ls: jnp.stack(ls), *outs)
+
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = _lm_logits(params, x, cfg, shd)
+    return logits, {"rem": new_rem, "units": new_units}
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(logits, labels, weights=None, z_loss: float = 1e-4):
+    """Masked softmax cross-entropy over (possibly padded) vocab.
+
+    logits: (B,S,Vp) f32; labels: (B,S) int32; weights: (B,S) or None.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    # gather (not one-hot einsum): avoids materializing a (B,S,V) one-hot
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = lse - gold
+    if z_loss:
+        ce = ce + z_loss * jnp.square(lse)
+    if weights is None:
+        weights = jnp.ones_like(ce)
+    w = weights.astype(jnp.float32)
+    return jnp.sum(ce * w) / jnp.maximum(jnp.sum(w), 1.0)

@@ -1,0 +1,54 @@
+"""Dense FFN variants: SwiGLU (llama lineage), squared-ReLU (nemotron),
+GELU (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Init
+from repro.models.sharding import Sharder
+
+
+def init_mlp(ini: Init, cfg):
+    D, F = cfg.d_model, cfg.d_ff
+    if cfg.mlp_kind == "swiglu":
+        p = {
+            "w_gate": ini.fan_in((D, F), ("embed", "mlp")),
+            "w_up": ini.fan_in((D, F), ("embed", "mlp")),
+            "w_down": ini.fan_in((F, D), ("mlp", "embed")),
+        }
+    else:
+        p = {
+            "w_up": ini.fan_in((D, F), ("embed", "mlp")),
+            "w_down": ini.fan_in((F, D), ("mlp", "embed")),
+        }
+    if cfg.mlp_bias:
+        p["b_up"] = ini.zeros((F,), ("act_mlp",))
+        p["b_down"] = ini.zeros((D,), ("act_embed",))
+    return p
+
+
+def mlp_forward(p, x, cfg, shd: Sharder):
+    dt = jnp.dtype(cfg.dtype)
+    # hillclimb hook: decode-time resident-weight layout constrains the
+    # FFN input's d_model over the data axis (contraction-aligned with the
+    # weights' FSDP shards -> psum instead of per-step weight gathers);
+    # default rules map both names to () = no-op.
+    x = shd.act(x, "ffn_batch", None, "ffn_embed")
+    if cfg.mlp_kind == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(dt))
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt))
+        h = jax.nn.silu(g) * u
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt))
+        if cfg.mlp_bias:
+            h = h + p["b_up"].astype(dt)
+        if cfg.mlp_kind == "relu2":
+            h = jnp.square(jax.nn.relu(h))
+        else:  # gelu
+            h = jax.nn.gelu(h)
+    h = shd.act(h, "batch", "seq", "act_mlp")
+    y = jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(dt))
+    if cfg.mlp_bias:
+        y = y + p["b_down"].astype(dt)
+    return shd.act(y, "batch", "res_seq", "act_embed")

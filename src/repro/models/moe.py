@@ -1,0 +1,166 @@
+"""Mixture-of-Experts FFN (top-k routing, capacity-based token dropping).
+
+Two dispatch implementations:
+
+* ``scatter`` (default): tokens are scattered into per-expert slot buffers
+  by (expert_id * C + position_in_expert) and gathered back weighted by the
+  router — dispatch is pure data movement, no matmul FLOPs.  This is the
+  TPU-native replacement for GShard's dispatch-einsum, which adds
+  O(T·E·C·D) matmul FLOPs (~30% overhead at mixtral's shapes; see
+  EXPERIMENTS.md §Perf napkin math).
+* ``einsum`` (reference): the classical GShard one-hot dispatch/combine
+  einsums — kept as an oracle for tests and as a baseline for the §Perf
+  comparison.
+
+Expert weights carry logical axes ('expert','embed','mlp'): baseline rules
+FSDP the 'embed' dim over data and TP the 'mlp' dim over model; the
+'expert' dim shards over model only when divisible (phi3.5's 16 experts
+do, mixtral's 8 do not).  A shard_map expert-parallel variant is a §Perf
+hillclimb (see repro.train.ep_moe).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Init
+from repro.models.sharding import Sharder
+
+GROUP = 1024  # tokens per routing group (keeps dispatch tensors bounded)
+
+
+def init_moe(ini: Init, cfg):
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": ini.fan_in((D, E), ("embed", "act_expert")),
+        "w_gate": ini.fan_in((E, D, F), ("expert", "embed", "mlp"), fan_axes=(1,)),
+        "w_up": ini.fan_in((E, D, F), ("expert", "embed", "mlp"), fan_axes=(1,)),
+        "w_down": ini.fan_in((E, F, D), ("expert", "mlp", "embed"), fan_axes=(1,)),
+    }
+
+
+def _route(p, x2d, cfg):
+    """x2d: (T, D). Returns (weights (T,k), expert_idx (T,k), aux_loss)."""
+    E, k = cfg.n_experts, cfg.top_k
+    logits = jnp.einsum(
+        "td,de->te", x2d, p["router"].astype(x2d.dtype), preferred_element_type=jnp.float32
+    )
+    top_logits, top_idx = jax.lax.top_k(logits, k)
+    weights = jax.nn.softmax(top_logits, axis=-1)  # mixtral-style: softmax over top-k
+    # Switch-style load-balancing auxiliary loss: E * sum_e f_e * p_e
+    probs = jax.nn.softmax(logits, axis=-1)
+    me = jnp.mean(probs, axis=0)  # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_idx[:, 0], E, dtype=jnp.float32), axis=0)
+        / x2d.shape[0],
+        axis=0,
+    )
+    one_hot_all = jnp.sum(jax.nn.one_hot(top_idx, E, dtype=jnp.float32), axis=1)  # (T,E)
+    fe = jnp.mean(one_hot_all, axis=0) / k
+    aux = E * jnp.sum(fe * me)
+    del ce
+    return weights, top_idx, aux
+
+
+def _capacity(cfg, tokens_per_group: int) -> int:
+    c = int(tokens_per_group * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8, (c + 7) // 8 * 8)
+
+
+def _positions_in_expert(top_idx, E: int):
+    """top_idx: (g, k) expert ids. Returns pos (g,k) — the slot each
+    (token, choice) takes within its expert's buffer, counting duplicates
+    in routing order (flatten token-major so k=0 beats k=1)."""
+    g, k = top_idx.shape
+    flat = top_idx.reshape(g * k)
+    onehot = jax.nn.one_hot(flat, E, dtype=jnp.int32)  # (g*k, E)
+    pos_flat = jnp.cumsum(onehot, axis=0) - 1  # 0-based rank within expert
+    pos = jnp.take_along_axis(pos_flat, flat[:, None], axis=1)[:, 0]
+    return pos.reshape(g, k)
+
+
+def _scatter_group(x_g, w_g, idx_g, pos_g, p, cfg, dt):
+    """One routing group. x_g: (g, D). Returns (g, D)."""
+    E, k = cfg.n_experts, cfg.top_k
+    g = x_g.shape[0]
+    C = _capacity(cfg, g)
+    keep = pos_g < C  # (g, k)
+    slot = jnp.where(keep, idx_g * C + pos_g, E * C)  # OOB -> dropped
+
+    # dispatch: scatter tokens into (E*C, D); duplicates impossible by
+    # construction (pos is a per-expert rank)
+    buf = jnp.zeros((E * C, x_g.shape[1]), dt)
+    for j in range(k):  # k is 2 — unrolled
+        buf = buf.at[slot[:, j]].set(x_g.astype(dt), mode="drop")
+    xs = buf.reshape(E, C, -1)
+
+    # expert FFN (swiglu)
+    gate = jnp.einsum("ecd,edf->ecf", xs, p["w_gate"].astype(dt))
+    up = jnp.einsum("ecd,edf->ecf", xs, p["w_up"].astype(dt))
+    h = jax.nn.silu(gate) * up
+    ys = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(dt)).reshape(E * C, -1)
+
+    # combine: gather back, weighted
+    out = jnp.zeros_like(x_g, dtype=jnp.float32)
+    for j in range(k):
+        y_j = jnp.take(ys, jnp.minimum(slot[:, j], E * C - 1), axis=0)
+        y_j = jnp.where(keep[:, j, None], y_j, 0.0)
+        out = out + w_g[:, j, None].astype(jnp.float32) * y_j.astype(jnp.float32)
+    return out.astype(dt)
+
+
+def _einsum_group(x_g, w_g, idx_g, pos_g, p, cfg, dt):
+    """GShard dispatch/combine einsum reference (same dropping semantics)."""
+    E, k = cfg.n_experts, cfg.top_k
+    g = x_g.shape[0]
+    C = _capacity(cfg, g)
+    keep = (pos_g < C).astype(jnp.float32)
+    oh_e = jax.nn.one_hot(idx_g, E, dtype=jnp.float32)  # (g,k,E)
+    oh_c = jax.nn.one_hot(jnp.minimum(pos_g, C - 1), C, dtype=jnp.float32)  # (g,k,C)
+    disp = jnp.einsum("gke,gkc,gk->gec", oh_e, oh_c, keep)  # (g,E,C)
+    comb = jnp.einsum("gec,gk,gke,gkc->gec", disp, w_g.astype(jnp.float32), oh_e, oh_c)
+    xs = jnp.einsum("gec,gd->ecd", disp.astype(dt), x_g.astype(dt))
+    gate = jnp.einsum("ecd,edf->ecf", xs, p["w_gate"].astype(dt))
+    up = jnp.einsum("ecd,edf->ecf", xs, p["w_up"].astype(dt))
+    h = jax.nn.silu(gate) * up
+    ys = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(dt))
+    return jnp.einsum("gec,ecd->gd", comb.astype(dt), ys)
+
+
+def moe_forward(p, x, cfg, shd: Sharder, impl: str = None):
+    """x: (B,S,D) -> (B,S,D). Adds aux loss via side channel return.
+
+    Default dispatch is 'einsum' (GShard one-hot): the scatter variant is
+    FLOP-free but GSPMD replicates the group axis around vmapped scatters
+    (measured 10 GiB/device f32 expert buffers on mixtral train — see
+    EXPERIMENTS.md §Perf iteration log), so einsum is the partitionable
+    baseline; scatter remains a TPU-kernel candidate (sort-based dispatch
+    belongs in a Pallas kernel, not in SPMD-visible HLO).
+    """
+    impl = impl or getattr(cfg, "moe_dispatch", "einsum")
+    dt = jnp.dtype(cfg.dtype)
+    x = shd.act(x, "ffn_batch", None, "ffn_embed")  # see mlp_forward note
+    B, S, D = x.shape
+    T = B * S
+    # un-shard S (the residual stream is sequence-sharded over 'model')
+    # BEFORE merging (B,S): reshaping across two differently-sharded dims
+    # forces GSPMD into involuntary full replication of (B,S,D).
+    x = shd.act(x, "batch", None, None)
+    x2d = x.reshape(T, D)
+
+    weights, top_idx, aux = _route(p, x2d, cfg)
+
+    g = min(GROUP, T)
+    n_groups = T // g
+    xg = x2d.reshape(n_groups, g, D)
+    wg = weights.reshape(n_groups, g, cfg.top_k)
+    ig = top_idx.reshape(n_groups, g, cfg.top_k)
+    pos = jax.vmap(lambda i: _positions_in_expert(i, cfg.n_experts))(ig)
+
+    xg = shd.act(xg, "batch", None, "act_embed")
+    fn = _scatter_group if impl == "scatter" else _einsum_group
+    out = jax.vmap(lambda a, b, c, d: fn(a, b, c, d, p, cfg, dt))(xg, wg, ig, pos)
+    out = shd.act(out, "batch", None, "act_embed")
+    return out.reshape(B, S, D), aux

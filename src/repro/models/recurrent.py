@@ -1,0 +1,149 @@
+"""Griffin/RecurrentGemma recurrent block: temporal conv + RG-LRU.
+
+The RG-LRU recurrence h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+with a_t = exp(-c * softplus(Lambda) * r_t) is a first-order linear
+recurrence — full-sequence evaluation uses jax.lax.associative_scan
+(log-depth) on (log_a, b) pairs; on TPU the Pallas kernel
+repro.kernels.rglru_scan implements the chunked VMEM-resident variant
+with this path as its oracle.  Gates are block-diagonal per head, as in
+Griffin (keeps the 9B param count honest).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Init
+from repro.models.sharding import Sharder
+
+RGLRU_C = 8.0
+
+
+def init_rec_block(ini: Init, cfg):
+    D = cfg.d_model
+    W = cfg.resolved_rnn_width
+    H = cfg.n_heads
+    bw = W // H  # block width for block-diagonal gates
+    return {
+        "w_x": ini.fan_in((D, W), ("embed", "rnn")),
+        "w_gate": ini.fan_in((D, W), ("embed", "rnn")),
+        "conv_w": ini.normal((cfg.conv_width, W), ("conv", "rnn"), scale=0.1),
+        "conv_b": ini.zeros((W,), ("rnn",)),
+        "gate_a_w": ini.fan_in((H, bw, bw), ("heads", None, "rnn"), fan_axes=(1,)),
+        "gate_a_b": ini.zeros((H, bw), ("heads", "rnn")),
+        "gate_x_w": ini.fan_in((H, bw, bw), ("heads", None, "rnn"), fan_axes=(1,)),
+        "gate_x_b": ini.zeros((H, bw), ("heads", "rnn")),
+        # Lambda parametrized so a = sigmoid(Lambda) starts near 0.9..0.999
+        "lam": ini.const((W,), ("rnn",), 4.0),
+        "w_out": ini.fan_in((W, D), ("rnn", "embed")),
+    }
+
+
+def causal_conv1d(x, w, b):
+    """Depthwise causal conv. x: (B,S,W); w: (cw,W). Unrolled shifts —
+    cw=4, so 4 shifted multiply-adds (cheap, fusion-friendly)."""
+    cw = w.shape[0]
+    y = jnp.zeros_like(x)
+    for j in range(cw):
+        shift = cw - 1 - j
+        xj = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        y = y + xj * w[j].astype(x.dtype)
+    return y + b.astype(x.dtype)
+
+
+def _block_diag(u, w, b, H):
+    """u: (B,S,W) -> per-head block-diagonal linear, w: (H,bw,bw)."""
+    B, S, W = u.shape
+    uh = u.reshape(B, S, H, W // H)
+    y = jnp.einsum("bshi,hij->bshj", uh, w.astype(u.dtype)) + b.astype(u.dtype)
+    return y.reshape(B, S, W)
+
+
+def _rglru_coeffs(p, u, cfg):
+    """Returns (log_a (B,S,W) f32, b (B,S,W) f32)."""
+    H = cfg.n_heads
+    r = jax.nn.sigmoid(
+        _block_diag(u, p["gate_a_w"], p["gate_a_b"], H).astype(jnp.float32)
+    )
+    gi = jax.nn.sigmoid(
+        _block_diag(u, p["gate_x_w"], p["gate_x_b"], H).astype(jnp.float32)
+    )
+    log_a = -RGLRU_C * r * jax.nn.softplus(p["lam"].astype(jnp.float32))
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    b = mult * gi * u.astype(jnp.float32)
+    return log_a, b
+
+
+def rglru_scan(log_a, b):
+    """Associative scan for h_t = exp(log_a_t) h_{t-1} + b_t over axis 1."""
+
+    def combine(e1, e2):
+        la1, b1 = e1
+        la2, b2 = e2
+        return la1 + la2, jnp.exp(la2) * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (log_a, b), axis=1)
+    return h
+
+
+def rec_forward(p, x, cfg, shd: Sharder, use_pallas: bool = False):
+    """Full-sequence Griffin recurrent mixer. x: (B,S,D) -> (B,S,D)."""
+    dt = jnp.dtype(cfg.dtype)
+    u = jnp.einsum("bsd,dw->bsw", x, p["w_x"].astype(dt))
+    u = shd.act(u, "batch", "seq", "rnn")
+    u = causal_conv1d(u, p["conv_w"], p["conv_b"])
+    log_a, b = _rglru_coeffs(p, u, cfg)
+    if use_pallas:
+        from repro.kernels.rglru_scan import ops as rg_ops
+
+        h = rg_ops.rglru(log_a, b)
+    else:
+        h = rglru_scan(log_a, b)
+    h = h.astype(dt)
+    h = shd.act(h, "batch", "seq", "rnn")
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate"].astype(dt)))
+    y = jnp.einsum("bsw,wd->bsd", h * gate, p["w_out"].astype(dt))
+    return shd.act(y, "batch", "res_seq", "act_embed")
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def init_rec_cache(ini: Init, cfg, batch: int):
+    W = cfg.resolved_rnn_width
+    return {
+        "h": ini.zeros((batch, W), ("batch", "rnn"), dtype=jnp.float32),
+        "conv": ini.zeros(
+            (batch, cfg.conv_width - 1, W), ("batch", None, "rnn"), dtype=jnp.dtype(cfg.dtype)
+        ),
+    }
+
+
+def rec_decode(p, x, cache, cfg, shd: Sharder):
+    """x: (B,1,D). cache: {'h': (B,W) f32, 'conv': (B,cw-1,W)}."""
+    dt = jnp.dtype(cfg.dtype)
+    u = jnp.einsum("bsd,dw->bsw", x, p["w_x"].astype(dt))  # (B,1,W)
+    # conv over [state, u]
+    hist = jnp.concatenate([cache["conv"], u], axis=1)  # (B,cw,W)
+    w = p["conv_w"].astype(dt)
+    u_c = jnp.einsum("bcw,cw->bw", hist, w)[:, None] + p["conv_b"].astype(dt)
+    new_conv = hist[:, 1:]
+    log_a, b = _rglru_coeffs(p, u_c, cfg)
+    h = jnp.exp(log_a[:, 0]) * cache["h"] + b[:, 0]  # (B,W) f32
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate"].astype(dt)))
+    y = jnp.einsum("bsw,wd->bsd", h[:, None].astype(dt) * gate, p["w_out"].astype(dt))
+    return y, {"h": h, "conv": new_conv}
+
+
+def rec_prefill_cache(p, x, cfg, shd: Sharder):
+    """Run the mixer over the full sequence, return final recurrent state
+    and conv tail for subsequent decode."""
+    dt = jnp.dtype(cfg.dtype)
+    u = jnp.einsum("bsd,dw->bsw", x, p["w_x"].astype(dt))
+    u_conv = causal_conv1d(u, p["conv_w"], p["conv_b"])
+    log_a, b = _rglru_coeffs(p, u_conv, cfg)
+    h = rglru_scan(log_a, b)
+    cw = cfg.conv_width
+    return {"h": h[:, -1], "conv": u[:, -(cw - 1) :]}

@@ -1,0 +1,185 @@
+"""Logical-axis sharding: the single place where mesh layout decisions live.
+
+Every parameter and activation is annotated with *logical* axis names
+('embed', 'heads', 'mlp', ...).  A rule table maps logical names to an
+ordered list of *mesh*-axis candidates; ``spec_for`` greedily assigns the
+first candidate that (a) exists in the mesh, (b) is not already used by
+another dim of the same tensor, and (c) divides the dim size.  Indivisible
+or unavailable candidates fall through — e.g. qwen2's 28 heads cannot
+shard over a 16-way model axis, so the 'head_dim' dim (128) picks up the
+model axis instead; XLA then contracts over the sharded head_dim with a
+reduce-scatter/all-reduce.  This keeps ONE rule table valid for every
+assigned architecture and both production meshes.
+
+FSDP: weight 'embed' dims shard over the data axis and are all-gathered
+per layer inside the scan (XLA GSPMD inserts + overlaps the gathers).
+Cross-pod: only the batch uses the 'pod' axis — parameters are replicated
+pod-wise, so the inter-pod links carry gradient all-reduces only (which is
+where optional compression applies, see repro.optim.compression).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+# Candidate lists: each entry is a tuple of mesh axes used jointly for a dim.
+Rules = Dict[str, Tuple[Tuple[str, ...], ...]]
+
+# Default (baseline) rule table used by the dry-run.  Hillclimbs override.
+DEFAULT_RULES: Rules = {
+    # activations
+    "batch": (("pod", "data"), ("data",)),
+    "seq": (),
+    "kv_seq": (),  # overridden to (('data',),) for long-context decode (SP)
+    # Megatron-style sequence-parallel residual stream: between blocks the
+    # (B,S,D) residual is sharded S->model, so each block entry all-gathers
+    # S and each block exit's contracting matmul becomes a reduce-scatter
+    # (instead of an all-reduce) — and the layer-scan carry shrinks 16x.
+    # Only used at block boundaries ('res_seq'); intra-block tensors keep
+    # full S ('seq').
+    "res_seq": (("model",),),
+    "act_embed": (),
+    "act_heads": (("model",),),
+    "act_mlp": (("model",),),
+    "act_vocab": (("model",),),
+    "act_expert": (),
+    "ffn_batch": (),  # hillclimb hooks (see mlp_forward) — default no-op
+    "ffn_embed": (),
+    # parameters
+    "embed": (("data",),),  # FSDP
+    "vocab": (("model",),),
+    "heads": (("model",),),
+    "kv_heads": (("model",),),
+    "head_dim": (("model",),),  # fallback when heads don't divide
+    "mlp": (("model",),),
+    "expert": (),  # baseline: dense dispatch, experts FSDP'd via 'embed'
+    "rnn": (("model",),),
+    "rnn_in": (("data",),),  # FSDP dim of recurrent weights
+    "layers": (),
+    "conv": (),
+    "pos": (),
+}
+
+LONG_CONTEXT_OVERRIDES: Dict[str, Tuple[Tuple[str, ...], ...]] = {
+    # batch=1 cannot shard; put the KV sequence on the data axis instead
+    # (sequence parallelism for the 500k cache).
+    "kv_seq": (("data",), ("model",)),
+}
+
+
+def make_rules(**overrides) -> Rules:
+    rules = dict(DEFAULT_RULES)
+    rules.update(overrides)
+    return rules
+
+
+class ParamLeaf(NamedTuple):
+    """A parameter value bundled with its logical axes at init time."""
+
+    value: Any  # jnp.ndarray | jax.ShapeDtypeStruct
+    axes: Tuple[Optional[str], ...]
+
+
+def is_param_leaf(x) -> bool:
+    return isinstance(x, ParamLeaf)
+
+
+def split_tree(tree):
+    """Split a tree of ParamLeaf into (values, axes) trees."""
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_param_leaf)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_param_leaf)
+    return values, axes
+
+
+def spec_for(
+    shape: Sequence[int],
+    axes: Sequence[Optional[str]],
+    rules: Rules,
+    mesh: Mesh,
+) -> PartitionSpec:
+    """Greedy logical->mesh assignment with divisibility fallback."""
+    assert len(shape) == len(axes), (shape, axes)
+    used: set = set()
+    out = []
+    mesh_axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for dim, name in zip(shape, axes):
+        assigned = None
+        if name is not None:
+            for cand in rules.get(name, ()):
+                if not all(a in mesh_axes for a in cand):
+                    continue
+                if any(a in used for a in cand):
+                    continue
+                size = int(np.prod([mesh_axes[a] for a in cand]))
+                if size > 1 and dim % size == 0:
+                    assigned = cand if len(cand) > 1 else cand[0]
+                    used.update(cand)
+                    break
+        out.append(assigned)
+    # trim trailing Nones for cleanliness
+    while out and out[-1] is None:
+        out.pop()
+    return PartitionSpec(*out)
+
+
+@dataclasses.dataclass
+class Sharder:
+    """Threads mesh+rules through model code.
+
+    ``mesh=None`` (single-device smoke tests) makes every annotation a
+    no-op, so the same model code runs un-meshed on CPU.
+    """
+
+    mesh: Optional[Mesh] = None
+    rules: Rules = dataclasses.field(default_factory=lambda: dict(DEFAULT_RULES))
+
+    def act(self, x, *axes: Optional[str]):
+        """Constrain an activation's sharding by logical axis names.
+
+        An all-None spec is a NO-OP (returning the constraint would force
+        full replication — P() is not "unconstrained" to GSPMD)."""
+        if self.mesh is None:
+            return x
+        spec = spec_for(x.shape, axes, self.rules, self.mesh)
+        if not any(s is not None for s in spec):
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    def param_sharding(self, value, axes) -> NamedSharding:
+        assert self.mesh is not None
+        return NamedSharding(self.mesh, spec_for(value.shape, axes, self.rules, self.mesh))
+
+    def tree_shardings(self, values_tree, axes_tree):
+        """NamedSharding tree for a (values, axes) tree pair.
+
+        Maps over the *axes* tree (whose leaves are tuples of logical axis
+        names — tuples would otherwise be flattened as pytree containers,
+        and None entries dropped) with the values tree alongside.
+        """
+        return jax.tree.map(
+            lambda a, v: self.param_sharding(v, a),
+            axes_tree,
+            values_tree,
+            is_leaf=lambda x: isinstance(x, tuple)
+            and all(isinstance(e, (str, type(None))) for e in x),
+        )
+
+
+def n_kv_virtual(n_heads: int, n_kv: int, model_axis: int) -> int:
+    """Smallest KV-head replication target that (a) is a multiple of n_kv,
+    (b) divides n_heads, and (c) is divisible by the model-axis size, so the
+    KV cache shards cleanly and every device keeps aligned q/kv groups.
+    Falls back to n_kv (no replication) when impossible (e.g. qwen2 28H/4kv
+    on a 16-way axis -> head_dim sharding takes over instead)."""
+    if n_kv % model_axis == 0:
+        return n_kv
+    v = n_kv
+    while v <= n_heads:
+        if v % n_kv == 0 and n_heads % v == 0 and v % model_axis == 0:
+            return v
+        v += n_kv
+    return n_kv

@@ -1,0 +1,330 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, strictly sequential).
+
+mLSTM recurrence (per head, stabilized — xLSTM paper eq. 19-27):
+    m_t = max(logsig(f_t) + m_{t-1}, i_t)
+    C_t = exp(logsig(f_t)+m_{t-1}-m_t) C_{t-1} + exp(i_t - m_t) k_t v_t^T
+    n_t = exp(logsig(f_t)+m_{t-1}-m_t) n_{t-1} + exp(i_t - m_t) k_t
+    h_t = (q_t C_t) / max(|q_t . n_t|, exp(-m_t))
+Full sequences use the *chunkwise* form (quadratic within a chunk,
+recurrent across chunks) — the standard linear-attention trick that keeps
+the S x (dk x dv) state off HBM; the stepwise recurrence is the decode
+path AND the test oracle (tests/test_xlstm.py proves chunkwise == scan).
+
+sLSTM is sequential by construction (memory mixing via block-diagonal
+recurrent weights) — evaluated with lax.scan; that is the architecture's
+documented property, not an implementation shortcut.
+
+d_ff = 0 in the assignment: both blocks carry their own up/down
+projections (mLSTM pre-up x2, sLSTM post gated-FFN x4/3), so no separate
+transformer FFN exists.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Init, group_norm_heads
+from repro.models.sharding import Sharder
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm_block(ini: Init, cfg):
+    D = cfg.d_model
+    F = 2 * D  # projection factor 2
+    H = cfg.n_heads
+    dk = F // H
+    return {
+        "up": ini.fan_in((D, 2, F), ("embed", None, "mlp"), fan_axes=(0,)),
+        "conv_w": ini.normal((cfg.conv_width, F), ("conv", "mlp"), scale=0.1),
+        "conv_b": ini.zeros((F,), ("mlp",)),
+        "wq": ini.fan_in((F, H, dk), ("mlp", "heads", "head_dim"), fan_axes=(0,)),
+        "wk": ini.fan_in((F, H, dk), ("mlp", "heads", "head_dim"), fan_axes=(0,)),
+        "wv": ini.fan_in((F, H, dk), ("mlp", "heads", "head_dim"), fan_axes=(0,)),
+        "w_i": ini.fan_in((F, H), ("mlp", "heads")),
+        "b_i": ini.zeros((H,), ("heads",)),
+        "w_f": ini.fan_in((F, H), ("mlp", "heads")),
+        "b_f": ini.const((H,), ("heads",), 3.0),  # open forget gates at init
+        "gn_scale": ini.ones((H, dk), ("heads", "head_dim")),
+        "down": ini.fan_in((F, D), ("mlp", "embed")),
+    }
+
+
+def mlstm_chunkwise(q, k, v, i_pre, f_pre, chunk: int, state=None, unroll: bool = False):
+    """q,k,v: (B,S,H,d); i_pre,f_pre: (B,S,H). Returns (h (B,S,H,d), state).
+
+    state = (C (B,H,d,d), n (B,H,d), m (B,H)).  unroll=True replaces the
+    cross-chunk lax.scan with a python loop (dry-run cost probe).
+    """
+    B, S, H, d = q.shape
+    L = min(chunk, S)
+    assert S % L == 0, (S, L)
+    nc = S // L
+    scale = d**-0.5
+
+    # (B,H,S,...) layout, f32 gates
+    qT = q.transpose(0, 2, 1, 3).astype(jnp.float32) * scale
+    kT = k.transpose(0, 2, 1, 3).astype(jnp.float32)
+    vT = v.transpose(0, 2, 1, 3).astype(jnp.float32)
+    ig = i_pre.transpose(0, 2, 1).astype(jnp.float32)
+    lg = jax.nn.log_sigmoid(f_pre.transpose(0, 2, 1).astype(jnp.float32))
+
+    qc = qT.reshape(B, H, nc, L, d).transpose(2, 0, 1, 3, 4)
+    kc = kT.reshape(B, H, nc, L, d).transpose(2, 0, 1, 3, 4)
+    vc = vT.reshape(B, H, nc, L, d).transpose(2, 0, 1, 3, 4)
+    ic = ig.reshape(B, H, nc, L).transpose(2, 0, 1, 3)
+    gc = lg.reshape(B, H, nc, L).transpose(2, 0, 1, 3)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, d, d), jnp.float32)
+        n0 = jnp.zeros((B, H, d), jnp.float32)
+        m0 = jnp.zeros((B, H), jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    tri = jnp.tril(jnp.ones((L, L), bool))
+
+    def chunk_step(carry, xs):
+        C, n, m = carry
+        qj, kj, vj, ij, gj = xs
+        Fc = jnp.cumsum(gj, axis=-1)  # (B,H,L) inclusive log-decay
+        A = jax.lax.cummax(ij - Fc, axis=2)  # (B,H,L)
+        m_loc = Fc + jnp.maximum(m[..., None], A)  # stabilizer per position
+        inter_w = jnp.exp(Fc + m[..., None] - m_loc)  # (B,H,L)
+
+        # intra-chunk decay-gate matrix W[t,s] = exp(F_t - F_s + i_s - m_t)
+        lgm = (
+            Fc[..., :, None]
+            - Fc[..., None, :]
+            + ij[..., None, :]
+            - m_loc[..., :, None]
+        )
+        Wm = jnp.where(tri, jnp.exp(lgm), 0.0)  # (B,H,L,L)
+
+        qk = jnp.einsum("bhtd,bhsd->bhts", qj, kj)
+        h_intra = jnp.einsum("bhts,bhts,bhsv->bhtv", qk, Wm, vj)
+        h_inter = jnp.einsum("bhtd,bhdv->bhtv", qj, C) * inter_w[..., None]
+        num = h_intra + h_inter
+
+        n_loc = jnp.einsum("bhts,bhsd->bhtd", Wm, kj) + n[:, :, None] * inter_w[
+            ..., None
+        ]
+        qn = jnp.einsum("bhtd,bhtd->bht", qj, n_loc)
+        denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_loc))
+        h = num / denom[..., None]
+
+        # end-of-chunk state
+        FL = Fc[..., -1]
+        m_next = FL + jnp.maximum(m, A[..., -1])
+        decay = jnp.exp(FL + m - m_next)
+        wts = jnp.exp(FL[..., None] - Fc + ij - m_next[..., None])  # (B,H,L)
+        C_next = decay[..., None, None] * C + jnp.einsum(
+            "bhs,bhsd,bhsv->bhdv", wts, kj, vj
+        )
+        n_next = decay[..., None] * n + jnp.einsum("bhs,bhsd->bhd", wts, kj)
+        return (C_next, n_next, m_next), h
+
+    if unroll:
+        carry = (C0, n0, m0)
+        hs = []
+        for j in range(nc):
+            carry, hj = chunk_step(carry, (qc[j], kc[j], vc[j], ic[j], gc[j]))
+            hs.append(hj)
+        (C, n, m), hc = carry, jnp.stack(hs)
+    else:
+        (C, n, m), hc = jax.lax.scan(chunk_step, (C0, n0, m0), (qc, kc, vc, ic, gc))
+    h = hc.transpose(1, 2, 0, 3, 4).reshape(B, H, S, d).transpose(0, 2, 1, 3)
+    return h, (C, n, m)
+
+
+def mlstm_step(q, k, v, i_pre, f_pre, state):
+    """Single decode step. q,k,v: (B,H,d); i/f_pre: (B,H)."""
+    C, n, m = state
+    d = q.shape[-1]
+    qf = q.astype(jnp.float32) * (d**-0.5)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    lf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+    ii = i_pre.astype(jnp.float32)
+    m2 = jnp.maximum(lf + m, ii)
+    fw = jnp.exp(lf + m - m2)
+    iw = jnp.exp(ii - m2)
+    C2 = fw[..., None, None] * C + iw[..., None, None] * (
+        kf[..., :, None] * vf[..., None, :]
+    )
+    n2 = fw[..., None] * n + iw[..., None] * kf
+    num = jnp.einsum("bhd,bhdv->bhv", qf, C2)
+    qn = jnp.einsum("bhd,bhd->bh", qf, n2)
+    h = num / jnp.maximum(jnp.abs(qn), jnp.exp(-m2))[..., None]
+    return h, (C2, n2, m2)
+
+
+def _mlstm_qkvif(p, x_in, cfg, decode_conv_state=None):
+    """Shared projection path. x_in: (B,S,F) post-up-projection conv input.
+    Returns (q,k,v (B,S,H,d), i,f (B,S,H), new_conv_state)."""
+    from repro.models.recurrent import causal_conv1d
+
+    dt = x_in.dtype
+    if decode_conv_state is None:
+        c = causal_conv1d(x_in, p["conv_w"], p["conv_b"])
+        new_state = None
+    else:
+        hist = jnp.concatenate([decode_conv_state, x_in], axis=1)
+        c = (
+            jnp.einsum("bcw,cw->bw", hist, p["conv_w"].astype(dt))[:, None]
+            + p["conv_b"].astype(dt)
+        )
+        new_state = hist[:, 1:]
+    c = jax.nn.silu(c)
+    q = jnp.einsum("bsf,fhd->bshd", c, p["wq"].astype(dt))
+    k = jnp.einsum("bsf,fhd->bshd", c, p["wk"].astype(dt))
+    v = jnp.einsum("bsf,fhd->bshd", x_in, p["wv"].astype(dt))
+    i_pre = jnp.einsum("bsf,fh->bsh", c, p["w_i"].astype(dt)) + p["b_i"].astype(dt)
+    f_pre = jnp.einsum("bsf,fh->bsh", c, p["w_f"].astype(dt)) + p["b_f"].astype(dt)
+    return q, k, v, i_pre, f_pre, new_state
+
+
+def mlstm_forward(p, x, cfg, shd: Sharder):
+    """Full-sequence mLSTM mixer. x: (B,S,D) -> (B,S,D)."""
+    dt = jnp.dtype(cfg.dtype)
+    B, S, D = x.shape
+    H = cfg.n_heads
+    up = jnp.einsum("bsd,dcf->bscf", x, p["up"].astype(dt))
+    z, x_in = up[:, :, 0], up[:, :, 1]
+    x_in = shd.act(x_in, "batch", "seq", "act_mlp")
+    q, k, v, i_pre, f_pre, _ = _mlstm_qkvif(p, x_in, cfg)
+    h, _ = mlstm_chunkwise(
+        q, k, v, i_pre, f_pre, cfg.mlstm_chunk, unroll=not cfg.scan_layers
+    )
+    h = group_norm_heads(h.astype(dt), p["gn_scale"])
+    hf = h.reshape(B, S, -1)
+    y = jnp.einsum("bsf,fd->bsd", hf * jax.nn.silu(z), p["down"].astype(dt))
+    return shd.act(y, "batch", "res_seq", "act_embed")
+
+
+def init_mlstm_cache(ini: Init, cfg, batch: int):
+    F = 2 * cfg.d_model
+    H = cfg.n_heads
+    d = F // H
+    return {
+        "C": ini.zeros((batch, H, d, d), ("batch", "heads", "head_dim", None), dtype=jnp.float32),
+        "n": ini.zeros((batch, H, d), ("batch", "heads", "head_dim"), dtype=jnp.float32),
+        "m": ini.zeros((batch, H), ("batch", "heads"), dtype=jnp.float32),
+        "conv": ini.zeros(
+            (batch, cfg.conv_width - 1, F), ("batch", None, "act_mlp"), dtype=jnp.dtype(cfg.dtype)
+        ),
+    }
+
+
+def mlstm_decode(p, x, cache, cfg, shd: Sharder):
+    dt = jnp.dtype(cfg.dtype)
+    B = x.shape[0]
+    up = jnp.einsum("bsd,dcf->bscf", x, p["up"].astype(dt))
+    z, x_in = up[:, :, 0], up[:, :, 1]
+    q, k, v, i_pre, f_pre, new_conv = _mlstm_qkvif(p, x_in, cfg, cache["conv"])
+    h, (C, n, m) = mlstm_step(
+        q[:, 0], k[:, 0], v[:, 0], i_pre[:, 0], f_pre[:, 0], (cache["C"], cache["n"], cache["m"])
+    )
+    h = group_norm_heads(h.astype(dt)[:, None], p["gn_scale"])  # (B,1,H,d)
+    hf = h.reshape(B, 1, -1)
+    y = jnp.einsum("bsf,fd->bsd", hf * jax.nn.silu(z), p["down"].astype(dt))
+    return y, {"C": C, "n": n, "m": m, "conv": new_conv}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def _slstm_ffn_dim(D: int) -> int:
+    f = (4 * D) // 3
+    return (f + 127) // 128 * 128
+
+
+def init_slstm_block(ini: Init, cfg):
+    D = cfg.d_model
+    H = cfg.n_heads
+    dh = D // H
+    Fs = _slstm_ffn_dim(D)
+    return {
+        "w": ini.fan_in((D, 4, H, dh), ("embed", None, "heads", "head_dim"), fan_axes=(0,)),
+        "r": ini.fan_in((4, H, dh, dh), (None, "heads", None, "head_dim"), fan_axes=(2,)),
+        "b": ini.zeros((4, H, dh), (None, "heads", "head_dim")),
+        "gn_scale": ini.ones((H, dh), ("heads", "head_dim")),
+        "ffn_up": ini.fan_in((D, 2, Fs), ("embed", None, "mlp"), fan_axes=(0,)),
+        "ffn_down": ini.fan_in((Fs, D), ("mlp", "embed")),
+    }
+
+
+def slstm_cell(wx, state, r, ):
+    """One step. wx: (B,4,H,dh) input preacts; state: (c,n,h,m) each (B,H,dh)."""
+    c, n, h, m = state
+    rec = jnp.einsum("bhd,ghde->bghe", h, r.astype(h.dtype))  # (B,4,H,dh)
+    pre = (wx + rec).astype(jnp.float32)
+    z = jnp.tanh(pre[:, 0])
+    i_pre = pre[:, 1]
+    f_pre = pre[:, 2]
+    o = jax.nn.sigmoid(pre[:, 3])
+    lf = jax.nn.log_sigmoid(f_pre)
+    m2 = jnp.maximum(lf + m, i_pre)
+    iw = jnp.exp(i_pre - m2)
+    fw = jnp.exp(lf + m - m2)
+    c2 = fw * c + iw * z
+    n2 = fw * n + iw
+    h2 = o * c2 / jnp.maximum(n2, 1e-6)
+    return (c2, n2, h2, m2)
+
+
+def slstm_sequence(p, x, cfg, state):
+    """x: (B,S,D). Sequential scan over S. Returns (h_seq (B,S,H,dh), state)."""
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    dt = x.dtype
+    wx = jnp.einsum("bsd,dghe->bsghe", x, p["w"].astype(dt)) + p["b"].astype(dt)
+
+    def step(carry, wx_t):
+        new = slstm_cell(wx_t, carry, p["r"])
+        return new, new[2].astype(dt)  # bf16 ys: halves the saved timeline
+
+    state, hs = jax.lax.scan(step, state, wx.transpose(1, 0, 2, 3, 4))
+    return hs.transpose(1, 0, 2, 3), state  # (B,S,H,dh)
+
+
+def slstm_init_state(ini: Init, cfg, batch: int):
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    z = lambda: ini.zeros((batch, H, dh), ("batch", "heads", "head_dim"), dtype=jnp.float32)
+    return {"c": z(), "n": z(), "h": z(), "m": z()}
+
+
+def _slstm_out(p, hs, x, cfg, shd):
+    """Group-norm heads, gated FFN, residual-ready output."""
+    dt = jnp.dtype(cfg.dtype)
+    B, S = hs.shape[:2]
+    h = group_norm_heads(hs.astype(dt), p["gn_scale"]).reshape(B, S, -1)
+    up = jnp.einsum("bsd,dcf->bscf", h, p["ffn_up"].astype(dt))
+    g, u = up[:, :, 0], up[:, :, 1]
+    y = jnp.einsum("bsf,fd->bsd", jax.nn.gelu(g) * u, p["ffn_down"].astype(dt))
+    return shd.act(y, "batch", "res_seq", "act_embed")
+
+
+def slstm_forward(p, x, cfg, shd: Sharder):
+    B = x.shape[0]
+    H, dh = cfg.n_heads, cfg.d_model // cfg.n_heads
+    z = jnp.zeros((B, H, dh), jnp.float32)
+    hs, _ = slstm_sequence(p, x, cfg, (z, z, z, z))
+    return _slstm_out(p, hs, x, cfg, shd)
+
+
+def slstm_decode(p, x, cache, cfg, shd: Sharder):
+    state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    hs, state = slstm_sequence(p, x, cfg, state)
+    y = _slstm_out(p, hs, x, cfg, shd)
+    c, n, h, m = state
+    return y, {"c": c, "n": n, "h": h, "m": m}

@@ -1,0 +1,4 @@
+from repro.optim import adamw, compression
+from repro.optim.adamw import AdamWConfig
+
+__all__ = ["adamw", "compression", "AdamWConfig"]

@@ -1,0 +1,86 @@
+"""AdamW with decoupled weight decay + global-norm clipping + LR schedule.
+
+Purely functional; optimizer state (m, v) is a pytree mirroring the
+parameters, so it inherits each parameter's sharding (FSDP'd params =>
+FSDP'd optimizer state — the ZeRO-style memory story).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 200
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(ocfg: AdamWConfig, count):
+    """Linear warmup then cosine decay to min_lr_ratio."""
+    count = count.astype(jnp.float32)
+    warm = count / jnp.maximum(ocfg.warmup_steps, 1)
+    prog = jnp.clip(
+        (count - ocfg.warmup_steps) / jnp.maximum(ocfg.decay_steps - ocfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = ocfg.min_lr_ratio + (1 - ocfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return ocfg.lr * jnp.where(count < ocfg.warmup_steps, warm, cos)
+
+
+def init(params) -> Dict[str, Any]:
+    zeros = lambda p: jax.tree.map(jnp.zeros_like, p)
+    return {
+        "m": zeros(params),
+        "v": zeros(params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gnorm
+
+
+def update(grads, state, params, ocfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, ocfg.clip_norm)
+    count = state["count"] + 1
+    lr = schedule(ocfg, count)
+    b1, b2 = ocfg.b1, ocfg.b2
+    bc1 = 1 - b1 ** count.astype(jnp.float32)
+    bc2 = 1 - b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        pf = p.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m2 / bc1
+        vh = v2 / bc2
+        step = mh / (jnp.sqrt(vh) + ocfg.eps) + ocfg.weight_decay * pf
+        return (pf - lr * step).astype(p.dtype), m2, v2
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_state = {"m": new_m, "v": new_v, "count": count}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

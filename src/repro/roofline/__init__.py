@@ -1,0 +1,20 @@
+from repro.roofline.hlo_analysis import parse_collectives, summarize_collectives
+from repro.roofline.roofline import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    Roofline,
+    compute_roofline,
+    model_flops,
+)
+
+__all__ = [
+    "parse_collectives",
+    "summarize_collectives",
+    "Roofline",
+    "compute_roofline",
+    "model_flops",
+    "PEAK_FLOPS",
+    "HBM_BW",
+    "ICI_BW",
+]

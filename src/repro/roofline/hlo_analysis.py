@@ -1,0 +1,245 @@
+"""Collective-traffic extraction from compiled SPMD HLO text.
+
+``cost_analysis()`` does not expose collective bytes, so we parse the
+per-device HLO module: every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op contributes its *operand* bytes
+(derived from the printed result type and the replica-group size), and a
+ring-model "wire bytes" estimate:
+
+    all-reduce        2 (n-1)/n * operand
+    all-gather        (n-1)/n   * result        (result = n * operand)
+    reduce-scatter    (n-1)/n   * operand       (operand = n * result)
+    all-to-all        (n-1)/n   * operand
+    collective-permute  1.0     * operand
+
+Async pairs (`-start` / `-done`) are counted once, at the start op.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_V1_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    result_bytes: int
+    operand_bytes: int
+    wire_bytes: float
+    group_size: int
+    line: str
+    computation: str = "ENTRY"
+    multiplier: float = 1.0
+
+
+# ---------------------------------------------------------------------------
+# Computation-multiplier analysis: XLA prints each while body ONCE, but it
+# executes trip-count times.  We reconstruct per-computation execution
+# multiplicity so collective traffic inside lax.scan bodies is weighted
+# correctly (compute costs use the unrolled probe instead — see dryrun).
+# ---------------------------------------------------------------------------
+
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\{\s*$")
+_WHILE_RE = re.compile(r"while\(.*?\),.*?condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:to_apply|calls)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TF_RE = re.compile(r"true_computation=%?([\w.\-]+),\s*false_computation=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def split_computations(hlo_text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    entry_name = None
+    for line in hlo_text.splitlines():
+        m = _COMP_HDR_RE.match(line)
+        if m:
+            cur = m.group(2)
+            comps[cur] = []
+            if m.group(1):
+                entry_name = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    if entry_name:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    consts = [int(c) for l in cond_lines for c in _CONST_RE.findall(l)]
+    return max(consts) if consts else 1
+
+
+def computation_multipliers(hlo_text: str) -> Dict[str, float]:
+    comps = split_computations(hlo_text)
+    entry = comps.get("__entry__")
+    if entry is None:
+        return {}
+    # name of entry computation
+    entry_names = [k for k, v in comps.items() if v is entry and k != "__entry__"]
+    mult: Dict[str, float] = {n: 1.0 for n in entry_names}
+    work = list(entry_names)
+    seen = set()
+    while work:
+        name = work.pop()
+        if name in seen:
+            continue
+        seen.add(name)
+        m = mult.get(name, 1.0)
+        for line in comps.get(name, ()):
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                trips = _trip_count(comps.get(cond, []))
+                for child, cm in ((cond, m * (trips + 1)), (body, m * trips)):
+                    if cm > mult.get(child, 0.0):
+                        mult[child] = cm
+                        seen.discard(child)
+                    work.append(child)
+                continue
+            for cm_name in _CALLS_RE.findall(line):
+                if cm_name in comps and m > mult.get(cm_name, 0.0):
+                    mult[cm_name] = m
+                    seen.discard(cm_name)
+                    work.append(cm_name)
+            bm = _BRANCHES_RE.search(line)
+            names = []
+            if bm:
+                names = [s.strip().lstrip("%") for s in bm.group(1).split(",")]
+            tf = _TF_RE.search(line)
+            if tf:
+                names += [tf.group(1), tf.group(2)]
+            for child in names:
+                if child in comps and m > mult.get(child, 0.0):
+                    mult[child] = m
+                    seen.discard(child)
+                    work.append(child)
+    return mult
+
+
+def _tensor_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _TYPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_V2_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_V1_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def parse_collectives(hlo_text: str, weighted: bool = True) -> List[CollectiveOp]:
+    ops: List[CollectiveOp] = []
+    mult = computation_multipliers(hlo_text) if weighted else {}
+    cur_comp = "ENTRY"
+    for line in hlo_text.splitlines():
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr:
+            cur_comp = hdr.group(2)
+            continue
+        ls = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", ls)
+        if not m:
+            continue
+        result_type, opname = m.group(1), m.group(2)
+        kind = None
+        for c in COLLECTIVES:
+            if opname == c or opname == c + "-start":
+                kind = c
+                break
+        if kind is None:
+            continue
+        if opname.endswith("-done"):
+            continue
+        n = max(_group_size(ls), 1)
+        rb = _tensor_bytes(result_type)
+        if opname.endswith("-start") and result_type.startswith("("):
+            # tuple (operand_alias, destination, ...): use the largest
+            parts = [p for p in re.findall(r"\w+\[[\d,]*\]", result_type)]
+            rb = max((_tensor_bytes(p) for p in parts), default=rb)
+        if kind == "all-gather":
+            operand = rb // n if n else rb
+            wire = rb * (n - 1) / max(n, 1)
+        elif kind == "reduce-scatter":
+            operand = rb * n
+            wire = operand * (n - 1) / max(n, 1)
+        elif kind == "all-reduce":
+            operand = rb
+            wire = 2.0 * rb * (n - 1) / max(n, 1)
+        elif kind == "all-to-all":
+            operand = rb
+            wire = rb * (n - 1) / max(n, 1)
+        else:  # collective-permute
+            operand = rb
+            wire = float(rb)
+        w = mult.get(cur_comp, 1.0) if weighted else 1.0
+        ops.append(CollectiveOp(kind, rb, operand, wire, n, ls[:160], cur_comp, w))
+    return ops
+
+
+def summarize_collectives(hlo_text: str, weighted: bool = True) -> Dict:
+    """Collective traffic summary; with weighted=True each op's bytes are
+    multiplied by its computation's execution count (while trip counts)."""
+    ops = parse_collectives(hlo_text, weighted=weighted)
+    by_kind: Dict[str, Dict] = defaultdict(lambda: {"count": 0, "operand_bytes": 0, "wire_bytes": 0.0})
+    cross_slow = 0.0  # groups of size 2 on the pod axis, or spanning >256
+    for op in ops:
+        d = by_kind[op.kind]
+        d["count"] += op.multiplier
+        d["operand_bytes"] += op.operand_bytes * op.multiplier
+        d["wire_bytes"] += op.wire_bytes * op.multiplier
+        if op.group_size in (2, 512) or op.group_size > 256:
+            cross_slow += op.wire_bytes * op.multiplier
+    total_operand = sum(d["operand_bytes"] for d in by_kind.values())
+    total_wire = sum(d["wire_bytes"] for d in by_kind.values())
+    return {
+        "by_kind": dict(by_kind),
+        "n_ops": len(ops),
+        "operand_bytes": total_operand,
+        "wire_bytes": total_wire,
+        "cross_pod_wire_bytes": cross_slow,
+    }
+
+
+def count_remat_duplication(hlo_text: str) -> Dict[str, int]:
+    """Rough remat indicator: count fusion/dot ops (duplicated op names
+    signal recompute inserted by checkpointing)."""
+    dots = len(re.findall(r"=\s*\S+\s+dot\(", hlo_text))
+    fusions = len(re.findall(r"=\s*\S+\s+fusion\(", hlo_text))
+    return {"dot_ops": dots, "fusion_ops": fusions}

@@ -1,0 +1,68 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+Convention (stated once, used everywhere): ``cost_analysis()`` on the
+compiled SPMD executable reports the PER-DEVICE program, so each term is
+per-device time and the chips-denominator in the task formulas is already
+applied.  MODEL_FLOPS is the textbook useful work (6·N·D train,
+2·N·D forward) divided by chip count for comparability.
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops_per_dev: float
+    hlo_flops_per_dev: float
+    useful_ratio: float
+    step_time_s: float  # max of the three (no-overlap bound)
+    mfu: float  # model_flops / (step_time * PEAK)
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def compute_roofline(
+    cost: Dict,
+    collective_wire_bytes: float,
+    model_flops_total: float,
+    n_chips: int,
+) -> Roofline:
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = collective_wire_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    model_dev = model_flops_total / max(n_chips, 1)
+    step = max(compute_s, memory_s, collective_s)
+    return Roofline(
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops_per_dev=model_dev,
+        hlo_flops_per_dev=flops_dev,
+        useful_ratio=(model_dev / flops_dev) if flops_dev else 0.0,
+        step_time_s=step,
+        mfu=(model_dev / (step * PEAK_FLOPS)) if step else 0.0,
+    )
+
+
+def model_flops(kind: str, n_active_params: int, tokens: int) -> float:
+    """6ND for train (fwd+bwd), 2ND for forward-only (prefill/decode)."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active_params * tokens

@@ -1,0 +1,215 @@
+"""Delta KV store (the paper's Cassandra role, §4.4).
+
+Keys are ``DeltaKey(tsid, sid, did, pid)``; the **placement key**
+``(tsid, sid)`` maps a chunk to a storage node, so any large fetch
+(snapshot = all sids of one tsid; node version = one sid across tsids)
+spreads over the whole cluster — the paper's equitable-distribution
+property.  Within a chunk, micro-deltas are clustered by the full delta
+key, i.e. all ``pid`` of one ``did`` stored contiguously (paper layout
+point 5): the FileBackend writes one blob per placement key.
+
+Replication factor r places a chunk on r consecutive storage nodes;
+``fail_node``/``heal_node`` inject failures — reads fall over to live
+replicas, writes raise only if *all* replicas are down.  A thread-pooled
+``multiget`` models the paper's parallel fetch factor ``c``.
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import dataclasses
+import os
+import threading
+from collections import defaultdict
+from pathlib import Path
+from typing import Dict, Iterable, List, NamedTuple, Optional, Tuple
+
+import numpy as np
+
+from repro.storage import serialize
+
+
+class DeltaKey(NamedTuple):
+    tsid: int
+    sid: int
+    did: str  # e.g. 'E:<bucket>' eventlist, 'S:<level>:<idx>' derived snapshot
+    pid: int  # micro-delta partition id (== sid-local partition index)
+
+    @property
+    def placement(self) -> Tuple[int, int]:
+        return (self.tsid, self.sid)
+
+
+class StorageNodeDown(RuntimeError):
+    pass
+
+
+class KeyMissing(KeyError):
+    pass
+
+
+@dataclasses.dataclass
+class StoreStats:
+    reads: int = 0
+    writes: int = 0
+    bytes_read: int = 0
+    bytes_written: int = 0
+    failovers: int = 0
+
+    def reset(self):
+        self.reads = self.writes = 0
+        self.bytes_read = self.bytes_written = 0
+        self.failovers = 0
+
+
+class DeltaStore:
+    """m storage nodes, replication r, mem or file backend."""
+
+    def __init__(self, m: int = 4, r: int = 1, backend: str = "mem",
+                 root: Optional[str] = None):
+        assert 1 <= r <= m
+        self.m, self.r = m, r
+        self.backend = backend
+        self.down: set = set()
+        self.stats = StoreStats()
+        self._lock = threading.Lock()
+        if backend == "mem":
+            self._mem: List[Dict] = [dict() for _ in range(m)]
+        else:
+            assert root is not None
+            self.root = Path(root)
+            for i in range(m):
+                (self.root / f"node{i}").mkdir(parents=True, exist_ok=True)
+
+    # ---- placement ----
+    def replicas(self, key: DeltaKey) -> List[int]:
+        tsid, sid = key.placement
+        h = (tsid * 0x9E3779B1 + sid * 0x85EBCA77) % self.m
+        return [(h + j) % self.m for j in range(self.r)]
+
+    # ---- failure injection ----
+    def fail_node(self, i: int):
+        self.down.add(i)
+
+    def heal_node(self, i: int):
+        self.down.discard(i)
+
+    # ---- io ----
+    def _chunk_path(self, node: int, placement) -> Path:
+        tsid, sid = placement
+        return self.root / f"node{node}" / f"ts{tsid}_s{sid}.tgi"
+
+    def put(self, key: DeltaKey, arrays: Dict[str, np.ndarray]):
+        blob = serialize.dumps(arrays)
+        wrote = False
+        for node in self.replicas(key):
+            if node in self.down:
+                continue
+            if self.backend == "mem":
+                self._mem[node][key] = blob
+            else:
+                # chunk file per placement key: micro-deltas clustered by
+                # delta key (append-style record: key line + length + blob)
+                path = self._chunk_path(node, key.placement)
+                rec_key = f"{key.did}|{key.pid}".encode()
+                with self._lock, open(path, "ab") as f:
+                    f.write(len(rec_key).to_bytes(4, "little"))
+                    f.write(rec_key)
+                    f.write(len(blob).to_bytes(8, "little"))
+                    f.write(blob)
+            wrote = True
+        if not wrote:
+            raise StorageNodeDown(f"all replicas down for {key}")
+        with self._lock:
+            self.stats.writes += 1
+            self.stats.bytes_written += len(blob) * self.r
+
+    def _read_node(self, node: int, key: DeltaKey) -> bytes:
+        if self.backend == "mem":
+            if key not in self._mem[node]:
+                raise KeyMissing(key)
+            return self._mem[node][key]
+        path = self._chunk_path(node, key.placement)
+        if not path.exists():
+            raise KeyMissing(key)
+        want = f"{key.did}|{key.pid}".encode()
+        with open(path, "rb") as f:
+            data = f.read()
+        off = 0
+        found = None
+        while off < len(data):
+            klen = int.from_bytes(data[off : off + 4], "little")
+            off += 4
+            k = data[off : off + klen]
+            off += klen
+            blen = int.from_bytes(data[off : off + 8], "little")
+            off += 8
+            if k == want:
+                found = data[off : off + blen]  # last write wins
+            off += blen
+        if found is None:
+            raise KeyMissing(key)
+        return found
+
+    def get(self, key: DeltaKey) -> Dict[str, np.ndarray]:
+        last_err: Exception = KeyMissing(key)
+        for j, node in enumerate(self.replicas(key)):
+            if node in self.down:
+                with self._lock:
+                    self.stats.failovers += j > 0 or self.r == 1
+                continue
+            try:
+                blob = self._read_node(node, key)
+            except KeyMissing as e:
+                last_err = e
+                continue
+            with self._lock:
+                self.stats.reads += 1
+                self.stats.bytes_read += len(blob)
+                if j > 0:
+                    self.stats.failovers += 1
+            return serialize.loads(blob)
+        if isinstance(last_err, KeyMissing):
+            raise last_err
+        raise StorageNodeDown(f"no live replica for {key}")
+
+    def multiget(self, keys: Iterable[DeltaKey], c: int = 1) -> Dict[DeltaKey, Dict]:
+        """Parallel fetch with c clients (paper Fig. 11/12's c parameter).
+        Keys are routed per storage node so each client drains distinct
+        nodes — the paper's direct QP->storage parallelism."""
+        keys = list(keys)
+        if c <= 1:
+            return {k: self.get(k) for k in keys}
+        out: Dict[DeltaKey, Dict] = {}
+        with cf.ThreadPoolExecutor(max_workers=c) as ex:
+            futs = {ex.submit(self.get, k): k for k in keys}
+            for fut in cf.as_completed(futs):
+                out[futs[fut]] = fut.result()
+        return out
+
+    def keys_for_placement(self, tsid: int, sid: int) -> List[DeltaKey]:
+        """Enumerate stored micro-delta keys under one placement chunk."""
+        if self.backend == "mem":
+            ks = set()
+            for node in range(self.m):
+                for k in self._mem[node]:
+                    if k.placement == (tsid, sid):
+                        ks.add(k)
+            return sorted(ks)
+        ks = set()
+        for node in range(self.m):
+            path = self._chunk_path(node, (tsid, sid))
+            if not path.exists():
+                continue
+            with open(path, "rb") as f:
+                data = f.read()
+            off = 0
+            while off < len(data):
+                klen = int.from_bytes(data[off : off + 4], "little")
+                off += 4
+                k = data[off : off + klen].decode()
+                off += klen
+                blen = int.from_bytes(data[off : off + 8], "little")
+                off += 8 + blen
+                did, pid = k.rsplit("|", 1)
+                ks.add(DeltaKey(tsid, sid, did, int(pid)))
+        return sorted(ks)

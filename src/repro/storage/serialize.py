@@ -1,0 +1,67 @@
+"""Fixed-layout binary (de)serialization for delta payloads.
+
+The paper pickles python objects into Cassandra blobs; we use a typed,
+versioned header + raw little-endian arrays — mmap-friendly, zero-copy on
+read, and byte-stable (required by the checkpoint-store integrity hashes).
+"""
+from __future__ import annotations
+
+import io
+import struct
+from typing import Dict
+
+import numpy as np
+
+MAGIC = b"TGI1"
+_DT_CODE = {
+    np.dtype(np.bool_): 0, np.dtype(np.int8): 1, np.dtype(np.int16): 2,
+    np.dtype(np.int32): 3, np.dtype(np.int64): 4, np.dtype(np.float32): 5,
+    np.dtype(np.float64): 6, np.dtype(np.uint8): 7, np.dtype(np.uint32): 8,
+    np.dtype(np.bfloat16) if hasattr(np, "bfloat16") else np.dtype(np.void): 9,
+}
+_CODE_DT = {v: k for k, v in _DT_CODE.items()}
+
+
+def dumps(arrays: Dict[str, np.ndarray]) -> bytes:
+    """Serialize a dict of ndarrays."""
+    buf = io.BytesIO()
+    buf.write(MAGIC)
+    buf.write(struct.pack("<I", len(arrays)))
+    for name, arr in sorted(arrays.items()):
+        arr = np.ascontiguousarray(arr)
+        nb = name.encode()
+        dt = np.dtype(arr.dtype)
+        if dt not in _DT_CODE:  # e.g. ml_dtypes.bfloat16 — raw-byte fallback
+            raw = arr.view(np.uint8 if arr.dtype.itemsize == 1 else np.uint16)
+            dt = raw.dtype
+            arr = raw
+        buf.write(struct.pack("<H", len(nb)))
+        buf.write(nb)
+        buf.write(struct.pack("<BB", _DT_CODE[dt], arr.ndim))
+        buf.write(struct.pack(f"<{arr.ndim}q", *arr.shape))
+        buf.write(arr.tobytes())
+    return buf.getvalue()
+
+
+def loads(data: bytes) -> Dict[str, np.ndarray]:
+    buf = memoryview(data)
+    assert bytes(buf[:4]) == MAGIC, "bad TGI block"
+    (n,) = struct.unpack_from("<I", buf, 4)
+    off = 8
+    out: Dict[str, np.ndarray] = {}
+    for _ in range(n):
+        (ln,) = struct.unpack_from("<H", buf, off)
+        off += 2
+        name = bytes(buf[off : off + ln]).decode()
+        off += ln
+        code, ndim = struct.unpack_from("<BB", buf, off)
+        off += 2
+        shape = struct.unpack_from(f"<{ndim}q", buf, off)
+        off += 8 * ndim
+        dt = _CODE_DT[code]
+        count = int(np.prod(shape)) if ndim else 1
+        nbytes = count * dt.itemsize
+        arr = np.frombuffer(buf, dtype=dt, count=count, offset=off).reshape(shape)
+        off += nbytes
+        out[name] = arr
+    return out

@@ -1,0 +1,4 @@
+from repro.taf import analytics, operators
+from repro.taf.son import SoN, SoTS, build_son, build_sots
+
+__all__ = ["analytics", "operators", "SoN", "SoTS", "build_son", "build_sots"]

@@ -1,0 +1,264 @@
+"""Temporal graph operators (paper §5.1, operators 1-9).
+
+The operand is a SoN/SoTS; operators are vectorized over the node axis
+(vmap/shard_map on device — see taf.exec — or numpy on host).  The two
+evaluation styles the paper benchmarks (Fig. 17):
+
+* ``node_compute_temporal``: re-evaluate f on every materialized version
+  — O(N·T);
+* ``node_compute_delta``: evaluate f once on the initial state, then fold
+  f_delta over events with carried auxiliary state — O(N+T).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.events import (
+    EDGE_ADD,
+    EDGE_DEL,
+    EATTR_SET,
+    NATTR_SET,
+    NODE_ADD,
+    NODE_DEL,
+)
+from repro.core.snapshot import GraphState
+from repro.taf.son import SoN, SoTS
+
+
+# ---------------------------------------------------------------------------
+# 1. Selection
+# ---------------------------------------------------------------------------
+
+
+def selection(son: SoN, pred: Callable[[SoN], np.ndarray]) -> SoN:
+    """Entity-centric filter; pred receives the SoN and returns a boolean
+    mask over nodes (vectorized — no per-node python)."""
+    mask = np.asarray(pred(son), bool)
+    return son.subset(np.nonzero(mask)[0])
+
+
+# ---------------------------------------------------------------------------
+# 2. Timeslice
+# ---------------------------------------------------------------------------
+
+
+def _state_at(son: SoN, t: int):
+    """Vectorized replay of per-node events up to t over the initial
+    state.  Returns (present (N,), attrs (N,K), neighbor sets as dict for
+    SoTS)."""
+    N = len(son)
+    present = son.init_present.copy()
+    attrs = son.init_attrs.copy()
+    K = attrs.shape[1]
+    # flat pass over the CSR event arrays (chronological within node)
+    upto = son.ev_t <= t
+    node_of_ev = np.repeat(np.arange(N), son.ev_indptr[1:] - son.ev_indptr[:-1])
+    sel = np.nonzero(upto)[0]
+    for j in sel:  # per-node chronological; bounded by |events <= t|
+        i = node_of_ev[j]
+        k = son.ev_kind[j]
+        if k == NODE_ADD:
+            present[i] = 1
+        elif k == NODE_DEL:
+            present[i] = 0
+            attrs[i] = -1
+        elif k == NATTR_SET:
+            present[i] = 1
+            attrs[i, son.ev_key[j]] = son.ev_val[j]
+    return present, attrs
+
+
+def timeslice(son: SoN, ts) -> Dict[str, np.ndarray]:
+    """State of each node at time(s) ts.  Returns dict with 'present'
+    (N,[T]) and 'attrs' (N,[T],K)."""
+    if np.isscalar(ts):
+        p, a = _state_at(son, int(ts))
+        return {"present": p, "attrs": a, "t": np.asarray([int(ts)])}
+    ps, as_ = [], []
+    for t in ts:
+        p, a = _state_at(son, int(t))
+        ps.append(p)
+        as_.append(a)
+    return {"present": np.stack(ps, 1), "attrs": np.stack(as_, 1),
+            "t": np.asarray(list(ts))}
+
+
+def neighbors_at(sots: SoTS, i: int, t: int) -> np.ndarray:
+    """Neighbor set of node i at time t (initial adjacency + edge events)."""
+    nbr0, _ = sots.neighbors_of(i)
+    cur = set(int(x) for x in nbr0)
+    evs = sots.events_of(i)
+    for j in range(len(evs["t"])):
+        if evs["t"][j] > t:
+            break
+        if evs["kind"][j] == EDGE_ADD:
+            cur.add(int(evs["other"][j]))
+        elif evs["kind"][j] == EDGE_DEL:
+            cur.discard(int(evs["other"][j]))
+    return np.asarray(sorted(cur), np.int32)
+
+
+# ---------------------------------------------------------------------------
+# 3. Graph
+# ---------------------------------------------------------------------------
+
+
+def graph(sots: SoTS, t: Optional[int] = None) -> GraphState:
+    """In-memory GraphS of the SoTS members (edges with both endpoints in
+    the set), optionally timesliced at t."""
+    t = t if t is not None else sots.t0
+    n = int(sots.node_ids.max()) + 1 if len(sots) else 0
+    g = GraphState.empty(n, sots.init_attrs.shape[1])
+    present, attrs = _state_at(sots, t)
+    g.present[sots.node_ids] = present
+    g.attrs[sots.node_ids] = attrs
+    keys = []
+    member = set(int(x) for x in sots.node_ids)
+    for i in range(len(sots)):
+        if not present[i]:
+            continue
+        u = int(sots.node_ids[i])
+        for v in neighbors_at(sots, i, t):
+            if int(v) in member:
+                keys.append(min(u, int(v)) * (2**31) + max(u, int(v)))
+    keys = np.unique(np.asarray(keys, np.int64)) if keys else np.empty(0, np.int64)
+    g.edge_key = keys
+    g.edge_val = np.full(len(keys), -1, np.int32)
+    return g
+
+
+# ---------------------------------------------------------------------------
+# 4-6. NodeCompute / NodeComputeTemporal / NodeComputeDelta
+# ---------------------------------------------------------------------------
+
+
+def node_compute(son: SoN, f: Callable, t: Optional[int] = None) -> np.ndarray:
+    """Map f over the (timesliced) static nodes.  f receives dict(state)
+    for one node and returns a scalar; or set f.vectorized = True to
+    receive the whole arrays."""
+    t = t if t is not None else son.t0
+    present, attrs = _state_at(son, t)
+    if getattr(f, "vectorized", False):
+        return f(present=present, attrs=attrs, son=son, t=t)
+    return np.asarray([
+        f(present=present[i], attrs=attrs[i], son=son, i=i, t=t)
+        for i in range(len(son))
+    ])
+
+
+def eval_points(son: SoN, points=None) -> np.ndarray:
+    """Default: all change points (paper: 'evaluated at all the points of
+    change'); points may be an array or a callable(son) -> array."""
+    if points is None:
+        return son.change_points()
+    if callable(points):
+        return np.asarray(points(son))
+    return np.asarray(points)
+
+
+def node_compute_temporal(son: SoN, f: Callable, points=None) -> Tuple[np.ndarray, np.ndarray]:
+    """f evaluated afresh at every point — the O(N·T) baseline.
+    Returns (points (T,), values (N, T))."""
+    ts = eval_points(son, points)
+    out = np.empty((len(son), len(ts)), np.float64)
+    for j, t in enumerate(ts):
+        present, attrs = _state_at(son, int(t))
+        for i in range(len(son)):
+            out[i, j] = f(present=present[i], attrs=attrs[i], son=son, i=i, t=int(t))
+    return ts, out
+
+
+def node_compute_delta(son: SoN, f: Callable, f_delta: Callable,
+                       points=None) -> Tuple[np.ndarray, np.ndarray]:
+    """Incremental evaluation (paper operator 6): f once on the initial
+    state, then f_delta(aux, value, event) -> (aux, value) folded over
+    each node's events — O(N + T).
+
+    Returns (points, values (N, T)) sampled at the same points as the
+    temporal variant (value carried forward between events).
+    """
+    ts = eval_points(son, points)
+    N = len(son)
+    out = np.empty((N, len(ts)), np.float64)
+    for i in range(N):
+        aux, val = f(present=son.init_present[i], attrs=son.init_attrs[i],
+                     son=son, i=i, init=True)
+        evs = son.events_of(i)
+        ne = len(evs["t"])
+        j = 0  # event cursor
+        for pj, t in enumerate(ts):
+            while j < ne and evs["t"][j] <= t:
+                aux, val = f_delta(
+                    aux, val,
+                    kind=evs["kind"][j], key=evs["key"][j],
+                    val_=evs["val"][j], other=evs["other"][j], i=i, son=son,
+                )
+                j += 1
+            out[i, pj] = val
+    return ts, out
+
+
+# ---------------------------------------------------------------------------
+# 7-9. Compare / Evolution / TempAggregation
+# ---------------------------------------------------------------------------
+
+
+def compare(son_a: SoN, son_b: SoN, f: Callable, points=None):
+    """Scalar f over both operands; returns (node_ids, difference) for the
+    common ids (paper operator 7)."""
+    common = np.intersect1d(son_a.node_ids, son_b.node_ids)
+    ia = np.searchsorted(son_a.node_ids, common)
+    ib = np.searchsorted(son_b.node_ids, common)
+    va = node_compute(son_a, f)
+    vb = node_compute(son_b, f)
+    return common, va[ia] - vb[ib]
+
+
+def compare_timeslices(son: SoN, f: Callable, t_a: int, t_b: int):
+    """The paper's single-operand variant: compare f at two timepoints."""
+    pa, aa = _state_at(son, t_a)
+    pb, ab = _state_at(son, t_b)
+    va = np.asarray([f(present=pa[i], attrs=aa[i], son=son, i=i, t=t_a)
+                     for i in range(len(son))])
+    vb = np.asarray([f(present=pb[i], attrs=ab[i], son=son, i=i, t=t_b)
+                     for i in range(len(son))])
+    return son.node_ids, va - vb
+
+
+def evolution(son: SoN, f: Callable, points=None, n_samples: int = 10):
+    """Aggregate quantity f(son, t) sampled over time (paper operator 8).
+    Default points: n_samples uniform over [t0, t1]."""
+    if points is None:
+        points = np.linspace(son.t0, son.t1, n_samples).astype(np.int64)
+    else:
+        points = eval_points(son, points)
+    return points, np.asarray([f(son, int(t)) for t in points])
+
+
+def temp_aggregate(series: np.ndarray, op: str, t: Optional[np.ndarray] = None):
+    """Max/Min/Mean/Peak/Saturate over a scalar timeseries (operator 9)."""
+    series = np.asarray(series, np.float64)
+    if op == "max":
+        return float(series.max())
+    if op == "min":
+        return float(series.min())
+    if op == "mean":
+        return float(series.mean())
+    if op == "peak":
+        # indices of strict local maxima (eventful timepoints)
+        if len(series) < 3:
+            return np.empty(0, np.int64)
+        mid = (series[1:-1] > series[:-2]) & (series[1:-1] > series[2:])
+        idx = np.nonzero(mid)[0] + 1
+        return (t[idx] if t is not None else idx)
+    if op == "saturate":
+        final = series[-1]
+        if final == 0:
+            return t[0] if t is not None else 0
+        reached = np.nonzero(series >= 0.95 * final)[0]
+        i = int(reached[0]) if len(reached) else len(series) - 1
+        return t[i] if t is not None else i
+    raise ValueError(op)

@@ -1,0 +1,71 @@
+"""Train / prefill / decode step factories.
+
+These close over (cfg, shd) and are the functions the launchers jit with
+explicit in/out shardings.  They are deliberately free of host logic —
+everything inside is traceable, so the same function serves the real
+training loop, the smoke tests, and the multi-pod dry-run lowering.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.sharding import Sharder
+from repro.optim import adamw
+
+MOE_AUX_COEF = 0.01
+
+
+def make_loss_fn(cfg, shd: Sharder, skip_masked_blocks: bool = False):
+    def loss_fn(params, batch):
+        logits, aux = lm.forward(params, batch, cfg, shd, skip_masked_blocks)
+        n_img = cfg.n_img_tokens or 0
+        if n_img:
+            logits = logits[:, n_img:]
+        loss = lm.lm_loss(logits, batch["labels"], batch.get("weights"))
+        total = loss + MOE_AUX_COEF * aux
+        return total, {"loss": loss, "aux_loss": aux}
+
+    return loss_fn
+
+
+def make_train_step(cfg, shd: Sharder, ocfg: adamw.AdamWConfig = adamw.AdamWConfig(),
+                    skip_masked_blocks: bool = False):
+    loss_fn = make_loss_fn(cfg, shd, skip_masked_blocks)
+
+    def train_step(params, opt_state, batch):
+        (total, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch
+        )
+        params, opt_state, opt_metrics = adamw.update(grads, opt_state, params, ocfg)
+        metrics = dict(metrics, total_loss=total, **opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg, shd: Sharder, model_axis: int, cache_len: int = 0):
+    def prefill_step(params, batch):
+        logits, cache = lm.prefill(
+            params, batch, cfg, shd, model_axis=model_axis, cache_len=cache_len
+        )
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg, shd: Sharder):
+    """One greedy decode step: (params, cache, tokens (B,1), pos (B,)) ->
+    (next_token (B,), logits, new_cache)."""
+
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = lm.decode_step(params, cache, tokens, pos, cfg, shd)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, logits, cache
+
+    return serve_step

@@ -1,0 +1,185 @@
+"""TGI correctness: index-reconstructed state == naive full replay, for
+snapshots, node histories, and k-hop neighborhoods — plus storage-layer
+behaviors (replication failover, placement spread)."""
+import numpy as np
+import pytest
+
+from repro.core.events import EventLog
+from repro.core.snapshot import GraphState
+from repro.core.tgi import TGI, TGIConfig
+from repro.data.temporal_graph_gen import generate, naive_state_at
+from repro.storage.kvstore import DeltaStore, StorageNodeDown
+
+N_EVENTS = 6000
+
+
+@pytest.fixture(scope="module")
+def built():
+    events = generate(N_EVENTS, seed=7)
+    cfg = TGIConfig(n_shards=4, parts_per_shard=2, events_per_span=1500,
+                    eventlist_size=128, checkpoints_per_span=4)
+    store = DeltaStore(m=4, r=2, backend="mem")
+    tgi = TGI.build(events, cfg, store)
+    return events, cfg, store, tgi
+
+
+def _states_equal(a: GraphState, b: GraphState):
+    n = max(len(a.present), len(b.present))
+    a.grow(n)
+    b.grow(n)
+    assert (a.present == b.present).all(), "presence mismatch"
+    on = a.present == 1
+    assert (a.attrs[on] == b.attrs[on]).all(), "attr mismatch"
+    assert len(a.edge_key) == len(b.edge_key), (
+        f"edge count {len(a.edge_key)} vs {len(b.edge_key)}"
+    )
+    assert (a.edge_key == b.edge_key).all()
+    assert (a.edge_val == b.edge_val).all(), "edge attr mismatch"
+
+
+@pytest.mark.parametrize("frac", [0.05, 0.3, 0.5, 0.77, 0.99])
+def test_snapshot_matches_naive_replay(built, frac):
+    events, cfg, store, tgi = built
+    t0, t1 = events.time_range()
+    t = int(t0 + frac * (t1 - t0))
+    got = tgi.get_snapshot(t)
+    want = naive_state_at(events, t, cfg.n_attrs)
+    _states_equal(got, want)
+
+
+def test_snapshot_parallel_fetch_equal(built):
+    events, cfg, store, tgi = built
+    t = int(np.mean(events.time_range()))
+    a = tgi.get_snapshot(t, c=1)
+    b = tgi.get_snapshot(t, c=4)
+    _states_equal(a, b)
+
+
+def test_snapshot_with_kernel_path(built):
+    events, cfg, store, tgi = built
+    t = int(np.mean(events.time_range()))
+    a = tgi.get_snapshot(t, use_kernel=False)
+    b = tgi.get_snapshot(t, use_kernel=True)
+    _states_equal(a, b)
+
+
+def test_node_history_matches_naive(built):
+    events, cfg, store, tgi = built
+    t0g, t1g = events.time_range()
+    t0 = int(t0g + 0.3 * (t1g - t0g))
+    t1 = int(t0g + 0.8 * (t1g - t0g))
+    # pick active nodes
+    want_state = naive_state_at(events, t0, cfg.n_attrs)
+    nids = want_state.node_ids()[:5]
+    for nid in nids:
+        init, ev = tgi.get_node_history(int(nid), t0, t1)
+        # init matches naive state at t0
+        if want_state.present[nid]:
+            assert init is not None
+            assert (init["attrs"] == want_state.attrs[nid]).all()
+            naive_neigh = set()
+            src, dst, _ = want_state.edges()
+            naive_neigh |= set(dst[src == nid].tolist())
+            naive_neigh |= set(src[dst == nid].tolist())
+            assert set(init["neighbors"].tolist()) == naive_neigh
+        # events match naive filter
+        sel = ((events.src == nid) | (events.dst == nid)) & (events.t > t0) & (events.t <= t1)
+        want_ev = events.take(np.nonzero(sel)[0])
+        assert len(ev) == len(want_ev)
+        assert (ev.t == want_ev.t).all()
+        assert (ev.kind == want_ev.kind).all()
+
+
+@pytest.mark.parametrize("k,method", [(1, "expand"), (1, "snapshot"), (2, "expand")])
+def test_k_hop_matches_filtered_snapshot(built, k, method):
+    events, cfg, store, tgi = built
+    t0g, t1g = events.time_range()
+    t = int(t0g + 0.6 * (t1g - t0g))
+    want_full = naive_state_at(events, t, cfg.n_attrs)
+    deg = want_full.degree()
+    nid = int(np.argmax(deg))  # a hub
+    got = tgi.get_k_hop(nid, t, k, method=method)
+    want = tgi._filter_k_hop(want_full, nid, k)
+    _states_equal(got, want)
+
+
+def test_1hop_history(built):
+    events, cfg, store, tgi = built
+    t0g, t1g = events.time_range()
+    t0 = int(t0g + 0.4 * (t1g - t0g))
+    t1 = int(t0g + 0.7 * (t1g - t0g))
+    state = naive_state_at(events, t0, cfg.n_attrs)
+    nid = int(np.argmax(state.degree()))
+    out = tgi.get_node_1hop_history(nid, t0, t1)
+    assert out["hood"].present[nid]
+    for m, ev_m in out["neighbor_events"].items():
+        sel = ((events.src == m) | (events.dst == m)) & (events.t > t0) & (events.t <= t1)
+        assert len(ev_m) == int(sel.sum())
+
+
+def test_replication_failover(built):
+    events, cfg, store, tgi = built
+    t = int(np.mean(events.time_range()))
+    want = tgi.get_snapshot(t)
+    store.stats.reset()
+    store.fail_node(0)
+    try:
+        got = tgi.get_snapshot(t)
+        _states_equal(got, want)
+        assert store.stats.failovers > 0
+    finally:
+        store.heal_node(0)
+
+
+def test_all_replicas_down_raises():
+    events = generate(800, seed=1)
+    cfg = TGIConfig(n_shards=2, parts_per_shard=2, events_per_span=400,
+                    eventlist_size=64, checkpoints_per_span=2)
+    store = DeltaStore(m=2, r=1, backend="mem")
+    tgi = TGI.build(events, cfg, store)
+    store.fail_node(0)
+    store.fail_node(1)
+    with pytest.raises((StorageNodeDown, KeyError)):
+        tgi.get_snapshot(int(np.mean(events.time_range())))
+
+
+def test_incremental_update_equals_bulk_build():
+    events = generate(4000, seed=3)
+    half = len(events) // 2
+    cfg = TGIConfig(n_shards=2, parts_per_shard=2, events_per_span=1000,
+                    eventlist_size=100, checkpoints_per_span=2)
+    s1 = DeltaStore(m=2, r=1, backend="mem")
+    bulk = TGI.build(events, cfg, s1)
+    s2 = DeltaStore(m=2, r=1, backend="mem")
+    inc = TGI.build(events.take(slice(0, half)), cfg, s2)
+    inc.update(events.take(slice(half, len(events))))
+    t0, t1 = events.time_range()
+    for frac in (0.25, 0.6, 0.95):
+        t = int(t0 + frac * (t1 - t0))
+        _states_equal(bulk.get_snapshot(t), inc.get_snapshot(t))
+
+
+def test_locality_partitioning_build():
+    events = generate(2500, seed=11)
+    cfg = TGIConfig(n_shards=2, parts_per_shard=2, events_per_span=900,
+                    eventlist_size=100, checkpoints_per_span=2,
+                    partition_strategy="locality", replicate_1hop=True)
+    store = DeltaStore(m=2, r=1, backend="mem")
+    tgi = TGI.build(events, cfg, store)
+    t0, t1 = events.time_range()
+    t = int(t0 + 0.7 * (t1 - t0))
+    _states_equal(tgi.get_snapshot(t), naive_state_at(events, t, cfg.n_attrs))
+
+
+def test_file_backend_roundtrip(tmp_path):
+    events = generate(1200, seed=5)
+    cfg = TGIConfig(n_shards=2, parts_per_shard=2, events_per_span=600,
+                    eventlist_size=64, checkpoints_per_span=2)
+    store = DeltaStore(m=3, r=2, backend="file", root=str(tmp_path))
+    tgi = TGI.build(events, cfg, store)
+    t0, t1 = events.time_range()
+    t = int(t0 + 0.8 * (t1 - t0))
+    _states_equal(tgi.get_snapshot(t), naive_state_at(events, t, cfg.n_attrs))
+    # and under single-node failure
+    store.fail_node(1)
+    _states_equal(tgi.get_snapshot(t), naive_state_at(events, t, cfg.n_attrs))
