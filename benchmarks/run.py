@@ -165,29 +165,56 @@ def fig15b_growing_data():
 
 
 def fig15c_taf_scaling():
-    """Fig 15c: analytics (max LCC) compute + SoTS fetch vs parallelism."""
-    from repro.taf import analytics, build_sots
+    """Fig 15c: analytics (max LCC) compute + SoTS fetch vs parallelism
+    (through the unified HistoricalGraphStore/TemporalQuery surface)."""
+    from repro.taf import HistoricalGraphStore, analytics
 
-    events, cfg, store, tgi = _build()
+    events, cfg, kv, tgi = _build()
+    store = HistoricalGraphStore.from_tgi(tgi)
     t0g, t1g = events.time_range()
     t0 = int(t0g + 0.4 * (t1g - t0g))
     t1 = int(t0g + 0.8 * (t1g - t0g))
     for c in (1, 2, 4):
-        us = _timeit(lambda: build_sots(tgi, t0, t1, c=c), repeat=2)
+        us = _timeit(lambda: store.subgraphs(t0, t1, c=c).execute(), repeat=2)
         _row(f"fig15c/sots_fetch_c{c}", us)
-    sots = build_sots(tgi, t0, t1)
+    sots = store.subgraphs(t0, t1).materialize().operand
     us = _timeit(lambda: analytics.max_lcc(sots, (t0 + t1) // 2), repeat=2)
     _row("fig15c/max_lcc", us, f"nodes={len(sots)}")
+
+
+def bench_query_pushdown():
+    """Beyond-paper: planner pushdown — a selective TemporalQuery prunes
+    partitions/shards and projects attrs away; cost vs the full fetch."""
+    from repro.taf import HistoricalGraphStore
+
+    events, cfg, kv, tgi = _build()
+    store = HistoricalGraphStore.from_tgi(tgi)
+    t0g, t1g = events.time_range()
+    t0 = int(t0g + 0.4 * (t1g - t0g))
+    t1 = int(t0g + 0.8 * (t1g - t0g))
+    full = store.nodes(t0, t1)
+    us = _timeit(lambda: full.execute(), repeat=2)
+    cost = full.run().cost
+    _row("pushdown/full_fetch", us,
+         f"deltas={cost.n_deltas};bytes={cost.n_bytes}")
+    ids = store.snapshot(t0).node_ids()[:4]
+    pruned = store.nodes(t0, t1).filter(node_ids=ids).project(attrs=False)
+    us = _timeit(lambda: pruned.execute(), repeat=2)
+    cost = pruned.run().cost
+    _row("pushdown/pruned_projected", us,
+         f"deltas={cost.n_deltas};bytes={cost.n_bytes}")
 
 
 def fig17_incremental_vs_temporal():
     """Fig 17: NodeComputeDelta vs NodeComputeTemporal cumulative time vs
     number of evaluated versions."""
-    from repro.taf import analytics, build_sots
+    from repro.taf import HistoricalGraphStore, analytics
 
-    events, cfg, store, tgi = _build(n_events=N_EVENTS // 2)
+    events, cfg, kv, tgi = _build(n_events=N_EVENTS // 2)
+    store = HistoricalGraphStore.from_tgi(tgi)
     t0g, t1g = events.time_range()
-    sots = build_sots(tgi, int(t0g + 0.3 * (t1g - t0g)), int(t1g))
+    sots = (store.subgraphs(int(t0g + 0.3 * (t1g - t0g)), int(t1g))
+            .materialize().operand)
     pts_all = sots.change_points()
     for n_versions in (8, 32, 128):
         pts = pts_all[:: max(len(pts_all) // n_versions, 1)][:n_versions]
@@ -301,6 +328,7 @@ BENCHES: Dict[str, Callable] = {
     "fig15b": fig15b_growing_data,
     "fig15c": fig15c_taf_scaling,
     "fig17": fig17_incremental_vs_temporal,
+    "pushdown": bench_query_pushdown,
     "table1": table1_index_comparison,
     "ckpt": bench_checkpoint_store,
     "kernel": bench_delta_overlay_kernel,

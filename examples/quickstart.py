@@ -1,14 +1,15 @@
-"""Quickstart: build a Temporal Graph Index over a synthetic history and
-run the paper's retrieval primitives + the Fig-7a analytics example.
+"""Quickstart: index a synthetic history behind the HistoricalGraphStore
+facade, run the paper's retrieval primitives, and the Fig-7a analytics
+example through the lazy TemporalQuery surface.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core.tgi import TGI, TGIConfig
+from repro.core.tgi import TGIConfig
 from repro.data.temporal_graph_gen import generate
 from repro.storage.kvstore import DeltaStore
-from repro.taf import analytics, build_sots
+from repro.taf import HistoricalGraphStore
 
 # 1. a synthetic temporal graph: 20k events, bursty + preferential
 events = generate(n_events=20_000, seed=42)
@@ -16,43 +17,45 @@ t0, t1 = events.time_range()
 print(f"history: {len(events)} events over [{t0}, {t1}], "
       f"{events.n_nodes} node ids")
 
-# 2. index it: 4 horizontal shards x 2 micro-partitions, 4 checkpoints
-#    per timespan, on an in-memory 4-node store with replication 2
+# 2. index it behind the facade: 4 horizontal shards x 2 micro-partitions,
+#    4 checkpoints per timespan, on an in-memory 4-node store with r=2
 cfg = TGIConfig(n_shards=4, parts_per_shard=2, events_per_span=5_000,
                 eventlist_size=256, checkpoints_per_span=4)
-store = DeltaStore(m=4, r=2, backend="mem")
-tgi = TGI.build(events, cfg, store)
-print(f"index: {len(tgi.spans)} timespans, "
-      f"{store.stats.bytes_written / 1e6:.1f} MB written")
+kv = DeltaStore(m=4, r=2, backend="mem")
+store = HistoricalGraphStore.build(events, cfg=cfg, store=kv)
+print(f"index: {len(store.tgi.spans)} timespans, "
+      f"{kv.stats.bytes_written / 1e6:.1f} MB written")
 
 # 3. snapshot retrieval (Algorithm 1) — any point in the past
 t = (t0 + t1) // 2
-g = tgi.get_snapshot(t, c=4)
+g = store.snapshot(t, c=4)
 print(f"snapshot@{t}: {int(g.present.sum())} nodes, {len(g.edge_key)} edges "
-      f"({tgi.last_cost.n_deltas} deltas fetched)")
+      f"({store.last_cost.n_deltas} deltas fetched)")
 
 # 4. node history (Algorithm 2)
 hub = int(np.argmax(g.degree()))
-init, ev = tgi.get_node_history(hub, t, t1)
+init, ev = store.node_history(hub, t, t1)
 print(f"node {hub} history: initial degree {len(init['neighbors'])}, "
       f"{len(ev)} change events in ({t}, {t1}]")
 
 # 5. k-hop neighborhood (Algorithm 3/4)
-hood = tgi.get_k_hop(hub, t, k=2)
+hood = store.k_hop(hub, t, k=2)
 print(f"2-hop of {hub}: {int(hood.present.sum())} nodes, {len(hood.edge_key)} edges")
 
 # 6. survive a storage-node failure (replication r=2)
-store.fail_node(0)
-g2 = tgi.get_snapshot(t, c=4)
+kv.fail_node(0)
+g2 = store.snapshot(t, c=4)
 assert (g2.edge_key == g.edge_key).all()
-store.heal_node(0)
-print(f"snapshot identical with node 0 down (failovers: {store.stats.failovers})")
+kv.heal_node(0)
+print(f"snapshot identical with node 0 down (failovers: {kv.stats.failovers})")
 
-# 7. TAF: the paper's Fig-7a example — node with the highest local
-#    clustering coefficient at a historical timeslice
-sots = build_sots(tgi, t, t1)
-nid, lcc = analytics.max_lcc(sots, t)
+# 7. TAF via the lazy query surface: fetch the SoTS operand once, then
+#    the paper's Fig-7a example + density evolution over it
+q = store.subgraphs(t, t1).materialize()
+from repro.taf import analytics  # noqa: E402
+
+nid, lcc = analytics.max_lcc(q.operand, t)
 print(f"max LCC at t={t}: node {nid} (LCC={lcc:.3f})")
 
-pts, dens = analytics.density_evolution(sots, n_samples=8)
+pts, dens = analytics.density_evolution(q.operand, n_samples=8)
 print("density evolution:", ", ".join(f"{d:.4f}" for d in dens))

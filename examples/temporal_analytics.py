@@ -1,6 +1,11 @@
-"""Temporal analytics with TAF operators: community comparison (paper
-Fig 7b), evolution + temporal aggregation (7c), the incremental-vs-
-version computation pair (Fig 8 / 17), and PageRank over time.
+"""Temporal analytics through the unified query surface: community
+comparison (paper Fig 7b), evolution + temporal aggregation (7c), the
+incremental-vs-version computation pair (Fig 8 / 17), PageRank over
+time, and the planner's fetch pushdown.
+
+Everything goes through HistoricalGraphStore / TemporalQuery: the chain
+is lazy, compiles to a typed Plan (see .explain()), and the executor
+applies partition pruning + projection before touching storage.
 
   PYTHONPATH=src python examples/temporal_analytics.py
 """
@@ -8,38 +13,67 @@ import time
 
 import numpy as np
 
-from repro.core.tgi import TGI, TGIConfig
+from repro.core.events import EDGE_ADD, EDGE_DEL
 from repro.data.temporal_graph_gen import generate
 from repro.storage.kvstore import DeltaStore
-from repro.taf import analytics, build_sots
-from repro.taf import operators as ops
+from repro.taf import HistoricalGraphStore, analytics, operators as ops
 
 events = generate(n_events=10_000, seed=1)
-t0g, t1g = events.time_range()
-cfg = TGIConfig(n_shards=4, parts_per_shard=2, events_per_span=2_500)
-tgi = TGI.build(events, cfg, DeltaStore(m=4, r=1, backend="mem"))
+store = HistoricalGraphStore.build(
+    events, n_shards=4, parts_per_shard=2, events_per_span=2_500,
+    store=DeltaStore(m=4, r=1, backend="mem"))
+t0g, t1g = store.time_range()
 
 t0 = int(t0g + 0.3 * (t1g - t0g))
 t1 = int(t0g + 0.9 * (t1g - t0g))
-sots = build_sots(tgi, t0, t1)
-print(f"SoTS: {len(sots)} temporal nodes over ({t0}, {t1}]")
+tm = (t0 + t1) // 2
+
+# one fetch, many computes: materialize the SoTS operand once
+q = store.subgraphs(t0, t1).materialize()
+sots = q.operand
+print(f"SoTS: {len(sots)} temporal nodes over ({t0}, {t1}] "
+      f"({store.last_cost.n_deltas} deltas fetched)")
 
 # --- compare two "communities" (label-0 vs label-1 nodes), Fig 7b style
-com_a = ops.selection(sots, lambda s: s.init_attrs[:, 0] == 0)
-com_b = ops.selection(sots, lambda s: s.init_attrs[:, 0] == 1)
 
 
-def mean_degree(son, t):
-    _, deg = analytics.degree_series_delta(son, points=[t])
-    return float(deg[son.init_present == 1].mean())
+def deg_init(present, attrs, son, i, init):
+    deg = son.adj_indptr[i + 1] - son.adj_indptr[i]
+    return None, float(deg if present else 0)
 
 
-tm = (t0 + t1) // 2
-print(f"community A ({len(com_a)} nodes) mean degree @tm: {mean_degree(com_a, tm):.2f}")
-print(f"community B ({len(com_b)} nodes) mean degree @tm: {mean_degree(com_b, tm):.2f}")
+def deg_delta(aux, val, kind, key, val_, other, i, son):
+    if kind == EDGE_ADD:
+        return aux, val + 1.0
+    if kind == EDGE_DEL:
+        return aux, val - 1.0
+    return aux, val
+
+
+for name, label in (("A", 0), ("B", 1)):
+    com = (q.filter(lambda s, _l=label: s.init_attrs[:, 0] == _l,
+                    label=f"attr0=={label}")
+            .timeslice(tm)
+            .node_compute(deg_init, style="delta", f_delta=deg_delta,
+                          label="degree"))
+    r = com.run()
+    deg = r.value[1][:, 0]
+    on = r.operand.init_present == 1
+    print(f"community {name} ({len(r.operand)} nodes) "
+          f"mean degree @tm: {deg[on].mean():.2f}")
+print(com.explain())
 
 # --- evolution + temporal aggregation (Fig 7c + operator 9)
-pts, dens = analytics.density_evolution(sots, n_samples=10)
+
+
+def density(son, t):
+    g = ops.graph(son, t)
+    n = int(g.present.sum())
+    e = len(g.edge_key)
+    return 0.0 if n < 2 else 2.0 * e / (n * (n - 1))
+
+
+pts, dens = q.evolution(density, n_samples=10).execute()
 print("density peak timepoints:", ops.temp_aggregate(dens, "peak", pts))
 print("density mean:", f"{ops.temp_aggregate(dens, 'mean'):.5f}")
 
@@ -58,6 +92,20 @@ print(f"label-count over {len(pts)} versions: "
       f"NodeComputeTemporal {t_temporal*1e3:.0f}ms vs "
       f"NodeComputeDelta {t_delta*1e3:.0f}ms "
       f"({t_temporal / max(t_delta, 1e-9):.1f}x)")
+
+# --- fetch pushdown: a selective query reads fewer shards + no attrs
+full_cost = store.nodes(t0, t1).run().cost
+hub = int(sots.node_ids[np.argmax(np.diff(sots.adj_indptr))])
+sel = (store.nodes(t0, t1)
+       .filter(node_ids=[hub])
+       .khop(1)
+       .project(attrs=False)
+       .timeslice(tm)
+       .node_compute(deg_init, style="delta", f_delta=deg_delta))
+r = sel.run()
+print(f"pushdown: hub degree @tm = {r.value[1][0, 0]:.0f} via "
+      f"{r.cost.n_deltas} deltas / {r.cost.n_bytes}B "
+      f"(full fetch: {full_cost.n_deltas} deltas / {full_cost.n_bytes}B)")
 
 # --- PageRank over time with warm starts
 pts = np.linspace(t0, t1, 6).astype(np.int64)

@@ -33,6 +33,10 @@ import numpy as np
 
 SENTINEL = np.int32(2**31 - 1)
 
+# the stored micro-delta schema (one source of truth for serialization,
+# size accounting, and the planner's projection pushdown)
+FIELDS = ("valid", "present", "attrs", "e_src", "e_dst", "e_op", "e_val")
+
 
 @dataclasses.dataclass
 class Delta:
@@ -71,10 +75,7 @@ class Delta:
         return int(self.valid.sum()) + self.n_edges()
 
     def nbytes(self) -> int:
-        return sum(
-            getattr(self, f).nbytes
-            for f in ("valid", "present", "attrs", "e_src", "e_dst", "e_op", "e_val")
-        )
+        return sum(getattr(self, f).nbytes for f in FIELDS)
 
     def copy(self) -> "Delta":
         return Delta(**{f: getattr(self, f).copy() for f in

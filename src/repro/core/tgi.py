@@ -21,14 +21,21 @@ fetched, bytes) is recorded per query for the Table-1 benchmarks.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import partition as part_mod
-from repro.core.delta import SENTINEL, Delta, delta_difference, delta_intersection
+from repro.core.delta import (
+    FIELDS as DELTA_FIELDS,
+    SENTINEL,
+    Delta,
+    delta_difference,
+    delta_intersection,
+)
 from repro.core.events import EventLog
 from repro.core.slots import SlotMap
 from repro.core.snapshot import (
@@ -91,6 +98,39 @@ class TGI:
         self.vc: Optional[VersionChains] = None
         self.n_nodes = 0
         self.last_cost = FetchCost()
+        self._cost_accum: Optional[FetchCost] = None
+
+    # ------------------------------------------------------------------
+    # Query-planner hooks (used by repro.taf.plan / repro.taf.query)
+    # ------------------------------------------------------------------
+
+    def _record_cost(self, n=1, b=0, card=0):
+        self.last_cost.add(n, b, card)
+        if self._cost_accum is not None:
+            self._cost_accum.add(n, b, card)
+
+    @contextlib.contextmanager
+    def cost_scope(self) -> Iterator[FetchCost]:
+        """Accumulate fetch cost across every retrieval issued inside the
+        scope — one FetchCost per compiled query plan, even when the plan
+        runs several get_* calls (each of which resets ``last_cost``)."""
+        prev = self._cost_accum
+        acc = FetchCost()
+        self._cost_accum = acc
+        try:
+            yield acc
+        finally:
+            self._cost_accum = prev
+            if prev is not None:  # nested scopes roll up
+                prev.add(acc.n_deltas, acc.n_bytes, acc.sum_cardinality)
+
+    def pids_for_nodes(self, node_ids: np.ndarray, t: int) -> List[int]:
+        """Partition-pruning pushdown: the micro-partitions that cover
+        ``node_ids`` in the timespan containing t.  A selection over a
+        known node set fetches only these pids instead of all n_parts."""
+        si = self._span_index(t)
+        pid, _, found = si.smap.lookup(np.asarray(node_ids, np.int32))
+        return sorted(set(int(p) for p in pid[found]))
 
     # ------------------------------------------------------------------
     # Construction (paper §4.4 'Construction and Update')
@@ -366,14 +406,20 @@ class TGI:
         return list(reversed(names))
 
     def _fetch_delta(self, tsid: int, did: str, pids: Optional[Sequence[int]],
-                     si: SpanIndex, c: int = 1) -> Delta:
+                     si: SpanIndex, c: int = 1,
+                     projection: Optional[Sequence[str]] = None) -> Delta:
         cfg = self.cfg
         pids = list(range(cfg.n_parts)) if pids is None else list(pids)
         keys = [
             DeltaKey(tsid, self._sid_of_pid(p), did, p % cfg.parts_per_shard)
             for p in pids
         ]
-        got = self.store.multiget(keys, c=c)
+        fields = None
+        if projection is not None and "attrs" not in projection:
+            # attribute-projection pushdown: the attrs tile (the widest
+            # column) is never read off storage
+            fields = tuple(f for f in DELTA_FIELDS if f != "attrs")
+        got = self.store.multiget(keys, c=c, fields=fields)
         psize = si.smap.psize
         d = Delta.empty(cfg.n_parts, psize, cfg.n_attrs, ecap=1)
         e_parts = []
@@ -381,11 +427,12 @@ class TGI:
             a = got[k]
             d.valid[p] = a["valid"]
             d.present[p] = a["present"]
-            d.attrs[p] = a["attrs"]
+            if "attrs" in a:
+                d.attrs[p] = a["attrs"]
             ne = int((a["e_src"] != SENTINEL).sum())
             e_parts.append((a["e_src"][:ne], a["e_dst"][:ne], a["e_op"][:ne], a["e_val"][:ne]))
-            self.last_cost.add(1, sum(x.nbytes for x in a.values()),
-                               int(a["valid"].sum()) + ne)
+            self._record_cost(1, sum(x.nbytes for x in a.values()),
+                              int(a["valid"].sum()) + ne)
         if e_parts:
             d.e_src = np.concatenate([e[0] for e in e_parts])
             d.e_dst = np.concatenate([e[1] for e in e_parts])
@@ -399,25 +446,25 @@ class TGI:
         return d
 
     def _fetch_eventlists(self, si: SpanIndex, b_lo: int, b_hi: int,
-                          c: int = 1) -> EventLog:
-        """Micro-eventlists for buckets [b_lo, b_hi) across all shards."""
+                          c: int = 1,
+                          sids: Optional[Sequence[int]] = None) -> EventLog:
+        """Micro-eventlists for buckets [b_lo, b_hi).  Events are
+        replicated to both endpoints' shards, so a fetch restricted to
+        the shards covering a partition subset still sees every event
+        with >=1 endpoint there (planner shard pruning)."""
         keys = []
         for b in range(b_lo, b_hi):
-            for sid in range(self.cfg.n_shards):
+            for sid in (range(self.cfg.n_shards) if sids is None else sids):
                 keys.append(DeltaKey(si.span.tsid, sid, f"E:{b}", 0))
         out = EventLog.empty()
-        got = {}
-        ok_keys = []
-        for k in keys:
-            try:
-                got[k] = self.store.get(k)
-                ok_keys.append(k)
-            except KeyError:
-                continue
+        # a bucket may have no events on a given shard -> key absent
+        got = self.store.multiget(keys, c=c, missing_ok=True)
         logs = []
-        for k in ok_keys:
+        for k in keys:
+            if k not in got:
+                continue
             a = got[k]
-            self.last_cost.add(1, sum(x.nbytes for x in a.values()), len(a["t"]))
+            self._record_cost(1, sum(x.nbytes for x in a.values()), len(a["t"]))
             logs.append(a)
         if not logs:
             return out
@@ -433,9 +480,13 @@ class TGI:
         return ev.take(np.argsort(ev.t, kind="stable"))
 
     def get_snapshot(self, t: int, c: int = 1, pids: Optional[Sequence[int]] = None,
-                     use_kernel: bool = False) -> GraphState:
+                     use_kernel: bool = False,
+                     projection: Optional[Sequence[str]] = None) -> GraphState:
         """Algorithm 1.  pids restricts to a partition subset (used by the
-        k-hop and partition-parallel TAF fetch paths)."""
+        k-hop and partition-parallel TAF fetch paths); ``projection``
+        (planner hook) lists the optional payload fields to fetch —
+        passing one without "attrs" skips the attribute tiles entirely
+        (the returned attrs are then -1/unset)."""
         self.last_cost = FetchCost()
         si = self._span_index(t)
         # nearest checkpoint at or before t
@@ -443,7 +494,8 @@ class TGI:
             i for i, ct in enumerate(si.checkpoint_ts) if ct <= t
         ) if any(ct <= t for ct in si.checkpoint_ts) else 0
         path = self._hierarchy_path(si, leaf)
-        deltas = [self._fetch_delta(si.span.tsid, did, pids, si, c) for did in path]
+        deltas = [self._fetch_delta(si.span.tsid, did, pids, si, c, projection)
+                  for did in path]
         state = overlay_fold(deltas, use_kernel=use_kernel)
         # replay eventlists from checkpoint to t
         t_ck = si.checkpoint_ts[leaf]
@@ -452,7 +504,11 @@ class TGI:
             if hi > lo and self._events.t[lo] <= t and self._events.t[hi - 1] > t_ck
         ]
         if ev_buckets:
-            ev = self._fetch_eventlists(si, min(ev_buckets), max(ev_buckets) + 1, c)
+            sids = None
+            if pids is not None:
+                sids = sorted({self._sid_of_pid(int(p)) for p in pids})
+            ev = self._fetch_eventlists(si, min(ev_buckets), max(ev_buckets) + 1, c,
+                                        sids=sids)
             ev = ev.take(np.nonzero((ev.t > t_ck) & (ev.t <= t))[0])
             if pids is not None:
                 # keep events with EITHER endpoint in the fetched pids —
@@ -474,7 +530,7 @@ class TGI:
             # materialize only the fetched partitions: unfetched ones hold
             # partial (event-only) state and must not leak into the result
             mask = np.zeros(self.cfg.n_parts, bool)
-            mask[np.asarray(pids)] = True
+            mask[np.asarray(pids, np.int64)] = True  # stays valid for pids=[]
             state.valid &= mask[:, None]
             psize = si.smap.psize
             e_pid = (state.e_src.astype(np.int64) // psize)
@@ -505,7 +561,11 @@ class TGI:
         for tsid in np.unique(tsids):
             si2 = self.spans[int(tsid)]
             bks = np.unique(buckets[tsids == tsid])
-            got = self._fetch_eventlists(si2, int(bks.min()), int(bks.max()) + 1, c)
+            # events touching nid are replicated to nid's shard: read it alone
+            pid2, _, found2 = si2.smap.lookup(np.asarray([nid]))
+            sids = [self._sid_of_pid(int(pid2[0]))] if found2[0] else None
+            got = self._fetch_eventlists(si2, int(bks.min()), int(bks.max()) + 1, c,
+                                         sids=sids)
             ev = ev.concat(got, sort=False)
         ev = ev.take(np.argsort(ev.t, kind="stable"))
         sel = ((ev.src == nid) | (ev.dst == nid)) & (ev.t > t0) & (ev.t <= t1)

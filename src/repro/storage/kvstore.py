@@ -150,7 +150,12 @@ class DeltaStore:
             raise KeyMissing(key)
         return found
 
-    def get(self, key: DeltaKey) -> Dict[str, np.ndarray]:
+    def get(self, key: DeltaKey,
+            fields: Optional[Iterable[str]] = None) -> Dict[str, np.ndarray]:
+        """Read one micro-delta.  ``fields`` projects the read to the named
+        arrays: unrequested columns are never materialized and only the
+        projected bytes count toward ``stats.bytes_read`` (the storage end
+        of the planner's projection pushdown)."""
         last_err: Exception = KeyMissing(key)
         for j, node in enumerate(self.replicas(key)):
             if node in self.down:
@@ -162,28 +167,45 @@ class DeltaStore:
             except KeyMissing as e:
                 last_err = e
                 continue
+            arrays = serialize.loads(blob, fields=fields)
+            nb = (len(blob) if fields is None
+                  else sum(a.nbytes for a in arrays.values()))
             with self._lock:
                 self.stats.reads += 1
-                self.stats.bytes_read += len(blob)
+                self.stats.bytes_read += nb
                 if j > 0:
                     self.stats.failovers += 1
-            return serialize.loads(blob)
+            return arrays
         if isinstance(last_err, KeyMissing):
             raise last_err
         raise StorageNodeDown(f"no live replica for {key}")
 
-    def multiget(self, keys: Iterable[DeltaKey], c: int = 1) -> Dict[DeltaKey, Dict]:
+    def multiget(self, keys: Iterable[DeltaKey], c: int = 1,
+                 fields: Optional[Iterable[str]] = None,
+                 missing_ok: bool = False) -> Dict[DeltaKey, Dict]:
         """Parallel fetch with c clients (paper Fig. 11/12's c parameter).
         Keys are routed per storage node so each client drains distinct
-        nodes — the paper's direct QP->storage parallelism."""
+        nodes — the paper's direct QP->storage parallelism.  With
+        ``missing_ok`` absent keys are skipped instead of raising (sparse
+        key spaces like per-shard eventlists); node failures still raise."""
         keys = list(keys)
-        if c <= 1:
-            return {k: self.get(k) for k in keys}
         out: Dict[DeltaKey, Dict] = {}
+        if c <= 1:
+            for k in keys:
+                try:
+                    out[k] = self.get(k, fields=fields)
+                except KeyMissing:
+                    if not missing_ok:
+                        raise
+            return out
         with cf.ThreadPoolExecutor(max_workers=c) as ex:
-            futs = {ex.submit(self.get, k): k for k in keys}
+            futs = {ex.submit(self.get, k, fields): k for k in keys}
             for fut in cf.as_completed(futs):
-                out[futs[fut]] = fut.result()
+                try:
+                    out[futs[fut]] = fut.result()
+                except KeyMissing:
+                    if not missing_ok:
+                        raise
         return out
 
     def keys_for_placement(self, tsid: int, sid: int) -> List[DeltaKey]:

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import io
 import struct
-from typing import Dict
+from typing import Dict, Iterable, Optional
 
 import numpy as np
 
@@ -43,9 +43,13 @@ def dumps(arrays: Dict[str, np.ndarray]) -> bytes:
     return buf.getvalue()
 
 
-def loads(data: bytes) -> Dict[str, np.ndarray]:
+def loads(data: bytes, fields: Optional[Iterable[str]] = None) -> Dict[str, np.ndarray]:
+    """Deserialize a block.  ``fields`` projects the read: only the named
+    arrays are materialized (others are seeked over without a copy) — the
+    storage half of the query planner's attribute-projection pushdown."""
     buf = memoryview(data)
     assert bytes(buf[:4]) == MAGIC, "bad TGI block"
+    want = None if fields is None else set(fields)
     (n,) = struct.unpack_from("<I", buf, 4)
     off = 8
     out: Dict[str, np.ndarray] = {}
@@ -61,7 +65,7 @@ def loads(data: bytes) -> Dict[str, np.ndarray]:
         dt = _CODE_DT[code]
         count = int(np.prod(shape)) if ndim else 1
         nbytes = count * dt.itemsize
-        arr = np.frombuffer(buf, dtype=dt, count=count, offset=off).reshape(shape)
+        if want is None or name in want:
+            out[name] = np.frombuffer(buf, dtype=dt, count=count, offset=off).reshape(shape)
         off += nbytes
-        out[name] = arr
     return out

@@ -2,6 +2,10 @@
 highest local clustering coefficient (Fig. 7a), community comparison
 (7b), network-density evolution (7c), incremental label counting (Fig. 8),
 plus degree series and PageRank-over-time.
+
+These are thin shims over the unified query layer: each series function
+builds a ``TemporalQuery`` over its operand and executes the compiled
+plan (repro.taf.query is the preferred surface for new code).
 """
 from __future__ import annotations
 
@@ -12,6 +16,7 @@ import numpy as np
 from repro.core.events import EDGE_ADD, EDGE_DEL, NATTR_SET
 from repro.core.snapshot import GraphState
 from repro.taf import operators as ops
+from repro.taf.query import TemporalQuery
 from repro.taf.son import SoN, SoTS
 
 
@@ -64,7 +69,7 @@ def density_evolution(sots: SoTS, n_samples: int = 10):
         e = len(g.edge_key)
         return 0.0 if n < 2 else 2.0 * e / (n * (n - 1))
 
-    return ops.evolution(sots, density, n_samples=n_samples)
+    return TemporalQuery.over(sots).evolution(density, n_samples=n_samples).execute()
 
 
 # ---------------------------------------------------------------------------
@@ -76,7 +81,9 @@ def degree_series_temporal(sots: SoTS, points=None):
     def f(present, attrs, son, i, t):
         return float(len(ops.neighbors_at(sots, i, t))) if present else 0.0
 
-    return ops.node_compute_temporal(sots, f, points)
+    return (TemporalQuery.over(sots)
+            .node_compute(f, style="temporal", points=points, label="degree")
+            .execute())
 
 
 def degree_series_delta(sots: SoTS, points=None):
@@ -91,7 +98,10 @@ def degree_series_delta(sots: SoTS, points=None):
             return aux, val - 1.0
         return aux, val
 
-    return ops.node_compute_delta(sots, f, f_delta, points)
+    return (TemporalQuery.over(sots)
+            .node_compute(f, style="delta", f_delta=f_delta, points=points,
+                          label="degree")
+            .execute())
 
 
 # ---------------------------------------------------------------------------
@@ -109,7 +119,10 @@ def label_count_temporal(sots: SoTS, label: int, attr_key: int = 0, points=None)
         nbrs = ops.neighbors_at(sots, i, t)
         return float(sum(1 for v in nbrs if label_of(int(v), t) == label))
 
-    return ops.node_compute_temporal(sots, f, points)
+    return (TemporalQuery.over(sots)
+            .node_compute(f, style="temporal", points=points,
+                          label=f"label_count({label})")
+            .execute())
 
 
 def label_count_delta(sots: SoTS, label: int, attr_key: int = 0, points=None):
@@ -133,7 +146,10 @@ def label_count_delta(sots: SoTS, label: int, attr_key: int = 0, points=None):
                 val -= 1.0
         return aux, val
 
-    return ops.node_compute_delta(sots, f, f_delta, points)
+    return (TemporalQuery.over(sots)
+            .node_compute(f, style="delta", f_delta=f_delta, points=points,
+                          label=f"label_count({label})")
+            .execute())
 
 
 def _label_lookup(sots: SoTS, attr_key: int):

@@ -16,7 +16,8 @@ Two pieces:
 """
 from __future__ import annotations
 
-import functools
+import dataclasses
+import warnings
 from typing import Callable, Dict, Optional
 
 import jax
@@ -28,13 +29,20 @@ from repro.taf.son import SoN, build_son
 
 def make_worker_mesh():
     n = len(jax.devices())
-    return jax.make_mesh((n,), ("workers",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    try:  # axis_types landed after jax 0.4.x; plain mesh is equivalent here
+        return jax.make_mesh((n,), ("workers",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+    except (AttributeError, TypeError):
+        return jax.make_mesh((n,), ("workers",))
 
 
 def parallel_fetch(tgi, t0: int, t1: int, c: int = 1) -> SoN:
-    """Partition-parallel SoN fetch: one storage read stream per shard
-    (paper: per-QP), merged into the SoA operand."""
+    """Deprecated: use ``HistoricalGraphStore.nodes(t0, t1, c=...)`` —
+    kept as a thin shim over the same partition-parallel fetch."""
+    warnings.warn(
+        "parallel_fetch is deprecated; use HistoricalGraphStore.nodes()",
+        DeprecationWarning, stacklevel=2,
+    )
     return build_son(tgi, t0, t1, c=max(c, tgi.cfg.n_shards))
 
 
@@ -98,11 +106,15 @@ def degree_at_kernel(t: int):
 
 
 def sharded_degree_at(sots, t: int, mesh=None) -> np.ndarray:
-    """Degree-at-t for every SoTS member, computed on devices."""
-    son = sots
-    deg0 = (son.adj_indptr[1:] - son.adj_indptr[:-1]).astype(np.int32)
-    attrs = np.concatenate([son.init_attrs, deg0[:, None]], axis=1)
-    patched = type(son).__new__(type(son))
-    patched.__dict__.update(son.__dict__)
-    patched.init_attrs = attrs
-    return sharded_node_compute(patched, degree_at_kernel(t), mesh=mesh)
+    """Degree-at-t for every SoTS member, computed on devices (a thin
+    shim over the plan executor's style="kernel" compute path)."""
+    from repro.taf.query import TemporalQuery  # deferred: avoids cycle
+
+    deg0 = (sots.adj_indptr[1:] - sots.adj_indptr[:-1]).astype(np.int32)
+    patched = dataclasses.replace(
+        sots, init_attrs=np.concatenate([sots.init_attrs, deg0[:, None]], axis=1)
+    )
+    return (TemporalQuery.over(patched)
+            .node_compute(degree_at_kernel(t), style="kernel", mesh=mesh,
+                          label=f"degree@{t}")
+            .execute())

@@ -45,15 +45,12 @@ def selection(son: SoN, pred: Callable[[SoN], np.ndarray]) -> SoN:
 # ---------------------------------------------------------------------------
 
 
-def _state_at(son: SoN, t: int):
-    """Vectorized replay of per-node events up to t over the initial
-    state.  Returns (present (N,), attrs (N,K), neighbor sets as dict for
-    SoTS)."""
+def _state_at_ref(son: SoN, t: int):
+    """Reference per-event replay (the pre-vectorization semantics the
+    fast path below is property-tested against)."""
     N = len(son)
     present = son.init_present.copy()
     attrs = son.init_attrs.copy()
-    K = attrs.shape[1]
-    # flat pass over the CSR event arrays (chronological within node)
     upto = son.ev_t <= t
     node_of_ev = np.repeat(np.arange(N), son.ev_indptr[1:] - son.ev_indptr[:-1])
     sel = np.nonzero(upto)[0]
@@ -68,6 +65,56 @@ def _state_at(son: SoN, t: int):
         elif k == NATTR_SET:
             present[i] = 1
             attrs[i, son.ev_key[j]] = son.ev_val[j]
+    return present, attrs
+
+
+def _state_at(son: SoN, t: int):
+    """Vectorized last-write-wins replay of per-node events up to t over
+    the initial state.  Returns (present (N,), attrs (N,K)).
+
+    The CSR event arrays are grouped by node and chronological within a
+    node, so "last entry of each group" is exactly the replay result:
+    presence takes the final NODE_ADD/NODE_DEL/NATTR_SET per node; attrs
+    take the final write per (node, key), where a NODE_DEL counts as
+    writing -1 to every key.
+    """
+    N = len(son)
+    present = son.init_present.copy()
+    attrs = son.init_attrs.copy()
+    K = attrs.shape[1]
+    if not len(son.ev_t):
+        return present, attrs
+    idx = np.nonzero(son.ev_t <= t)[0]
+    if not len(idx):
+        return present, attrs
+    node_of_ev = np.repeat(np.arange(N), son.ev_indptr[1:] - son.ev_indptr[:-1])
+    nodes = node_of_ev[idx]
+    kind = son.ev_kind[idx]
+
+    # --- presence: last node-state event per node wins ---
+    pm = (kind == NODE_ADD) | (kind == NODE_DEL) | (kind == NATTR_SET)
+    if pm.any():
+        pn, pk = nodes[pm], kind[pm]
+        last = np.r_[pn[1:] != pn[:-1], True]
+        present[pn[last]] = (pk[last] != NODE_DEL).astype(present.dtype)
+
+    # --- attrs: last write per (node, key) wins ---
+    am = kind == NATTR_SET
+    dm = kind == NODE_DEL
+    if am.any() or dm.any():
+        seq = np.arange(len(idx))  # chronological rank within the replay
+        an, ak = nodes[am], son.ev_key[idx][am].astype(np.int64)
+        av, aseq = son.ev_val[idx][am], seq[am]
+        dn, dseq = nodes[dm], seq[dm]
+        # a NODE_DEL clears every attribute slot: expand it to K writes
+        wn = np.concatenate([an, np.repeat(dn, K)])
+        wk = np.concatenate([ak, np.tile(np.arange(K, dtype=np.int64), len(dn))])
+        wv = np.concatenate([av, np.full(len(dn) * K, -1, attrs.dtype)])
+        ws = np.concatenate([aseq, np.repeat(dseq, K)])
+        order = np.lexsort((ws, wk, wn))
+        wn, wk, wv = wn[order], wk[order], wv[order]
+        last = np.r_[(wn[1:] != wn[:-1]) | (wk[1:] != wk[:-1]), True]
+        attrs[wn[last], wk[last]] = wv[last]
     return present, attrs
 
 

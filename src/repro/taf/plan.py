@@ -1,0 +1,296 @@
+"""Compiled query plans over the TAF (the Kairos-style plan seam).
+
+A lazy ``TemporalQuery`` (repro.taf.query) compiles into a ``Plan`` — a
+linear chain of typed stages — and one ``PlanExecutor`` runs it:
+
+* ``Fetch``       — SoN/SoTS retrieval from the TGI with the planner's
+                    pushdowns applied: partition pruning (a node-set
+                    selection fetches only the covering pids) and
+                    attribute projection (attrs tiles skipped when no
+                    stage reads them).  Cost is accounted per plan via
+                    ``TGI.cost_scope``.
+* ``Materialize`` — start from an operand already in memory (the shim
+                    path for the legacy free functions).
+* ``Select``      — entity-centric filter (operator 1).
+* ``Slice``       — timeslice (operator 2); folded into a following
+                    Compute when it only pins the evaluation points.
+* ``Compute``     — NodeCompute/NodeComputeTemporal/NodeComputeDelta
+                    (operators 4-6) on the vectorized numpy path, or a
+                    device kernel under shard_map (style="kernel").
+* ``Evolution``   — aggregate quantity over time (operator 8).
+* ``Aggregate``   — temporal aggregation (operator 9).
+
+Keeping the chain declarative until ``execute()`` is what lets fetch see
+the whole query: selection and projection push below the storage reads,
+and later PRs can fuse/cache/re-target stages without touching callers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import numpy as np
+
+from repro.core.tgi import FetchCost
+from repro.taf import operators as ops
+from repro.taf.son import SoN, build_son, build_sots
+
+
+# ---------------------------------------------------------------------------
+# Stages
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Fetch:
+    """Pull the operand from the TGI.  ``node_ids`` is the pushed-down
+    node selection (None = all nodes at t0); ``projection`` the optional
+    payload fields to read (None = everything)."""
+
+    t0: int
+    t1: int
+    subgraph: bool = False
+    node_ids: Optional[Tuple[int, ...]] = None
+    projection: Optional[Tuple[str, ...]] = None
+    c: int = 1
+    kind = "fetch"
+
+    def describe(self) -> str:
+        bits = [f"t0={self.t0}", f"t1={self.t1}",
+                "operand=SoTS" if self.subgraph else "operand=SoN"]
+        if self.node_ids is not None:
+            bits.append(f"nodes={len(self.node_ids)} (pruned)")
+        if self.projection is not None:
+            bits.append(f"projection={list(self.projection)}")
+        if self.c != 1:
+            bits.append(f"c={self.c}")
+        return f"Fetch[{', '.join(bits)}]"
+
+
+@dataclasses.dataclass(frozen=True)
+class Materialize:
+    """Operand already in memory (no storage reads, zero fetch cost)."""
+
+    operand: SoN
+    kind = "materialize"
+
+    def describe(self) -> str:
+        name = type(self.operand).__name__
+        return f"Materialize[{name}, n={len(self.operand)}]"
+
+
+@dataclasses.dataclass(frozen=True)
+class Select:
+    """Operator 1: pred(son) -> bool mask over nodes."""
+
+    pred: Callable[[SoN], np.ndarray]
+    label: str = "λ"
+    kind = "select"
+
+    def describe(self) -> str:
+        return f"Select[{self.label}]"
+
+
+@dataclasses.dataclass(frozen=True)
+class Slice:
+    """Operator 2: state at time(s) ts."""
+
+    ts: Any
+    kind = "slice"
+
+    def describe(self) -> str:
+        return f"Slice[ts={self.ts}]"
+
+
+@dataclasses.dataclass(frozen=True)
+class Compute:
+    """Operators 4-6 / device kernels.
+
+    style: "static" (one timepoint) | "temporal" (O(N·T) re-eval) |
+    "delta" (O(N+T) incremental; needs f_delta) | "kernel" (vectorized
+    jnp kernel run under shard_map on the device mesh).
+    """
+
+    fn: Callable
+    style: str = "static"
+    f_delta: Optional[Callable] = None
+    points: Any = None
+    t: Optional[int] = None
+    mesh: Any = None
+    label: Optional[str] = None
+    kind = "compute"
+
+    def describe(self) -> str:
+        backend = "shard_map" if self.style == "kernel" else "numpy"
+        name = self.label or getattr(self.fn, "__name__", "f")
+        return f"Compute[{name}, style={self.style}, backend={backend}]"
+
+
+@dataclasses.dataclass(frozen=True)
+class Evolution:
+    """Operator 8: scalar f(son, t) sampled over time."""
+
+    fn: Callable
+    points: Any = None
+    n_samples: int = 10
+    kind = "evolution"
+
+    def describe(self) -> str:
+        name = getattr(self.fn, "__name__", "f")
+        return f"Evolution[{name}, n_samples={self.n_samples}]"
+
+
+@dataclasses.dataclass(frozen=True)
+class Aggregate:
+    """Operator 9 over the preceding stage's timeseries."""
+
+    op: str
+    kind = "aggregate"
+
+    def describe(self) -> str:
+        return f"Aggregate[{self.op}]"
+
+
+SOURCE_KINDS = ("fetch", "materialize")
+TERMINAL_KINDS = ("slice", "compute", "evolution")
+
+
+# ---------------------------------------------------------------------------
+# Plan
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    stages: Tuple[Any, ...]
+
+    @property
+    def kinds(self) -> Tuple[str, ...]:
+        return tuple(s.kind for s in self.stages)
+
+    def validate(self) -> "Plan":
+        kinds = self.kinds
+        if not kinds or kinds[0] not in SOURCE_KINDS:
+            raise ValueError("plan must start with a Fetch/Materialize stage")
+        if sum(k in SOURCE_KINDS for k in kinds) != 1:
+            raise ValueError("plan must have exactly one source stage")
+        seen_terminal = False
+        seen_series = False  # compute/evolution produce an aggregatable series
+        for k in kinds[1:]:
+            if k in SOURCE_KINDS:
+                raise ValueError("source stage must come first")
+            if k == "select" and seen_terminal:
+                raise ValueError("Select must precede Slice/Compute/Evolution")
+            if k in TERMINAL_KINDS:
+                if seen_terminal:
+                    raise ValueError("only one Slice/Compute/Evolution per plan")
+                seen_terminal = True
+                seen_series = k in ("compute", "evolution")
+            if k == "aggregate" and not seen_series:
+                raise ValueError("Aggregate needs a preceding Compute/Evolution "
+                                 "(a bare Slice yields a state dict, not a series)")
+        return self
+
+    def describe(self) -> str:
+        return "Plan\n" + "\n".join(f"  {s.describe()}" for s in self.stages)
+
+
+@dataclasses.dataclass
+class PlanResult:
+    value: Any
+    cost: FetchCost
+    operand: Optional[SoN]
+    plan: Plan
+
+
+# ---------------------------------------------------------------------------
+# Executor
+# ---------------------------------------------------------------------------
+
+
+class PlanExecutor:
+    """Runs a Plan: one fetch (pushdowns applied), then vectorized host
+    operators or shard_map device kernels over the operand."""
+
+    def __init__(self, tgi=None):
+        self.tgi = tgi
+
+    def run(self, plan: Plan) -> PlanResult:
+        plan.validate()
+        operand: Optional[SoN] = None
+        value: Any = None
+        cost = FetchCost()
+        for stage in plan.stages:
+            k = stage.kind
+            if k == "fetch":
+                operand, cost = self._fetch(stage)
+                value = operand
+            elif k == "materialize":
+                operand = stage.operand
+                value = operand
+            elif k == "select":
+                operand = ops.selection(operand, stage.pred)
+                value = operand
+            elif k == "slice":
+                value = ops.timeslice(operand, stage.ts)
+            elif k == "compute":
+                value = self._compute(operand, stage)
+            elif k == "evolution":
+                value = ops.evolution(operand, stage.fn, points=stage.points,
+                                      n_samples=stage.n_samples)
+            elif k == "aggregate":
+                value = self._aggregate(value, stage.op)
+            else:  # pragma: no cover
+                raise ValueError(f"unknown stage kind {k!r}")
+        return PlanResult(value=value, cost=cost, operand=operand, plan=plan)
+
+    # ---- stage implementations ----
+
+    def _fetch(self, stage: Fetch) -> Tuple[SoN, FetchCost]:
+        if self.tgi is None:
+            raise ValueError("Fetch stage requires a TGI-backed executor")
+        node_ids = None
+        pids = None
+        if stage.node_ids is not None:
+            node_ids = np.unique(np.asarray(stage.node_ids, np.int32))
+            pids = self.tgi.pids_for_nodes(node_ids, stage.t0)
+        build = build_sots if stage.subgraph else build_son
+        with self.tgi.cost_scope() as acc:
+            operand = build(self.tgi, stage.t0, stage.t1, node_ids=node_ids,
+                            c=stage.c, pids=pids, projection=stage.projection)
+        if node_ids is not None:
+            # parity with the post-fetch Select spelling: the query's node
+            # universe is the t0 snapshot, so drop requested ids that are
+            # not alive at t0 (build_son materializes them regardless)
+            operand = operand.subset(np.nonzero(operand.init_present == 1)[0])
+        return operand, acc
+
+    def _compute(self, son: SoN, stage: Compute) -> Any:
+        if stage.style == "static":
+            return ops.node_compute(son, stage.fn, t=stage.t)
+        if stage.style == "temporal":
+            return ops.node_compute_temporal(son, stage.fn, points=stage.points)
+        if stage.style == "delta":
+            if stage.f_delta is None:
+                raise ValueError('style="delta" requires f_delta')
+            return ops.node_compute_delta(son, stage.fn, stage.f_delta,
+                                          points=stage.points)
+        if stage.style == "kernel":
+            from repro.taf import exec as taf_exec  # deferred: pulls in jax
+
+            return taf_exec.sharded_node_compute(son, stage.fn, mesh=stage.mesh)
+        raise ValueError(f"unknown compute style {stage.style!r}")
+
+    @staticmethod
+    def _aggregate(value: Any, op: str) -> Any:
+        if isinstance(value, tuple) and len(value) == 2:
+            ts, series = value
+            series = np.asarray(series)
+            if series.ndim == 2:  # (N, T) node series -> per-node reduction
+                if op not in ("max", "min", "mean"):
+                    raise ValueError(
+                        f"aggregate {op!r} needs a scalar timeseries; "
+                        "got per-node series")
+                return getattr(series, op)(axis=1)
+            return ops.temp_aggregate(series, op, t=np.asarray(ts))
+        return ops.temp_aggregate(np.asarray(value), op)

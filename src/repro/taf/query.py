@@ -1,0 +1,338 @@
+"""Unified query surface: ``HistoricalGraphStore`` + lazy ``TemporalQuery``.
+
+One object wraps the whole stack (DeltaStore -> TGI -> TAF) and one
+builder expresses every workload:
+
+    store = HistoricalGraphStore.build(events, n_shards=4)
+    ts, deg = (store.nodes(t0, t1)
+                    .filter(lambda s: s.init_attrs[:, 0] == 0)
+                    .node_compute(f, style="delta", f_delta=f_d)
+                    .execute())
+
+Nothing runs until ``execute()``: the chain compiles to a ``Plan``
+(repro.taf.plan) whose Fetch stage carries the pushdowns — a node-set
+``filter`` prunes the partitions read from storage, ``project`` drops
+attribute tiles — so unneeded shards and columns are never pulled.  The
+fetch cost of the last executed plan is on ``store.last_cost``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterable, Optional, Tuple
+
+import numpy as np
+
+from repro.core.events import EventLog
+from repro.core.tgi import TGI, TGIConfig, FetchCost
+from repro.storage.kvstore import DeltaStore
+from repro.taf.plan import (
+    Aggregate,
+    Compute,
+    Evolution,
+    Fetch,
+    Materialize,
+    Plan,
+    PlanExecutor,
+    PlanResult,
+    Select,
+    Slice,
+)
+from repro.taf.son import SoN, SoTS
+
+
+class HistoricalGraphStore:
+    """Facade over DeltaStore + TGI + TAF.
+
+    Construction:  ``build(events, ...)`` indexes an event history into a
+    fresh (or supplied) DeltaStore; ``from_tgi(tgi)`` wraps an existing
+    index.  Retrieval primitives (Algorithms 1-5) pass through; temporal
+    analytics start from ``nodes()`` / ``subgraphs()`` which return lazy
+    TemporalQuery builders.
+    """
+
+    def __init__(self, tgi: TGI):
+        self.tgi = tgi
+        self.last_cost = FetchCost()  # cost of the last executed plan
+
+    # ------------------------------------------------------------------
+    # Construction
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def build(cls, events: EventLog, cfg: Optional[TGIConfig] = None,
+              store: Optional[DeltaStore] = None,
+              **cfg_kw) -> "HistoricalGraphStore":
+        if cfg is None:
+            cfg = TGIConfig(**cfg_kw)
+        elif cfg_kw:  # kwargs override fields of the supplied config
+            cfg = dataclasses.replace(cfg, **cfg_kw)
+        store = store or DeltaStore(m=cfg.n_shards, r=1, backend="mem")
+        return cls(TGI.build(events, cfg, store))
+
+    @classmethod
+    def from_tgi(cls, tgi: TGI) -> "HistoricalGraphStore":
+        return cls(tgi)
+
+    @property
+    def cfg(self) -> TGIConfig:
+        return self.tgi.cfg
+
+    @property
+    def store(self) -> DeltaStore:
+        return self.tgi.store
+
+    def update(self, new_events: EventLog) -> None:
+        """Append a batch of new events to the index."""
+        self.tgi.update(new_events)
+
+    def time_range(self) -> Tuple[int, int]:
+        return self.tgi._events.time_range()
+
+    def index_size_bytes(self) -> int:
+        return self.tgi.index_size_bytes()
+
+    # ------------------------------------------------------------------
+    # Retrieval primitives (paper Algorithms 1-5)
+    # ------------------------------------------------------------------
+
+    def snapshot(self, t: int, c: int = 1, **kw):
+        with self.tgi.cost_scope() as acc:
+            g = self.tgi.get_snapshot(t, c=c, **kw)
+        self.last_cost = acc
+        return g
+
+    def node_history(self, nid: int, t0: int, t1: int, c: int = 1):
+        # cost_scope: these retrievals issue several get_* calls, each of
+        # which resets tgi.last_cost — the scope totals the whole query
+        with self.tgi.cost_scope() as acc:
+            out = self.tgi.get_node_history(nid, t0, t1, c=c)
+        self.last_cost = acc
+        return out
+
+    def k_hop(self, nid: int, t: int, k: int, c: int = 1, method: str = "auto"):
+        with self.tgi.cost_scope() as acc:
+            g = self.tgi.get_k_hop(nid, t, k, c=c, method=method)
+        self.last_cost = acc
+        return g
+
+    def node_1hop_history(self, nid: int, t0: int, t1: int, c: int = 1):
+        with self.tgi.cost_scope() as acc:
+            out = self.tgi.get_node_1hop_history(nid, t0, t1, c=c)
+        self.last_cost = acc
+        return out
+
+    # ------------------------------------------------------------------
+    # Lazy query surface
+    # ------------------------------------------------------------------
+
+    def nodes(self, t0: int, t1: int, c: int = 1) -> "TemporalQuery":
+        """Lazy SoN query over the interval [t0, t1)."""
+        return TemporalQuery(store=self, t0=t0, t1=t1, c=c)
+
+    def subgraphs(self, t0: int, t1: int, c: int = 1) -> "TemporalQuery":
+        """Lazy SoTS query (1-hop star subgraphs) — ``nodes().khop(1)``."""
+        return self.nodes(t0, t1, c=c).khop(1)
+
+    # ------------------------------------------------------------------
+    # Analytics conveniences (the paper's worked examples)
+    # ------------------------------------------------------------------
+
+    def max_lcc(self, t0: int, t1: int, t: Optional[int] = None):
+        from repro.taf import analytics
+
+        sots = self.subgraphs(t0, t1).materialize().operand
+        return analytics.max_lcc(sots, t)
+
+    def density_evolution(self, t0: int, t1: int, n_samples: int = 10):
+        from repro.taf import analytics
+
+        sots = self.subgraphs(t0, t1).materialize().operand
+        return analytics.density_evolution(sots, n_samples=n_samples)
+
+    def pagerank_over_time(self, t0: int, t1: int, points, **kw):
+        from repro.taf import analytics
+
+        sots = self.subgraphs(t0, t1).materialize().operand
+        return analytics.pagerank_over_time(sots, points, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class TemporalQuery:
+    """Lazy, composable temporal query.
+
+    Built from ``store.nodes()/subgraphs()`` (fetched at execute time,
+    with pushdown) or ``TemporalQuery.over(operand)`` (already-fetched
+    SoN/SoTS).  Builder methods return new queries; ``plan()`` compiles
+    the chain; ``execute()`` runs it and returns the value; ``run()``
+    additionally returns fetch cost + operand (PlanResult).
+    """
+
+    store: Optional[HistoricalGraphStore] = None
+    t0: int = 0
+    t1: int = 0
+    c: int = 1
+    subgraph: bool = False
+    node_ids: Optional[Tuple[int, ...]] = None  # pushdown selection
+    projection: Optional[Tuple[str, ...]] = None  # pushdown projection
+    operand: Optional[SoN] = None  # materialized source (no fetch)
+    stages: Tuple[Any, ...] = ()  # post-source stages
+
+    # ------------------------------------------------------------------
+    # Sources
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def over(cls, operand: SoN) -> "TemporalQuery":
+        """Query over an in-memory operand (zero fetch cost)."""
+        return cls(operand=operand, t0=operand.t0, t1=operand.t1,
+                   subgraph=isinstance(operand, SoTS))
+
+    # ------------------------------------------------------------------
+    # Builder methods (each returns a new query)
+    # ------------------------------------------------------------------
+
+    def _with(self, **kw) -> "TemporalQuery":
+        return dataclasses.replace(self, **kw)
+
+    def _append(self, stage) -> "TemporalQuery":
+        return self._with(stages=self.stages + (stage,))
+
+    def filter(self, pred: Optional[Callable[[SoN], np.ndarray]] = None, *,
+               node_ids: Optional[Iterable[int]] = None,
+               label: str = "λ") -> "TemporalQuery":
+        """Selection (operator 1).  ``pred`` is a vectorized callable
+        son -> bool mask; ``node_ids`` is a structured node-set predicate
+        that the compiler pushes down into the fetch (partition pruning),
+        so unneeded shards are never read."""
+        q = self
+        if node_ids is not None:
+            ids = tuple(int(i) for i in np.asarray(list(node_ids)).ravel())
+            if q.operand is not None or q.stages:
+                # too late to push below the fetch — apply as a Select
+                arr = np.asarray(ids, np.int32)
+                q = q._append(Select(
+                    lambda s, _a=arr: np.isin(s.node_ids, _a),
+                    label=f"node_ids({len(ids)})"))
+            else:
+                merged = ids if q.node_ids is None else tuple(
+                    sorted(set(q.node_ids) & set(ids)))
+                q = q._with(node_ids=merged)
+        if pred is not None:
+            q = q._append(Select(pred, label=label))
+        return q
+
+    def khop(self, k: int = 1) -> "TemporalQuery":
+        """Expand the operand to k-hop star subgraphs (SoTS).  Must come
+        before any timeslice/compute — adjacency is part of the fetch."""
+        if k != 1:
+            raise ValueError("k-hop SoTS composes 1-hop stars (paper §5.1)")
+        if self.operand is not None:
+            if not isinstance(self.operand, SoTS):
+                raise ValueError("operand-backed query cannot add adjacency; "
+                                 "fetch with subgraphs()/build_sots instead")
+            return self
+        if any(s.kind != "select" for s in self.stages):
+            raise ValueError("khop() must precede timeslice/compute stages")
+        return self._with(subgraph=True)
+
+    def project(self, attrs: bool = True) -> "TemporalQuery":
+        """Attribute projection pushdown: ``project(attrs=False)`` skips
+        the attrs tiles at fetch time (init_attrs will read as unset)."""
+        proj = ("attrs",) if attrs else ()
+        return self._with(projection=proj)
+
+    def timeslice(self, ts) -> "TemporalQuery":
+        """Operator 2.  Standalone it yields the sliced state dict; before
+        a node_compute it pins the compute's evaluation point(s)."""
+        return self._append(Slice(ts))
+
+    def node_compute(self, fn: Callable, style: str = "static",
+                     f_delta: Optional[Callable] = None, points=None,
+                     t: Optional[int] = None, mesh=None,
+                     label: Optional[str] = None) -> "TemporalQuery":
+        """Operators 4-6 (style = static | temporal | delta) or a device
+        kernel under shard_map (style = kernel)."""
+        return self._append(Compute(fn=fn, style=style, f_delta=f_delta,
+                                    points=points, t=t, mesh=mesh, label=label))
+
+    def evolution(self, fn: Callable, points=None,
+                  n_samples: int = 10) -> "TemporalQuery":
+        """Operator 8: scalar fn(son, t) sampled over time."""
+        return self._append(Evolution(fn=fn, points=points, n_samples=n_samples))
+
+    def aggregate(self, op: str) -> "TemporalQuery":
+        """Operator 9 over the preceding stage's series."""
+        return self._append(Aggregate(op))
+
+    # ------------------------------------------------------------------
+    # Compile & run
+    # ------------------------------------------------------------------
+
+    def plan(self) -> Plan:
+        """Compile the chain into a validated Plan.  Pushdowns (node-set
+        selection, projection) are already on the source; a Slice that
+        only pins evaluation points is fused into the following Compute."""
+        if self.operand is not None:
+            source: Any = Materialize(self.operand)
+        else:
+            source = Fetch(t0=self.t0, t1=self.t1, subgraph=self.subgraph,
+                           node_ids=self.node_ids, projection=self.projection,
+                           c=self.c)
+        stages = [source]
+        pending = list(self.stages)
+        i = 0
+        while i < len(pending):
+            s = pending[i]
+            nxt = pending[i + 1] if i + 1 < len(pending) else None
+            if (s.kind == "slice" and nxt is not None and nxt.kind == "compute"
+                    and nxt.points is None and nxt.t is None):
+                # fuse: the slice's timepoint(s) become the compute's
+                # evaluation points (one pass instead of two)
+                ts = np.atleast_1d(np.asarray(s.ts)).astype(np.int64)
+                if nxt.style == "kernel":
+                    raise ValueError(
+                        "timeslice cannot pin evaluation points for a "
+                        'style="kernel" compute; bake t into the kernel')
+                if nxt.style == "static":
+                    if ts.size != 1:
+                        raise ValueError(
+                            "timeslice with multiple points needs "
+                            'style="temporal" or "delta", not "static"')
+                    fused = dataclasses.replace(nxt, t=int(ts[0]))
+                else:
+                    fused = dataclasses.replace(nxt, points=ts)
+                stages.append(fused)
+                i += 2
+                continue
+            stages.append(s)
+            i += 1
+        return Plan(tuple(stages)).validate()
+
+    def explain(self) -> str:
+        return self.plan().describe()
+
+    def run(self) -> PlanResult:
+        """Compile + execute; returns PlanResult (value, cost, operand)."""
+        tgi = self.store.tgi if self.store is not None else None
+        result = PlanExecutor(tgi).run(self.plan())
+        if self.store is not None:
+            self.store.last_cost = result.cost
+        return result
+
+    def execute(self) -> Any:
+        """Compile + execute; returns the result value."""
+        return self.run().value
+
+    def materialize(self) -> "TemporalQuery":
+        """Execute the fetch/select prefix now and return a query over the
+        materialized operand — reuse one fetch across many computes."""
+        n_prefix = 0
+        for s in self.stages:
+            if s.kind != "select":
+                break
+            n_prefix += 1
+        prefix = self._with(stages=self.stages[:n_prefix])
+        result = prefix.run()
+        return dataclasses.replace(
+            TemporalQuery.over(result.operand),
+            stages=self.stages[n_prefix:], store=self.store)

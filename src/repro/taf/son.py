@@ -161,13 +161,19 @@ def _per_node_events(events: EventLog, node_ids: np.ndarray):
 
 
 def build_son(tgi, t0: int, t1: int, node_ids: Optional[np.ndarray] = None,
-              c: int = 1) -> SoN:
+              c: int = 1, pids: Optional[np.ndarray] = None,
+              projection=None, snap: Optional[GraphState] = None) -> SoN:
     """Fetch a SoN from the TGI: Timeslice-at-t0 snapshot + event runs.
 
     The snapshot fetch is partition-parallel (paper Fig. 10): each QP
     reads only its placement chunks; `c` is the parallel fetch factor.
+    ``pids``/``projection`` are the planner's pushdown hooks: a partition
+    subset known to cover ``node_ids`` (pruned fetch) and the optional
+    payload fields actually needed (attribute projection).  ``snap`` lets
+    a caller that already fetched the t0 snapshot (build_sots) reuse it.
     """
-    snap = tgi.get_snapshot(t0, c=c)
+    if snap is None:
+        snap = tgi.get_snapshot(t0, c=c, pids=pids, projection=projection)
     if node_ids is None:
         node_ids = snap.node_ids()
     node_ids = np.unique(np.asarray(node_ids, np.int32))
@@ -186,13 +192,20 @@ def build_son(tgi, t0: int, t1: int, node_ids: Optional[np.ndarray] = None,
 
 
 def build_sots(tgi, t0: int, t1: int, node_ids: Optional[np.ndarray] = None,
-               k: int = 1, c: int = 1) -> SoTS:
-    """SoTS = SoN + initial 1-hop adjacency (k>1 composes neighborhoods)."""
+               k: int = 1, c: int = 1, pids: Optional[np.ndarray] = None,
+               projection=None) -> SoTS:
+    """SoTS = SoN + initial 1-hop adjacency (k>1 composes neighborhoods).
+
+    Pruned fetches stay exact: snapshot deltas mirror every edge under
+    both endpoints' slots, so a partition subset covering the member
+    nodes carries their complete initial adjacency.
+    """
     assert k == 1, "k-hop SoTS composes 1-hop stars (paper §5.1)"
-    snap = tgi.get_snapshot(t0, c=c)
+    snap = tgi.get_snapshot(t0, c=c, pids=pids, projection=projection)
     if node_ids is None:
         node_ids = snap.node_ids()
-    son = build_son(tgi, t0, t1, node_ids, c=c)
+    son = build_son(tgi, t0, t1, node_ids, c=c, pids=pids, projection=projection,
+                    snap=snap)
     src, dst, val = snap.edges()
     # adjacency restricted to son.node_ids as center
     both_src = np.concatenate([src, dst])

@@ -1,0 +1,311 @@
+"""Unified query layer: plan structure, fetch pushdown (pruning +
+projection), numpy-vs-shard_map parity, and the vectorized timeslice
+replay vs its reference loop."""
+import numpy as np
+import pytest
+
+from repro.data.temporal_graph_gen import generate
+from repro.storage.kvstore import DeltaStore
+from repro.taf import HistoricalGraphStore, TemporalQuery, operators as ops
+from repro.taf.son import build_sots
+
+
+@pytest.fixture(scope="module")
+def setup():
+    events = generate(4000, seed=13)
+    store = HistoricalGraphStore.build(
+        events, n_shards=2, parts_per_shard=2, events_per_span=1200,
+        eventlist_size=128, checkpoints_per_span=3,
+        store=DeltaStore(m=3, r=1, backend="mem"))
+    t0g, t1g = store.time_range()
+    t0 = int(t0g + 0.3 * (t1g - t0g))
+    t1 = int(t0g + 0.8 * (t1g - t0g))
+    return store, t0, t1
+
+
+# ---------------------------------------------------------------------------
+# Plan structure (golden)
+# ---------------------------------------------------------------------------
+
+
+def test_plan_structure_golden(setup):
+    store, t0, t1 = setup
+
+    def f(present, attrs, son, i, t):
+        return float(present)
+
+    q = (store.nodes(t0, t1)
+         .filter(lambda s: s.init_present == 1)
+         .khop(1)
+         .node_compute(f, style="temporal")
+         .aggregate("mean"))
+    plan = q.plan()
+    assert plan.kinds == ("fetch", "select", "compute", "aggregate")
+    assert plan.stages[0].subgraph  # khop(1) became a SoTS fetch
+    # standalone timeslice stays a Slice stage ...
+    assert store.nodes(t0, t1).timeslice(t0).plan().kinds == ("fetch", "slice")
+    # ... but fuses into a following compute's evaluation points
+    fused = store.nodes(t0, t1).timeslice(t0).node_compute(f, style="temporal").plan()
+    assert fused.kinds == ("fetch", "compute")
+    assert list(fused.stages[1].points) == [t0]
+
+
+def test_plan_validation(setup):
+    store, t0, t1 = setup
+    with pytest.raises(ValueError):
+        store.nodes(t0, t1).aggregate("max").plan()  # aggregate needs a series
+    with pytest.raises(ValueError):
+        store.nodes(t0, t1).timeslice(t0).aggregate("max").plan()  # dict, not series
+    with pytest.raises(ValueError):
+        (store.nodes(t0, t1).timeslice(t0)
+         .filter(lambda s: s.init_present == 1).plan())  # select after slice
+    with pytest.raises(ValueError):
+        store.nodes(t0, t1).timeslice(t0).khop(1)  # adjacency is fetch-time
+
+
+def test_facade_retrieval_cost_accumulates_across_rounds(setup):
+    """k_hop 'expand' runs one get_snapshot per frontier round, each of
+    which resets tgi.last_cost; the facade must report the whole query."""
+    store, t0, t1 = setup
+    tm = (t0 + t1) // 2
+    g = store.snapshot(tm)
+    assert store.last_cost.n_deltas > 0
+    hub = int(np.argmax(g.degree()))
+    store.k_hop(hub, tm, 2, method="expand")
+    assert store.last_cost.n_deltas > store.tgi.last_cost.n_deltas
+
+
+def test_node_id_filter_pushes_into_fetch(setup):
+    store, t0, t1 = setup
+    plan = store.nodes(t0, t1).filter(node_ids=[1, 2, 3]).plan()
+    assert plan.kinds == ("fetch",)  # absorbed: no residual Select
+    assert plan.stages[0].node_ids == (1, 2, 3)
+    # a callable filter stays a Select stage
+    plan = store.nodes(t0, t1).filter(lambda s: s.init_present == 1).plan()
+    assert plan.kinds == ("fetch", "select")
+
+
+# ---------------------------------------------------------------------------
+# Pushdown correctness: pruned fetch == full fetch, strictly cheaper
+# ---------------------------------------------------------------------------
+
+
+def _ids_in_one_partition(store, node_ids, t0):
+    """Hash placement spreads arbitrary id sets over every partition, so
+    pick the members of a single micro-partition — the selective query a
+    pruned fetch is for."""
+    si = store.tgi._span_index(t0)
+    pid, _, found = si.smap.lookup(node_ids)
+    return node_ids[found & (pid == pid[found][0])]
+
+
+def test_pushdown_pruned_fetch_identical_and_cheaper(setup):
+    store, t0, t1 = setup
+    full = store.nodes(t0, t1).run()
+    ids = _ids_in_one_partition(store, full.operand.node_ids, t0)
+    assert len(ids) > 3
+    pruned = store.nodes(t0, t1).filter(node_ids=ids).run()
+
+    assert pruned.cost.n_deltas < full.cost.n_deltas
+    assert pruned.cost.n_bytes < full.cost.n_bytes
+
+    # identical per-node results on the selected ids
+    tm = (t0 + t1) // 2
+    pos = np.searchsorted(full.operand.node_ids, ids)
+    want = ops.timeslice(full.operand.subset(pos), tm)
+    got = store.nodes(t0, t1).filter(node_ids=ids).timeslice(tm).execute()
+    assert (got["present"] == want["present"]).all()
+    on = want["present"] == 1
+    assert (got["attrs"][on] == want["attrs"][on]).all()
+
+
+def test_pushdown_subgraph_adjacency_exact(setup):
+    """Edges are mirrored under both endpoints' slots, so a pruned SoTS
+    fetch carries the members' complete initial adjacency."""
+    store, t0, t1 = setup
+    full = store.subgraphs(t0, t1).run().operand
+    ids = _ids_in_one_partition(store, full.node_ids, t0)
+    pruned = (store.nodes(t0, t1).filter(node_ids=ids).khop(1)
+              .run().operand)
+    pos = np.searchsorted(full.node_ids, ids)
+    want = full.subset(pos)
+    assert (pruned.node_ids == want.node_ids).all()
+    for i in range(len(want)):
+        nbr_w, _ = want.neighbors_of(i)
+        nbr_p, _ = pruned.neighbors_of(i)
+        assert set(nbr_w.tolist()) == set(nbr_p.tolist())
+
+
+def test_pushdown_empty_selection_yields_empty_operand(setup):
+    """A node-set filter matching nothing in the t0 span must return an
+    empty result, not crash the pruned snapshot path."""
+    store, t0, t1 = setup
+    missing = int(store.tgi.n_nodes) + 1000
+    r = store.nodes(t0, t1).filter(node_ids=[missing]).run()
+    assert len(r.operand) == 0
+
+
+def test_pushdown_matches_post_fetch_select_for_late_born_ids(setup):
+    """The pushed-down and post-fetch spellings of a node-set filter must
+    return the same rows — ids not alive at t0 are outside the query's
+    node universe either way."""
+    store, t0, t1 = setup
+    universe = set(store.nodes(t0, t1).run().operand.node_ids.tolist())
+    # ids that exist in the history but are not alive at t0
+    late = [i for i in range(store.tgi.n_nodes) if i not in universe][:3]
+    alive = sorted(universe)[:3]
+    ids = late + alive
+    pushed = store.nodes(t0, t1).filter(node_ids=ids).run().operand
+    full = store.nodes(t0, t1).run().operand
+    selected = (TemporalQuery.over(full)
+                .filter(node_ids=ids)
+                .run().operand)
+    assert pushed.node_ids.tolist() == selected.node_ids.tolist() == alive
+
+
+def test_sots_fetch_reads_snapshot_once(setup):
+    """build_sots reuses one t0 snapshot for state + adjacency — the SoTS
+    fetch must not cost more deltas than the SoN fetch."""
+    store, t0, t1 = setup
+    son_cost = store.nodes(t0, t1).run().cost
+    sots_cost = store.subgraphs(t0, t1).run().cost
+    assert sots_cost.n_deltas == son_cost.n_deltas
+
+
+def test_slice_fusion_rejects_lossy_chains(setup):
+    store, t0, t1 = setup
+
+    def f(present, attrs, son, i, t):
+        return float(present)
+
+    # multi-point slice cannot silently collapse into a static compute
+    with pytest.raises(ValueError):
+        store.nodes(t0, t1).timeslice([t0, t1]).node_compute(f, style="static").plan()
+    # kernel computes take no evaluation points at all
+    with pytest.raises(ValueError):
+        store.nodes(t0, t1).timeslice(t0).node_compute(f, style="kernel").plan()
+    # multi-point slice into temporal evaluates every point
+    ts, vals = (store.nodes(t0, t1).timeslice([t0, t1])
+                .node_compute(f, style="temporal").execute())
+    assert vals.shape[1] == 2
+
+
+def test_projection_skips_attr_bytes(setup):
+    store, t0, t1 = setup
+    tm = (t0 + t1) // 2
+
+    def fv(present, attrs, son=None, t=None, **kw):
+        return present.astype(float)
+
+    fv.vectorized = True
+    base = store.nodes(t0, t1).node_compute(fv, style="static", t=tm)
+    r_full = base.run()
+    r_proj = base.project(attrs=False).run()
+    np.testing.assert_allclose(r_proj.value, r_full.value)
+    assert r_proj.cost.n_bytes < r_full.cost.n_bytes
+    assert r_proj.cost.n_deltas == r_full.cost.n_deltas  # same shards read
+
+
+# ---------------------------------------------------------------------------
+# numpy vs shard_map parity on node_compute
+# ---------------------------------------------------------------------------
+
+
+def test_numpy_vs_shard_map_node_compute_parity(setup):
+    store, t0, t1 = setup
+    import dataclasses
+
+    from repro.taf import exec as taf_exec
+
+    sots = store.subgraphs(t0, t1).materialize().operand
+    tm = (t0 + t1) // 2
+    deg0 = (sots.adj_indptr[1:] - sots.adj_indptr[:-1]).astype(np.int32)
+    patched = dataclasses.replace(
+        sots, init_attrs=np.concatenate([sots.init_attrs, deg0[:, None]], 1))
+    device = (TemporalQuery.over(patched)
+              .node_compute(taf_exec.degree_at_kernel(tm), style="kernel")
+              .execute())
+    from repro.taf import analytics
+
+    _, host = analytics.degree_series_delta(sots, points=[tm])
+    on = sots.init_present == 1
+    np.testing.assert_allclose(device[on].astype(float), host[on, 0])
+
+
+# ---------------------------------------------------------------------------
+# Vectorized timeslice replay vs reference loop
+# ---------------------------------------------------------------------------
+
+
+def test_state_at_vectorized_matches_reference(setup):
+    store, t0, t1 = setup
+    sots = store.subgraphs(t0, t1).materialize().operand
+    for t in np.linspace(t0 - 1, t1 + 1, 9).astype(np.int64):
+        p_ref, a_ref = ops._state_at_ref(sots, int(t))
+        p_vec, a_vec = ops._state_at(sots, int(t))
+        assert (p_ref == p_vec).all()
+        assert (a_ref == a_vec).all()
+
+
+def test_state_at_delete_then_rewrite():
+    """NODE_DEL clears all attrs; a later NATTR_SET resurrects the node
+    with only that key set — the ordering case the lexsort must get right."""
+    from repro.core.events import NATTR_SET, NODE_ADD, NODE_DEL
+    from repro.taf.son import SoN
+
+    son = SoN(
+        node_ids=np.asarray([0, 1], np.int32), t0=0, t1=10,
+        init_present=np.asarray([1, 1], np.int8),
+        init_attrs=np.asarray([[5, 6], [7, 8]], np.int32),
+        ev_indptr=np.asarray([0, 3, 4], np.int64),
+        ev_t=np.asarray([1, 2, 3, 2], np.int64),
+        ev_kind=np.asarray([NODE_DEL, NATTR_SET, NATTR_SET, NODE_DEL], np.int8),
+        ev_key=np.asarray([-1, 0, 0, -1], np.int16),
+        ev_val=np.asarray([-1, 9, 11, -1], np.int32),
+        ev_other=np.full(4, -1, np.int32),
+    )
+    for t in (0, 1, 2, 3, 10):
+        p_ref, a_ref = ops._state_at_ref(son, t)
+        p_vec, a_vec = ops._state_at(son, t)
+        assert (p_ref == p_vec).all(), t
+        assert (a_ref == a_vec).all(), t
+
+
+# ---------------------------------------------------------------------------
+# Materialize + facade conveniences + legacy shims
+# ---------------------------------------------------------------------------
+
+
+def test_materialize_reuses_fetch(setup):
+    store, t0, t1 = setup
+    q = store.subgraphs(t0, t1).materialize()
+    assert q.operand is not None
+    # downstream executes touch no storage
+    reads0 = store.store.stats.reads
+    q.timeslice((t0 + t1) // 2).execute()
+    q.evolution(lambda s, t: float(len(s)), n_samples=3).execute()
+    assert store.store.stats.reads == reads0
+
+
+def test_operand_query_aggregate(setup):
+    store, t0, t1 = setup
+    sots = store.subgraphs(t0, t1).materialize().operand
+    pts = sots.change_points()[::5][:10]
+
+    def f(present, attrs, son, i, t):
+        return float(present)
+
+    ts_vals = TemporalQuery.over(sots).node_compute(
+        f, style="temporal", points=pts).execute()
+    agg = TemporalQuery.over(sots).node_compute(
+        f, style="temporal", points=pts).aggregate("max").execute()
+    np.testing.assert_allclose(agg, np.asarray(ts_vals[1]).max(axis=1))
+
+
+def test_legacy_build_sots_matches_query(setup):
+    store, t0, t1 = setup
+    legacy = build_sots(store.tgi, t0, t1)
+    new = store.subgraphs(t0, t1).run().operand
+    assert (legacy.node_ids == new.node_ids).all()
+    assert (legacy.ev_t == new.ev_t).all()
+    assert (legacy.adj_nbr == new.adj_nbr).all()
