@@ -7,21 +7,32 @@ incremental-vs-version computation, index-size ordering).  BENCH_SCALE
 env (default 1.0) scales event counts.
 
   PYTHONPATH=src python -m benchmarks.run [--only fig11,...]
+      [--repeat N] [--json PATH]
+
+``--json PATH`` additionally persists every row as JSON (the BENCH_*.json
+perf trajectory committed per PR); ``--repeat`` overrides each bench's
+default repeat count (1 = CI smoke mode).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
+import platform
 import time
-from typing import Callable, Dict
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
 SCALE = float(os.environ.get("BENCH_SCALE", "1.0"))
 N_EVENTS = int(12_000 * SCALE)
 
+REPEAT_OVERRIDE: Optional[int] = None  # set by --repeat
+RESULTS: List[Dict] = []  # every _row lands here for --json
+
 
 def _timeit(fn, repeat=3):
+    repeat = REPEAT_OVERRIDE if REPEAT_OVERRIDE is not None else repeat
     best = float("inf")
     for _ in range(repeat):
         t0 = time.perf_counter()
@@ -31,6 +42,8 @@ def _timeit(fn, repeat=3):
 
 
 def _row(name, us, derived=""):
+    RESULTS.append({"name": name, "us": round(float(us), 1),
+                    "derived": derived})
     print(f"{name},{us:.1f},{derived}", flush=True)
 
 
@@ -225,6 +238,70 @@ def fig17_incremental_vs_temporal():
              f"speedup={us_t / max(us_d, 1):.2f}x")
 
 
+def bench_replay():
+    """Replay micro-bench: per-timepoint ``_state_at`` rescans vs the
+    one-pass ``state_at_many`` batch at T in {1, 8, 64} — the tentpole
+    speedup of the batched replay engine (Kairos-style shared pass)."""
+    from repro.taf import HistoricalGraphStore, operators as ops, replay
+
+    events, cfg, kv, tgi = _build(n_events=N_EVENTS // 2)
+    store = HistoricalGraphStore.from_tgi(tgi)
+    t0g, t1g = events.time_range()
+    sots = (store.subgraphs(int(t0g + 0.3 * (t1g - t0g)), int(t1g))
+            .materialize().operand)
+    pts_all = sots.change_points()
+    for T in (1, 8, 64):
+        pts = pts_all[:: max(len(pts_all) // T, 1)][:T].astype(np.int64)
+
+        def per_t():
+            for t in pts:
+                ops._state_at(sots, int(t))
+
+        us_loop = _timeit(per_t)
+        us_batch = _timeit(lambda: replay.state_at_many(sots, pts))
+        _row(f"replay/state_loop_T{len(pts)}", us_loop)
+        _row(f"replay/state_batch_T{len(pts)}", us_batch,
+             f"speedup={us_loop / max(us_batch, 1):.2f}x")
+    # edge side: neighbor-set loops vs the shared pair table
+    pts = pts_all[:: max(len(pts_all) // 16, 1)][:16].astype(np.int64)
+
+    def nbr_loop():
+        for t in pts:
+            for i in range(len(sots)):
+                ops._neighbors_at_ref(sots, i, int(t))
+
+    us_loop = _timeit(nbr_loop, repeat=1)
+    us_batch = _timeit(lambda: replay.edge_replay(sots).degree_series(pts),
+                       repeat=1)
+    _row("replay/neighbors_loop_T16", us_loop)
+    _row("replay/degree_series_T16", us_batch,
+         f"speedup={us_loop / max(us_batch, 1):.2f}x")
+
+
+def bench_batched_snapshots():
+    """Batched Algorithm 1: T independent get_snapshot calls vs one
+    get_snapshots sharing hierarchy-path + eventlist fetches."""
+    events, cfg, store, tgi = _build(n_events=N_EVENTS // 2)
+    t0g, t1g = events.time_range()
+    for T in (4, 16):
+        ts = np.linspace(t0g + 0.1 * (t1g - t0g), t1g, T).astype(np.int64)
+
+        def singles():
+            for t in ts:
+                tgi.invalidate_caches()
+                tgi.get_snapshot(int(t))
+
+        def batch():
+            tgi.invalidate_caches()
+            tgi.get_snapshots([int(t) for t in ts])
+
+        us_s = _timeit(singles, repeat=2)
+        us_b = _timeit(batch, repeat=2)
+        _row(f"snapshots/singles_T{T}", us_s)
+        _row(f"snapshots/batched_T{T}", us_b,
+             f"speedup={us_s / max(us_b, 1):.2f}x")
+
+
 def table1_index_comparison():
     """Table 1: measured fetch cost (deltas, cardinality, bytes) and index
     size for Log, DeltaGraph (monolithic), and TGI on the same history."""
@@ -329,6 +406,8 @@ BENCHES: Dict[str, Callable] = {
     "fig15c": fig15c_taf_scaling,
     "fig17": fig17_incremental_vs_temporal,
     "pushdown": bench_query_pushdown,
+    "replay": bench_replay,
+    "snapshots": bench_batched_snapshots,
     "table1": table1_index_comparison,
     "ckpt": bench_checkpoint_store,
     "kernel": bench_delta_overlay_kernel,
@@ -336,13 +415,34 @@ BENCHES: Dict[str, Callable] = {
 
 
 def main() -> None:
+    global REPEAT_OVERRIDE
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-separated bench names")
+    ap.add_argument("--repeat", type=int, default=None,
+                    help="override per-bench repeat counts (1 = smoke mode)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="persist rows as JSON (the BENCH_*.json trajectory)")
     args, _ = ap.parse_known_args()
+    REPEAT_OVERRIDE = args.repeat
     names = args.only.split(",") if args.only else list(BENCHES)
     print("name,us_per_call,derived")
     for n in names:
         BENCHES[n]()
+    if args.json:
+        payload = {
+            "meta": {
+                "benches": names,
+                "n_events": N_EVENTS,
+                "scale": SCALE,
+                "repeat_override": REPEAT_OVERRIDE,
+                "python": platform.python_version(),
+                "platform": platform.platform(),
+            },
+            "rows": RESULTS,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {len(RESULTS)} rows -> {args.json}", flush=True)
 
 
 if __name__ == "__main__":

@@ -42,8 +42,10 @@ print(f"node {hub} history: initial degree {len(init['neighbors'])}, "
 hood = store.k_hop(hub, t, k=2)
 print(f"2-hop of {hub}: {int(hood.present.sum())} nodes, {len(hood.edge_key)} edges")
 
-# 6. survive a storage-node failure (replication r=2)
+# 6. survive a storage-node failure (replication r=2).  Drop the
+# snapshot LRU first so the read really hits storage, not the cache.
 kv.fail_node(0)
+store.tgi.invalidate_caches()
 g2 = store.snapshot(t, c=4)
 assert (g2.edge_key == g.edge_key).all()
 kv.heal_node(0)

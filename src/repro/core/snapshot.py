@@ -28,6 +28,38 @@ from repro.core.slots import SlotMap
 
 
 # ---------------------------------------------------------------------------
+# Edge-key packing (one source of truth for GraphState.edge_key)
+# ---------------------------------------------------------------------------
+
+_EDGE_KEY_SHIFT = 32
+_EDGE_KEY_MASK = np.int64((1 << _EDGE_KEY_SHIFT) - 1)
+_MAX_NODE_ID = 1 << 31  # ids must stay below this for a collision-free pack
+
+
+def pack_edge_key(src, dst) -> np.ndarray:
+    """Pack an (src, dst) pair into one sortable int64 key via a 32-bit
+    shift.  The old ``src * 2**31 + dst`` arithmetic pack silently
+    collides once ids reach 2^31; here ids are range-checked and the
+    shift keeps the halves disjoint."""
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    if len(src) and (int(src.min()) < 0 or int(dst.min()) < 0
+                     or int(src.max()) >= _MAX_NODE_ID
+                     or int(dst.max()) >= _MAX_NODE_ID):
+        raise ValueError(
+            f"edge endpoints must be in [0, 2^31) for int64 key packing; "
+            f"got range [{int(min(src.min(), dst.min()))}, "
+            f"{int(max(src.max(), dst.max()))}]")
+    return (src << _EDGE_KEY_SHIFT) | dst
+
+
+def unpack_edge_key(key) -> Tuple[np.ndarray, np.ndarray]:
+    key = np.asarray(key, np.int64)
+    return ((key >> _EDGE_KEY_SHIFT).astype(np.int32),
+            (key & _EDGE_KEY_MASK).astype(np.int32))
+
+
+# ---------------------------------------------------------------------------
 # Host graph state (construction-time ground truth / test oracle)
 # ---------------------------------------------------------------------------
 
@@ -38,7 +70,7 @@ class GraphState:
 
     present: np.ndarray  # (N,) int8
     attrs: np.ndarray  # (N, K) int32
-    edge_key: np.ndarray  # (E,) int64 sorted (src*2^31+dst, canonical src<dst)
+    edge_key: np.ndarray  # (E,) int64 sorted (pack_edge_key, canonical src<dst)
     edge_val: np.ndarray  # (E,) int32
 
     @classmethod
@@ -95,7 +127,7 @@ class GraphState:
             src, dst = ev.src[m], ev.dst[m]
             kinds = ev.kind[m]
             vals = ev.val[m]
-            key = src.astype(np.int64) * (2**31) + dst.astype(np.int64)
+            key = pack_edge_key(src, dst)
             _, last_idx = np.unique(key[::-1], return_index=True)
             last_idx = np.sort(len(key) - 1 - last_idx)
             key, kinds, vals = key[last_idx], kinds[last_idx], vals[last_idx]
@@ -130,8 +162,7 @@ class GraphState:
         return np.nonzero(self.present)[0].astype(np.int32)
 
     def edges(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-        src = (self.edge_key // (2**31)).astype(np.int32)
-        dst = (self.edge_key % (2**31)).astype(np.int32)
+        src, dst = unpack_edge_key(self.edge_key)
         return src, dst, self.edge_val.copy()
 
     def degree(self) -> np.ndarray:
@@ -224,7 +255,7 @@ def events_to_delta(ev: EventLog, smap: SlotMap, K: int,
     m = (ev.kind == EDGE_ADD) | (ev.kind == EDGE_DEL) | (ev.kind == EATTR_SET)
     if m.any():
         src, dst, kinds, vals = ev.src[m], ev.dst[m], ev.kind[m], ev.val[m]
-        key = src.astype(np.int64) * (2**31) + dst.astype(np.int64)
+        key = pack_edge_key(src, dst)
         _, last = np.unique(key[::-1], return_index=True)
         last = np.sort(len(key) - 1 - last)
         src, dst, kinds, vals = src[last], dst[last], kinds[last], vals[last]
@@ -298,7 +329,7 @@ def delta_to_graph(d: Delta, smap: SlotMap) -> GraphState:
         # canonicalize mirrored copies (edges stored under both endpoints)
         lo = np.minimum(src.astype(np.int64), dst.astype(np.int64))
         hi = np.maximum(src.astype(np.int64), dst.astype(np.int64))
-        key = lo * (2**31) + hi
+        key = pack_edge_key(lo, hi)
         val = d.e_val[:ne][keep]
         order = np.argsort(key, kind="stable")
         key, val = key[order], val[order]

@@ -62,3 +62,68 @@ def overlay_pallas(valid, present, attrs, interpret: bool = True):
         ],
         interpret=interpret,
     )(valid, present, attrs)
+
+
+# ---------------------------------------------------------------------------
+# Time-batched variant: one launch folds T timepoints over shared layers
+# ---------------------------------------------------------------------------
+
+
+def _overlay_batch_kernel(tmask_ref, valid_ref, present_ref, attrs_ref,
+                          o_valid_ref, o_present_ref, o_attrs_ref,
+                          *, h: int, T: int):
+    """Per output timepoint t, fold the stacked layers whose
+    ``tmask[i, t]`` bit is set (neutral start: valid=0/present=0/attrs=-1)
+    with the same last-writer-wins overlay as ``_overlay_kernel``.  The
+    stacked tiles are read into VMEM ONCE and reused for every timepoint
+    — the bandwidth saving over T independent launches; h and T are
+    static python loops (both small: tree height + one eventlist layer
+    per timepoint)."""
+    vs, ps, as_ = [], [], []
+    for t in range(T):
+        acc_v = jnp.zeros_like(valid_ref[0])  # (1, TILE_S)
+        acc_p = jnp.zeros_like(present_ref[0])
+        acc_a = jnp.full_like(attrs_ref[0], -1)  # (1, TILE_S, K)
+        for i in range(h):
+            use = tmask_ref[i, t] != 0  # scalar: layer i feeds timepoint t
+            vi = (valid_ref[i] != 0) & use
+            acc_p = jnp.where(vi, present_ref[i], acc_p)
+            ai = attrs_ref[i]
+            acc_a = jnp.where(vi[..., None] & (ai != -1), ai, acc_a)
+            acc_a = jnp.where((acc_p == 0)[..., None], -1, acc_a)
+            acc_v = jnp.maximum(acc_v, vi.astype(acc_v.dtype))
+        vs.append(acc_v)
+        ps.append(acc_p)
+        as_.append(acc_a)
+    o_valid_ref[...] = jnp.stack(vs, axis=-1)  # (1, TILE_S, T)
+    o_present_ref[...] = jnp.stack(ps, axis=-1)
+    o_attrs_ref[...] = jnp.stack(as_, axis=2)  # (1, TILE_S, T, K)
+
+
+def overlay_batch_pallas(valid, present, attrs, tmask, interpret: bool = True):
+    """valid/present: (h, P, S) int8; attrs: (h, P, S, K) int32;
+    tmask: (h, T) int32 layer->timepoint validity mask.  Returns
+    valid/present (P, S, T) and attrs (P, S, T, K).  S must be a multiple
+    of TILE_S (ops.py pads)."""
+    h, P, S = valid.shape
+    K = attrs.shape[-1]
+    T = tmask.shape[-1]
+    assert S % TILE_S == 0, S
+    grid = (P, S // TILE_S)
+    mk_spec = pl.BlockSpec((h, T), lambda p, s: (0, 0))
+    vp_spec = pl.BlockSpec((h, 1, TILE_S), lambda p, s: (0, p, s))
+    at_spec = pl.BlockSpec((h, 1, TILE_S, K), lambda p, s: (0, p, s, 0))
+    out_vp = pl.BlockSpec((1, TILE_S, T), lambda p, s: (p, s, 0))
+    out_at = pl.BlockSpec((1, TILE_S, T, K), lambda p, s: (p, s, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_overlay_batch_kernel, h=h, T=T),
+        grid=grid,
+        in_specs=[mk_spec, vp_spec, vp_spec, at_spec],
+        out_specs=[out_vp, out_vp, out_at],
+        out_shape=[
+            jax.ShapeDtypeStruct((P, S, T), valid.dtype),
+            jax.ShapeDtypeStruct((P, S, T), present.dtype),
+            jax.ShapeDtypeStruct((P, S, T, K), attrs.dtype),
+        ],
+        interpret=interpret,
+    )(tmask, valid, present, attrs)

@@ -7,7 +7,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.delta_overlay import ref
-from repro.kernels.delta_overlay.delta_overlay import TILE_S, overlay_pallas
+from repro.kernels.delta_overlay.delta_overlay import (
+    TILE_S,
+    overlay_batch_pallas,
+    overlay_pallas,
+)
 
 
 def _on_tpu() -> bool:
@@ -36,6 +40,39 @@ def overlay(valid, present, attrs, use_pallas: bool = True):
         attrs = jnp.pad(attrs, ((0, 0), (0, 0), (0, pad), (0, 0)), constant_values=-1)
     out_v, out_p, out_a = overlay_pallas(
         v8, present, attrs, interpret=not _on_tpu()
+    )
+    if pad:
+        out_v, out_p, out_a = out_v[:, :S], out_p[:, :S], out_a[:, :S]
+    return out_v.astype(valid.dtype) != 0, out_p, out_a
+
+
+def overlay_batch(valid, present, attrs, tmask, use_pallas: bool = True):
+    """Time-batched fold: stacked deltas (h, P, S[, K]) + layer->timepoint
+    mask (h, T) -> per-timepoint outputs (P, S, T[, K]).
+
+    Timepoint t folds exactly the layers with ``tmask[i, t]`` set
+    (typically: every shared hierarchy-path layer + that timepoint's own
+    eventlist layer).  Accepts numpy or jnp; runs the Pallas kernel in
+    interpret mode off-TPU and natively on TPU, or the pure-jnp reference
+    with ``use_pallas=False``.
+    """
+    valid = jnp.asarray(valid)
+    present = jnp.asarray(present)
+    attrs = jnp.asarray(attrs)
+    tmask = jnp.asarray(tmask, jnp.int32)
+    v8 = valid.astype(jnp.int8)
+    if not use_pallas:
+        out_v, out_p, out_a = ref.overlay_batch_ref(v8, present, attrs, tmask)
+        return out_v.astype(valid.dtype) != 0, out_p, out_a
+    S = valid.shape[-1]
+    pad = (-S) % TILE_S
+    if pad:
+        v8 = jnp.pad(v8, ((0, 0), (0, 0), (0, pad)))
+        present = jnp.pad(present, ((0, 0), (0, 0), (0, pad)))
+        attrs = jnp.pad(attrs, ((0, 0), (0, 0), (0, pad), (0, 0)),
+                        constant_values=-1)
+    out_v, out_p, out_a = overlay_batch_pallas(
+        v8, present, attrs, tmask, interpret=not _on_tpu()
     )
     if pad:
         out_v, out_p, out_a = out_v[:, :S], out_p[:, :S], out_a[:, :S]

@@ -21,3 +21,32 @@ def overlay_ref(valid, present, attrs):
         acc_a = jnp.where((acc_p == 0)[..., None], -1, acc_a)
         acc_v = acc_v | vi
     return acc_v, acc_p, acc_a
+
+
+def overlay_batch_ref(valid, present, attrs, tmask):
+    """Time-batched oracle: per timepoint t, fold the layers whose
+    ``tmask[i, t]`` is set, from a neutral accumulator (valid=0,
+    present=0, attrs=-1) — a masked-out layer behaves exactly like an
+    all-invalid delta.  Returns valid/present (P, S, T), attrs
+    (P, S, T, K); on slots whose validity comes from any folded layer the
+    result equals the pairwise ``overlay_ref`` chain of those layers."""
+    h = valid.shape[0]
+    T = tmask.shape[-1]
+    vs, ps, as_ = [], [], []
+    for t in range(T):
+        acc_v = jnp.zeros(valid.shape[1:], valid.dtype)
+        acc_p = jnp.zeros(present.shape[1:], present.dtype)
+        acc_a = jnp.full(attrs.shape[1:], -1, attrs.dtype)
+        for i in range(h):
+            use = tmask[i, t] != 0
+            vi = (valid[i] != 0) & use
+            acc_p = jnp.where(vi, present[i], acc_p)
+            ai = attrs[i]
+            acc_a = jnp.where(vi[..., None] & (ai != -1), ai, acc_a)
+            acc_a = jnp.where((acc_p == 0)[..., None], -1, acc_a)
+            acc_v = jnp.maximum(acc_v, vi.astype(acc_v.dtype))
+        vs.append(acc_v)
+        ps.append(acc_p)
+        as_.append(acc_a)
+    return (jnp.stack(vs, axis=-1), jnp.stack(ps, axis=-1),
+            jnp.stack(as_, axis=2))

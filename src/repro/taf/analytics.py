@@ -16,6 +16,7 @@ import numpy as np
 from repro.core.events import EDGE_ADD, EDGE_DEL, NATTR_SET
 from repro.core.snapshot import GraphState
 from repro.taf import operators as ops
+from repro.taf import replay
 from repro.taf.query import TemporalQuery
 from repro.taf.son import SoN, SoTS
 
@@ -63,12 +64,16 @@ def max_lcc(sots: SoTS, t: Optional[int] = None) -> Tuple[int, float]:
 
 
 def density_evolution(sots: SoTS, n_samples: int = 10):
-    def density(son, t):
-        g = ops.graph(sots, t)
-        n = int(g.present.sum())
-        e = len(g.edge_key)
-        return 0.0 if n < 2 else 2.0 * e / (n * (n - 1))
+    def density(son, ts):
+        # vectorized over timepoints: all graphs from one replay pass
+        out = np.empty(len(ts), np.float64)
+        for j, g in enumerate(ops.graph_at_many(sots, ts)):
+            n = int(g.present.sum())
+            e = len(g.edge_key)
+            out[j] = 0.0 if n < 2 else 2.0 * e / (n * (n - 1))
+        return out
 
+    density.vectorized = True
     return TemporalQuery.over(sots).evolution(density, n_samples=n_samples).execute()
 
 
@@ -78,26 +83,37 @@ def density_evolution(sots: SoTS, n_samples: int = 10):
 
 
 def degree_series_temporal(sots: SoTS, points=None):
-    def f(present, attrs, son, i, t):
-        return float(len(ops.neighbors_at(sots, i, t))) if present else 0.0
+    """Per-version recompute (Fig. 17's temporal curve), fully batched:
+    one ``state_at_many`` pass for presence + one ``EdgeReplay`` pass for
+    all neighbor-set sizes — no per-(node, t) Python."""
 
+    def f(present, attrs, son, t, **kw):
+        ts = np.atleast_1d(np.asarray(t, np.int64))
+        deg = replay.degree_series(sots, ts).astype(np.float64)
+        return np.where(present.reshape(len(sots), len(ts)) == 1, deg, 0.0)
+
+    f.vectorized = True
     return (TemporalQuery.over(sots)
             .node_compute(f, style="temporal", points=points, label="degree")
             .execute())
 
 
 def degree_series_delta(sots: SoTS, points=None):
-    def f(present, attrs, son, i, init):
-        deg = son.adj_indptr[i + 1] - son.adj_indptr[i]
-        return None, float(deg if present else 0)
+    """Incremental evaluation (Fig. 17's delta curve) on the vectorized
+    window fold: init degrees once, then one array update per
+    inter-point window."""
 
-    def f_delta(aux, val, kind, key, val_, other, i, son):
-        if kind == EDGE_ADD:
-            return aux, val + 1.0
-        if kind == EDGE_DEL:
-            return aux, val - 1.0
+    def f(present, attrs, son, init, **kw):
+        deg = (son.adj_indptr[1:] - son.adj_indptr[:-1]).astype(np.float64)
+        return None, np.where(present == 1, deg, 0.0)
+
+    def f_delta(aux, val, node, kind, key, val_, other, son, **kw):
+        np.add.at(val, node[kind == EDGE_ADD], 1.0)
+        np.add.at(val, node[kind == EDGE_DEL], -1.0)
         return aux, val
 
+    f.vectorized = True
+    f_delta.vectorized = True
     return (TemporalQuery.over(sots)
             .node_compute(f, style="delta", f_delta=f_delta, points=points,
                           label="degree")
@@ -186,8 +202,9 @@ def pagerank_over_time(sots: SoTS, points, damping: float = 0.85,
     ranks = None
     out = []
     iters_used = []
-    for t in points:
-        g = ops.graph(sots, int(t))
+    # state extraction for ALL timepoints rides one batched replay pass
+    graphs = ops.graph_at_many(sots, np.asarray(list(points), np.int64))
+    for g in graphs:
         nids = np.nonzero(g.present)[0]
         n = len(nids)
         if n == 0:

@@ -105,6 +105,57 @@ def degree_at_kernel(t: int):
     return kernel
 
 
+def degree_series_kernel(ts):
+    """Time-batched device kernel: degree at EVERY t in ``ts`` from one
+    pass over the padded event arrays — the device-side mirror of
+    ``replay.degree_series``.  Returns (n, T) int32; init degree baked
+    into attrs[..., -1] as in ``degree_at_kernel``."""
+    from repro.core.events import EDGE_ADD, EDGE_DEL
+
+    ts = tuple(int(t) for t in np.asarray(ts).ravel())
+
+    def kernel(present, attrs, ev_t, ev_kind, ev_val):
+        # O((E + T) per node) memory: cumulative add/del counts along the
+        # (time-sorted, +inf-padded) event axis, gathered at each
+        # timepoint's insertion index — NOT an (n, E, T) mask
+        tsv = jnp.asarray(ts, ev_t.dtype)
+        cum_add = jnp.cumsum((ev_kind == EDGE_ADD).astype(jnp.int32), axis=1)
+        cum_del = jnp.cumsum((ev_kind == EDGE_DEL).astype(jnp.int32), axis=1)
+        # re-sentinel the pad slots in-dtype: the host's int64-max pad
+        # wraps negative under jax's default int32, breaking sortedness
+        ev_t_s = jnp.where(ev_kind < 0, jnp.iinfo(ev_t.dtype).max, ev_t)
+        idx = jax.vmap(
+            lambda row: jnp.searchsorted(row, tsv, side="right")
+        )(ev_t_s)  # (n, T) — count of events with t <= each timepoint
+
+        def gather(cum, ix):
+            return jnp.where(ix > 0, cum[jnp.maximum(ix - 1, 0)], 0)
+
+        add = jax.vmap(gather)(cum_add, idx)
+        sub = jax.vmap(gather)(cum_del, idx)
+        deg0 = attrs[:, -1:]
+        return jnp.where((present == 1)[:, None],
+                         deg0 + add - sub, 0).astype(jnp.int32)
+
+    return kernel
+
+
+def sharded_degree_series(sots, ts, mesh=None) -> np.ndarray:
+    """Degree series for every SoTS member at every t, computed on the
+    device mesh in one time-batched kernel launch (the multi-timepoint
+    counterpart of ``sharded_degree_at``)."""
+    from repro.taf.query import TemporalQuery  # deferred: avoids cycle
+
+    deg0 = (sots.adj_indptr[1:] - sots.adj_indptr[:-1]).astype(np.int32)
+    patched = dataclasses.replace(
+        sots, init_attrs=np.concatenate([sots.init_attrs, deg0[:, None]], axis=1)
+    )
+    return (TemporalQuery.over(patched)
+            .node_compute(degree_series_kernel(ts), style="kernel", mesh=mesh,
+                          label=f"degree_series@{len(np.asarray(ts).ravel())}")
+            .execute())
+
+
 def sharded_degree_at(sots, t: int, mesh=None) -> np.ndarray:
     """Degree-at-t for every SoTS member, computed on devices (a thin
     shim over the plan executor's style="kernel" compute path)."""

@@ -23,6 +23,13 @@ linear chain of typed stages — and one ``PlanExecutor`` runs it:
 Keeping the chain declarative until ``execute()`` is what lets fetch see
 the whole query: selection and projection push below the storage reads,
 and later PRs can fuse/cache/re-target stages without touching callers.
+
+Multi-timepoint stages (a Slice with several ts, Compute(points=...),
+Evolution) execute on the batched replay engine (repro.taf.replay): one
+sorted-event pass over the operand serves every timepoint.  The executor
+additionally keeps a small LRU of replayed timeslices keyed on
+(operand identity, timepoints), so repeated slices of one operand cost
+one replay total.
 """
 from __future__ import annotations
 
@@ -33,6 +40,7 @@ import numpy as np
 
 from repro.core.tgi import FetchCost
 from repro.taf import operators as ops
+from repro.taf import replay
 from repro.taf.son import SoN, build_son, build_sots
 
 
@@ -212,6 +220,11 @@ class PlanExecutor:
     """Runs a Plan: one fetch (pushdowns applied), then vectorized host
     operators or shard_map device kernels over the operand."""
 
+    # shared across executors: TemporalQuery.run() builds a fresh
+    # executor per plan, but repeated slices of one materialized operand
+    # should still hit the cache
+    _replay_cache = replay.ReplayCache(maxsize=32)
+
     def __init__(self, tgi=None):
         self.tgi = tgi
 
@@ -232,7 +245,7 @@ class PlanExecutor:
                 operand = ops.selection(operand, stage.pred)
                 value = operand
             elif k == "slice":
-                value = ops.timeslice(operand, stage.ts)
+                value = self._timeslice_cached(operand, stage.ts)
             elif k == "compute":
                 value = self._compute(operand, stage)
             elif k == "evolution":
@@ -245,6 +258,23 @@ class PlanExecutor:
         return PlanResult(value=value, cost=cost, operand=operand, plan=plan)
 
     # ---- stage implementations ----
+
+    def _timeslice_cached(self, son: SoN, ts) -> Any:
+        """Operator 2 through the executor's LRU: a repeated slice of the
+        same operand at the same timepoint(s) replays zero events."""
+        if np.isscalar(ts):
+            tkey: Tuple = ("scalar", int(ts))
+        else:
+            tkey = ("multi", tuple(int(x) for x in np.asarray(ts).ravel()))
+        key = (replay.operand_key(son), tkey)
+        hit = self._replay_cache.get(key, owner=son)
+        if hit is None:
+            hit = ops.timeslice(son, ts)
+            self._replay_cache.put(key, hit, owner=son)
+        # hand out copies: callers may mutate their result in place, and
+        # that must not poison the cached arrays
+        return {k: (v.copy() if isinstance(v, np.ndarray) else v)
+                for k, v in hit.items()}
 
     def _fetch(self, stage: Fetch) -> Tuple[SoN, FetchCost]:
         if self.tgi is None:

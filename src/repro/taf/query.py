@@ -101,6 +101,15 @@ class HistoricalGraphStore:
         self.last_cost = acc
         return g
 
+    def snapshots(self, ts, c: int = 1, **kw):
+        """Batched Algorithm 1: snapshots at every t in ``ts``, sharing
+        the hierarchy-path and eventlist fetches per (span, checkpoint)
+        group (see ``TGI.get_snapshots``)."""
+        with self.tgi.cost_scope() as acc:
+            gs = self.tgi.get_snapshots(ts, c=c, **kw)
+        self.last_cost = acc
+        return gs
+
     def node_history(self, nid: int, t0: int, t1: int, c: int = 1):
         # cost_scope: these retrievals issue several get_* calls, each of
         # which resets tgi.last_cost — the scope totals the whole query

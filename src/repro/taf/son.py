@@ -26,6 +26,12 @@ from repro.core.events import (
 from repro.core.snapshot import GraphState
 
 
+def _field_dict(x) -> Dict:
+    """Declared dataclass fields only (``vars()`` would also leak lazily
+    cached attributes like ``_node_of_ev`` into constructor kwargs)."""
+    return {f.name: getattr(x, f.name) for f in dataclasses.fields(x)}
+
+
 @dataclasses.dataclass
 class SoN:
     """Set of Temporal Nodes over [t0, t1)."""
@@ -60,6 +66,18 @@ class SoN:
         """All distinct event times in the set (default evaluation points
         of the temporal operators)."""
         return np.unique(self.ev_t)
+
+    def node_of_events(self) -> np.ndarray:
+        """Row index (into this SoN) of every CSR event — the inverse of
+        ``ev_indptr``.  Cached: the replay engine asks repeatedly."""
+        cached = getattr(self, "_node_of_ev", None)
+        if cached is None or len(cached) != len(self.ev_t):
+            cached = np.repeat(
+                np.arange(len(self), dtype=np.int64),
+                self.ev_indptr[1:] - self.ev_indptr[:-1],
+            )
+            self._node_of_ev = cached
+        return cached
 
     def subset(self, idx: np.ndarray) -> "SoN":
         idx = np.asarray(idx)
@@ -120,7 +138,7 @@ class SoTS(SoN):
             np.arange(self.adj_indptr[i], self.adj_indptr[i + 1]) for i in idx
         ]).astype(np.int64) if len(idx) else np.empty(0, np.int64)
         return SoTS(
-            **vars(base),
+            **_field_dict(base),
             adj_indptr=indptr,
             adj_nbr=self.adj_nbr[take],
             adj_val=self.adj_val[take],
@@ -218,6 +236,6 @@ def build_sots(tgi, t0: int, t1: int, node_ids: Optional[np.ndarray] = None,
     pos = np.searchsorted(son.node_ids, bs)
     indptr = np.searchsorted(pos, np.arange(len(son.node_ids) + 1)).astype(np.int64)
     return SoTS(
-        **vars(son),
+        **_field_dict(son),
         adj_indptr=indptr, adj_nbr=bd.astype(np.int32), adj_val=bv.astype(np.int32),
     )

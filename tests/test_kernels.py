@@ -62,6 +62,56 @@ def test_delta_overlay_matches_numpy_chain():
     np.testing.assert_array_equal(np.asarray(got_a)[on], acc.attrs[on])
 
 
+@pytest.mark.parametrize("h,P,S,K,T", [(2, 1, 256, 1, 1), (4, 2, 256, 3, 4),
+                                       (6, 2, 300, 2, 3), (8, 1, 512, 2, 8)])
+def test_delta_overlay_batch_matches_ref(h, P, S, K, T):
+    """Time-batched kernel (interpret mode) == pure-jnp batch oracle,
+    bit-for-bit, including masked-out layers."""
+    rng = np.random.RandomState(h * 10 + T)
+    valid = rng.rand(h, P, S) < 0.4
+    present = (rng.rand(h, P, S) < 0.7).astype(np.int8)
+    attrs = rng.randint(-1, 5, size=(h, P, S, K)).astype(np.int32)
+    tmask = (rng.rand(h, T) < 0.6).astype(np.int8)
+    tmask[0, :] = 1  # at least one shared layer per timepoint
+    got = ov_ops.overlay_batch(valid, present, attrs, tmask, use_pallas=True)
+    want = ov_ref.overlay_batch_ref(
+        jnp.asarray(valid, jnp.int8), jnp.asarray(present),
+        jnp.asarray(attrs), jnp.asarray(tmask, jnp.int32))
+    assert got[0].shape == (P, S, T)
+    assert got[2].shape == (P, S, T, K)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]) != 0)
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+    np.testing.assert_array_equal(np.asarray(got[2]), np.asarray(want[2]))
+
+
+def test_delta_overlay_batch_matches_per_t_overlay():
+    """Each timepoint's column == the single-timepoint overlay of its
+    selected layers (on valid slots, with delta-invariant inputs:
+    attrs set only where present)."""
+    rng = np.random.RandomState(7)
+    h, P, S, K, T = 5, 2, 256, 3, 4
+    valid = rng.rand(h, P, S) < 0.5
+    present = np.where(valid, (rng.rand(h, P, S) < 0.8), 0).astype(np.int8)
+    attrs = np.where((valid & (present == 1))[..., None],
+                     rng.randint(-1, 4, size=(h, P, S, K)), -1).astype(np.int32)
+    # column t folds the shared prefix [0, 1] plus its own layer 2 + t
+    tmask = np.zeros((h, T), np.int8)
+    tmask[:2, :] = 1
+    for t in range(min(T, h - 2)):
+        tmask[2 + t, t] = 1
+    got_v, got_p, got_a = (np.asarray(x) for x in
+                           ov_ops.overlay_batch(valid, present, attrs, tmask))
+    for t in range(T):
+        layers = np.nonzero(tmask[:, t])[0]
+        w_v, w_p, w_a = ov_ops.overlay(
+            valid[layers], present[layers], attrs[layers], use_pallas=True)
+        w_v, w_p, w_a = np.asarray(w_v), np.asarray(w_p), np.asarray(w_a)
+        np.testing.assert_array_equal(got_v[..., t], w_v)
+        on = w_v & (w_p == 1)
+        np.testing.assert_array_equal(got_p[..., t][w_v], w_p[w_v])
+        np.testing.assert_array_equal(got_a[:, :, t][on], w_a[on])
+
+
 # ---------------------------------------------------------------------------
 # flash_attention
 # ---------------------------------------------------------------------------

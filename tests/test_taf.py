@@ -62,10 +62,11 @@ def test_graph_operator_edges_match_naive(setup):
     member = set(sots.node_ids.tolist())
     src, dst, _ = want.edges()
     keep = np.array([u in member and v in member for u, v in zip(src, dst)])
-    want_keys = np.sort(
-        np.minimum(src[keep], dst[keep]).astype(np.int64) * (2**31)
-        + np.maximum(src[keep], dst[keep])
-    )
+    from repro.core.snapshot import pack_edge_key
+
+    want_keys = np.sort(pack_edge_key(
+        np.minimum(src[keep], dst[keep]), np.maximum(src[keep], dst[keep])
+    ))
     assert (np.sort(g.edge_key) == want_keys).all()
 
 

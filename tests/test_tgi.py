@@ -123,6 +123,7 @@ def test_replication_failover(built):
     want = tgi.get_snapshot(t)
     store.stats.reset()
     store.fail_node(0)
+    tgi.invalidate_caches()  # force a real storage read past the snapshot LRU
     try:
         got = tgi.get_snapshot(t)
         _states_equal(got, want)
