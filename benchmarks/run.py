@@ -302,6 +302,83 @@ def bench_batched_snapshots():
              f"speedup={us_s / max(us_b, 1):.2f}x")
 
 
+def bench_storage():
+    """Storage format (paper Fig. 10 / §6 'compactly stores'): TGI1 raw
+    vs TGI2 compressed-columnar blocks on the same default workload —
+    bytes per index component, snapshot retrieval, and a 16-point
+    timeslice scan.  The acceptance gate for the format: TGI2 total
+    bytes <= 0.6x TGI1 with snapshot latency within 1.2x."""
+    from repro.core.tgi import TGI, TGIConfig
+    from repro.data.temporal_graph_gen import generate
+    from repro.storage.kvstore import DeltaStore
+    from repro.taf import HistoricalGraphStore
+
+    events = generate(N_EVENTS, seed=7)
+    cfg = TGIConfig(n_shards=4, parts_per_shard=2, events_per_span=N_EVENTS // 4,
+                    eventlist_size=256, checkpoints_per_span=4)
+    t0g, t1g = events.time_range()
+    t = int((t0g + t1g) // 2)
+    ts = np.linspace(t0g + 0.1 * (t1g - t0g), t1g, 16).astype(np.int64)
+    fmts = ("TGI1", "TGI2")
+    tgis, totals = {}, {}
+    for fmt in fmts:
+        kv = DeltaStore(m=4, r=1, backend="mem", fmt=fmt)
+        tgis[fmt] = TGI.build(events, cfg, kv)
+        rep = tgis[fmt].storage_report()
+        totals[fmt] = rep["totals"]
+        for comp, row in rep["components"].items():
+            _row(f"storage/{fmt}/bytes_{comp}", 0.0,
+                 f"raw={row['raw']};encoded={row['encoded']};count={row['count']}")
+        _row(f"storage/{fmt}/bytes_total", 0.0,
+             f"raw={rep['totals']['raw']};encoded={rep['totals']['encoded']};"
+             f"ratio={rep['totals']['ratio']:.3f}")
+
+    # latency: the two formats are timed in alternating rounds so clock
+    # drift (CPU steal in shared containers) hits both equally
+    def snap(tgi):
+        tgi.invalidate_caches()
+        tgi.get_snapshot(t)
+
+    rounds = (REPEAT_OVERRIDE if REPEAT_OVERRIDE is not None else 8) * 5
+    for f in fmts:  # warm caches/code paths outside the timed region
+        snap(tgis[f])
+    samples_snap = {f: [] for f in fmts}
+    samples_slice = {f: [] for f in fmts}
+    queries = {
+        f: HistoricalGraphStore.from_tgi(tgis[f])
+        .nodes(int(t0g + 0.1 * (t1g - t0g)), int(t1g)).timeslice(ts)
+        for f in fmts
+    }
+    for r in range(rounds):
+        order = fmts if r % 2 == 0 else fmts[::-1]  # no fixed-order bias
+        for f in order:
+            t0 = time.perf_counter()
+            snap(tgis[f])
+            samples_snap[f].append(time.perf_counter() - t0)
+    for f in fmts:
+        queries[f].execute()  # warm
+    for r in range(rounds):
+        order = fmts if r % 2 == 0 else fmts[::-1]
+        for f in order:
+            tgis[f].invalidate_caches()
+            t0 = time.perf_counter()
+            queries[f].execute()
+            samples_slice[f].append(time.perf_counter() - t0)
+    for f in fmts:
+        snap(tgis[f])  # re-run once so last_cost reflects the snapshot
+        _row(f"storage/{f}/snapshot", min(samples_snap[f]) * 1e6,
+             f"enc_bytes={tgis[f].last_cost.n_bytes};"
+             f"raw_bytes={tgis[f].last_cost.n_bytes_decompressed}")
+        _row(f"storage/{f}/timeslice_T16", min(samples_slice[f]) * 1e6)
+    # latency ratio = median of per-round paired ratios: each pair runs
+    # back-to-back, so shared-machine clock drift cancels out of it
+    lat_ratio = float(np.median(
+        np.asarray(samples_snap["TGI2"]) / np.asarray(samples_snap["TGI1"])))
+    _row("storage/TGI2_vs_TGI1", 0.0,
+         f"bytes_ratio={totals['TGI2']['encoded'] / totals['TGI1']['encoded']:.3f};"
+         f"snapshot_latency_ratio={lat_ratio:.2f}")
+
+
 def table1_index_comparison():
     """Table 1: measured fetch cost (deltas, cardinality, bytes) and index
     size for Log, DeltaGraph (monolithic), and TGI on the same history."""
@@ -408,6 +485,7 @@ BENCHES: Dict[str, Callable] = {
     "pushdown": bench_query_pushdown,
     "replay": bench_replay,
     "snapshots": bench_batched_snapshots,
+    "storage": bench_storage,
     "table1": table1_index_comparison,
     "ckpt": bench_checkpoint_store,
     "kernel": bench_delta_overlay_kernel,

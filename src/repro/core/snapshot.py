@@ -86,6 +86,12 @@ class GraphState:
         return GraphState(self.present.copy(), self.attrs.copy(),
                           self.edge_key.copy(), self.edge_val.copy())
 
+    def nbytes(self) -> int:
+        """Materialized size — the storage benchmark's working-set
+        reference against FetchCost.n_bytes_decompressed."""
+        return (self.present.nbytes + self.attrs.nbytes
+                + self.edge_key.nbytes + self.edge_val.nbytes)
+
     def grow(self, n_nodes: int):
         if n_nodes > len(self.present):
             extra = n_nodes - len(self.present)

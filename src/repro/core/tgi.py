@@ -82,13 +82,15 @@ class SpanIndex:
 @dataclasses.dataclass
 class FetchCost:
     n_deltas: int = 0
-    n_bytes: int = 0
+    n_bytes: int = 0  # encoded bytes read off storage (wire/disk bytes)
     sum_cardinality: int = 0
+    n_bytes_decompressed: int = 0  # raw bytes materialized after decode
 
-    def add(self, n=1, b=0, card=0):
+    def add(self, n=1, b=0, card=0, raw=0):
         self.n_deltas += n
         self.n_bytes += b
         self.sum_cardinality += card
+        self.n_bytes_decompressed += raw
 
 
 class TGI:
@@ -112,10 +114,10 @@ class TGI:
     # Query-planner hooks (used by repro.taf.plan / repro.taf.query)
     # ------------------------------------------------------------------
 
-    def _record_cost(self, n=1, b=0, card=0):
-        self.last_cost.add(n, b, card)
+    def _record_cost(self, n=1, b=0, card=0, raw=0):
+        self.last_cost.add(n, b, card, raw)
         if self._cost_accum is not None:
-            self._cost_accum.add(n, b, card)
+            self._cost_accum.add(n, b, card, raw)
 
     @contextlib.contextmanager
     def cost_scope(self) -> Iterator[FetchCost]:
@@ -130,7 +132,8 @@ class TGI:
         finally:
             self._cost_accum = prev
             if prev is not None:  # nested scopes roll up
-                prev.add(acc.n_deltas, acc.n_bytes, acc.sum_cardinality)
+                prev.add(acc.n_deltas, acc.n_bytes, acc.sum_cardinality,
+                         acc.n_bytes_decompressed)
 
     def pids_for_nodes(self, node_ids: np.ndarray, t: int) -> List[int]:
         """Partition-pruning pushdown: the micro-partitions that cover
@@ -429,7 +432,8 @@ class TGI:
             # attribute-projection pushdown: the attrs tile (the widest
             # column) is never read off storage
             fields = tuple(f for f in DELTA_FIELDS if f != "attrs")
-        got = self.store.multiget(keys, c=c, fields=fields)
+        sizes: Dict[DeltaKey, Tuple[int, int]] = {}
+        got = self.store.multiget(keys, c=c, fields=fields, sizes=sizes)
         psize = si.smap.psize
         d = Delta.empty(cfg.n_parts, psize, cfg.n_attrs, ecap=1)
         e_parts = []
@@ -441,8 +445,8 @@ class TGI:
                 d.attrs[p] = a["attrs"]
             ne = int((a["e_src"] != SENTINEL).sum())
             e_parts.append((a["e_src"][:ne], a["e_dst"][:ne], a["e_op"][:ne], a["e_val"][:ne]))
-            self._record_cost(1, sum(x.nbytes for x in a.values()),
-                              int(a["valid"].sum()) + ne)
+            enc, raw = sizes[k]
+            self._record_cost(1, enc, int(a["valid"].sum()) + ne, raw)
         if e_parts:
             d.e_src = np.concatenate([e[0] for e in e_parts])
             d.e_dst = np.concatenate([e[1] for e in e_parts])
@@ -467,14 +471,19 @@ class TGI:
             for sid in (range(self.cfg.n_shards) if sids is None else sids):
                 keys.append(DeltaKey(si.span.tsid, sid, f"E:{b}", 0))
         out = EventLog.empty()
-        # a bucket may have no events on a given shard -> key absent
-        got = self.store.multiget(keys, c=c, missing_ok=True)
+        # a bucket may have no events on a given shard -> key absent;
+        # the stored pid column is for micro reads only — project it
+        # away so it is seeked over, never decoded
+        sizes: Dict[DeltaKey, Tuple[int, int]] = {}
+        got = self.store.multiget(keys, c=c, missing_ok=True, sizes=sizes,
+                                  fields=("t", "kind", "src", "dst", "key", "val"))
         logs = []
         for k in keys:
             if k not in got:
                 continue
             a = got[k]
-            self._record_cost(1, sum(x.nbytes for x in a.values()), len(a["t"]))
+            enc, raw = sizes[k]
+            self._record_cost(1, enc, len(a["t"]), raw)
             logs.append(a)
         if not logs:
             return out
@@ -561,12 +570,14 @@ class TGI:
         g, cost = hit
         # replay the logical fetch cost: the LRU changes wall time, not
         # the planner's accounting (cost invariants stay deterministic)
-        self._record_cost(cost.n_deltas, cost.n_bytes, cost.sum_cardinality)
+        self._record_cost(cost.n_deltas, cost.n_bytes, cost.sum_cardinality,
+                          cost.n_bytes_decompressed)
         return g.copy()
 
     def _snap_cache_put(self, key, g: GraphState, cost: FetchCost) -> None:
         self._snap_cache[key] = (
-            g.copy(), FetchCost(cost.n_deltas, cost.n_bytes, cost.sum_cardinality)
+            g.copy(), FetchCost(cost.n_deltas, cost.n_bytes,
+                                cost.sum_cardinality, cost.n_bytes_decompressed)
         )
         self._snap_cache.move_to_end(key)
         while len(self._snap_cache) > self.SNAP_CACHE_MAX:
@@ -815,6 +826,37 @@ class TGI:
     # ---- stats ----
     def index_size_bytes(self) -> int:
         return self.store.stats.bytes_written
+
+    COMPONENT_NAMES = {"E": "eventlists", "S": "hierarchy", "X": "aux_replicas"}
+
+    def storage_report(self) -> Dict[str, Dict]:
+        """Index size broken down by component (the paper's Fig. 10
+        storage analysis): raw vs. encoded bytes and blob count for the
+        eventlists (``E:*``), the derived snapshot hierarchy (``S:*``),
+        the auxiliary 1-hop replicas (``X:*``), and anything else stored
+        under this index's DeltaStore.  ``totals`` adds the aggregate and
+        the compression ratio (encoded/raw); sizes are per logical key —
+        multiply by ``replication`` for on-disk bytes."""
+        by_comp = self.store.size_report()
+        components: Dict[str, Dict] = {}
+        raw_total = enc_total = count_total = 0
+        for comp, row in sorted(by_comp.items()):
+            name = self.COMPONENT_NAMES.get(comp, comp)
+            components[name] = dict(row)
+            raw_total += row["raw"]
+            enc_total += row["encoded"]
+            count_total += row["count"]
+        return {
+            "format": self.store.fmt,
+            "replication": self.store.r,
+            "components": components,
+            "totals": {
+                "raw": raw_total,
+                "encoded": enc_total,
+                "count": count_total,
+                "ratio": (enc_total / raw_total) if raw_total else 1.0,
+            },
+        }
 
 
 def _merge_states(a: GraphState, b: GraphState) -> GraphState:

@@ -51,26 +51,36 @@ class KeyMissing(KeyError):
 class StoreStats:
     reads: int = 0
     writes: int = 0
-    bytes_read: int = 0
-    bytes_written: int = 0
+    bytes_read: int = 0  # encoded bytes touched off storage
+    bytes_written: int = 0  # encoded bytes on disk (x replication)
+    bytes_raw_written: int = 0  # pre-encoding bytes (x replication)
+    bytes_decompressed: int = 0  # raw bytes materialized by reads
     failovers: int = 0
 
     def reset(self):
         self.reads = self.writes = 0
         self.bytes_read = self.bytes_written = 0
+        self.bytes_raw_written = self.bytes_decompressed = 0
         self.failovers = 0
 
 
 class DeltaStore:
-    """m storage nodes, replication r, mem or file backend."""
+    """m storage nodes, replication r, mem or file backend.  ``fmt``
+    selects the on-disk block format ("TGI2" compressed columnar by
+    default, "TGI1" raw); reads MAGIC-dispatch, so a store can read
+    blobs of either format regardless of its write format."""
 
     def __init__(self, m: int = 4, r: int = 1, backend: str = "mem",
-                 root: Optional[str] = None):
+                 root: Optional[str] = None, fmt: Optional[str] = None):
         assert 1 <= r <= m
         self.m, self.r = m, r
         self.backend = backend
+        self.fmt = fmt or serialize.DEFAULT_FORMAT
         self.down: set = set()
         self.stats = StoreStats()
+        # per-DeltaKey (raw, encoded) bytes of the last write — the
+        # storage-accounting source for TGI.storage_report()
+        self.key_sizes: Dict[DeltaKey, Tuple[int, int]] = {}
         self._lock = threading.Lock()
         if backend == "mem":
             self._mem: List[Dict] = [dict() for _ in range(m)]
@@ -99,7 +109,13 @@ class DeltaStore:
         return self.root / f"node{node}" / f"ts{tsid}_s{sid}.tgi"
 
     def put(self, key: DeltaKey, arrays: Dict[str, np.ndarray]):
-        blob = serialize.dumps(arrays)
+        # eventlists ('E:*') are the replay hot path — dozens of blobs
+        # per snapshot — so they encode under the latency-biased profile;
+        # hierarchy deltas and aux replicas (the bulk of the bytes, a few
+        # blobs per query) maximize compression
+        profile = "speed" if key.did.startswith("E:") else "size"
+        blob = serialize.dumps(arrays, fmt=self.fmt, profile=profile)
+        raw_bytes = sum(np.asarray(a).nbytes for a in arrays.values())
         wrote = False
         for node in self.replicas(key):
             if node in self.down:
@@ -122,6 +138,8 @@ class DeltaStore:
         with self._lock:
             self.stats.writes += 1
             self.stats.bytes_written += len(blob) * self.r
+            self.stats.bytes_raw_written += raw_bytes * self.r
+            self.key_sizes[key] = (raw_bytes, len(blob))
 
     def _read_node(self, node: int, key: DeltaKey) -> bytes:
         if self.backend == "mem":
@@ -151,11 +169,16 @@ class DeltaStore:
         return found
 
     def get(self, key: DeltaKey,
-            fields: Optional[Iterable[str]] = None) -> Dict[str, np.ndarray]:
+            fields: Optional[Iterable[str]] = None,
+            sizes: Optional[Dict[DeltaKey, Tuple[int, int]]] = None,
+            ) -> Dict[str, np.ndarray]:
         """Read one micro-delta.  ``fields`` projects the read to the named
-        arrays: unrequested columns are never materialized and only the
-        projected bytes count toward ``stats.bytes_read`` (the storage end
-        of the planner's projection pushdown)."""
+        arrays: unrequested columns are seeked over via the block directory
+        (never decompressed or materialized) and only the projected bytes
+        count toward ``stats.bytes_read`` (the storage end of the
+        planner's projection pushdown).  ``sizes``, if given, is filled
+        with this key's ``(encoded_read, raw_decompressed)`` byte counts
+        — the FetchCost accounting side-channel."""
         last_err: Exception = KeyMissing(key)
         for j, node in enumerate(self.replicas(key)):
             if node in self.down:
@@ -167,14 +190,15 @@ class DeltaStore:
             except KeyMissing as e:
                 last_err = e
                 continue
-            arrays = serialize.loads(blob, fields=fields)
-            nb = (len(blob) if fields is None
-                  else sum(a.nbytes for a in arrays.values()))
+            arrays, enc_read, raw_read = serialize.loads_sized(blob, fields=fields)
             with self._lock:
                 self.stats.reads += 1
-                self.stats.bytes_read += nb
+                self.stats.bytes_read += enc_read
+                self.stats.bytes_decompressed += raw_read
                 if j > 0:
                     self.stats.failovers += 1
+            if sizes is not None:
+                sizes[key] = (enc_read, raw_read)
             return arrays
         if isinstance(last_err, KeyMissing):
             raise last_err
@@ -182,7 +206,9 @@ class DeltaStore:
 
     def multiget(self, keys: Iterable[DeltaKey], c: int = 1,
                  fields: Optional[Iterable[str]] = None,
-                 missing_ok: bool = False) -> Dict[DeltaKey, Dict]:
+                 missing_ok: bool = False,
+                 sizes: Optional[Dict[DeltaKey, Tuple[int, int]]] = None,
+                 ) -> Dict[DeltaKey, Dict]:
         """Parallel fetch with c clients (paper Fig. 11/12's c parameter).
         Keys are routed per storage node so each client drains distinct
         nodes — the paper's direct QP->storage parallelism.  With
@@ -193,19 +219,36 @@ class DeltaStore:
         if c <= 1:
             for k in keys:
                 try:
-                    out[k] = self.get(k, fields=fields)
+                    out[k] = self.get(k, fields=fields, sizes=sizes)
                 except KeyMissing:
                     if not missing_ok:
                         raise
             return out
         with cf.ThreadPoolExecutor(max_workers=c) as ex:
-            futs = {ex.submit(self.get, k, fields): k for k in keys}
+            futs = {ex.submit(self.get, k, fields, sizes): k for k in keys}
             for fut in cf.as_completed(futs):
                 try:
                     out[futs[fut]] = fut.result()
                 except KeyMissing:
                     if not missing_ok:
                         raise
+        return out
+
+    def size_report(self) -> Dict[str, Dict[str, int]]:
+        """Raw vs. encoded bytes per did component, from the per-key
+        write accounting (one entry per logical key — multiply by ``r``
+        for on-disk bytes).  Components are the did prefixes: ``E``
+        eventlists, ``S`` hierarchy deltas, ``X`` aux replicas, and the
+        literal did for anything else (checkpoint blocks, manifests)."""
+        out: Dict[str, Dict[str, int]] = {}
+        with self._lock:
+            items = list(self.key_sizes.items())
+        for key, (raw, enc) in items:
+            comp = key.did.split(":", 1)[0]
+            row = out.setdefault(comp, {"raw": 0, "encoded": 0, "count": 0})
+            row["raw"] += raw
+            row["encoded"] += enc
+            row["count"] += 1
         return out
 
     def keys_for_placement(self, tsid: int, sid: int) -> List[DeltaKey]:

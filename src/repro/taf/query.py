@@ -91,6 +91,11 @@ class HistoricalGraphStore:
     def index_size_bytes(self) -> int:
         return self.tgi.index_size_bytes()
 
+    def storage_report(self) -> dict:
+        """Index size by component (eventlists / hierarchy / aux
+        replicas), raw vs. encoded — see ``TGI.storage_report``."""
+        return self.tgi.storage_report()
+
     # ------------------------------------------------------------------
     # Retrieval primitives (paper Algorithms 1-5)
     # ------------------------------------------------------------------

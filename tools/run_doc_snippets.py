@@ -1,0 +1,66 @@
+"""Docs-freshness check: execute the ```python code blocks of the given
+markdown files against the installed package.
+
+Blocks in one file run top-to-bottom in a single shared namespace, so a
+quickstart block can define names that later blocks use — exactly what a
+reader pasting the snippets into one session would experience.  Blocks
+fenced as anything but ```python (```text, bare ```) are ignored, and a
+```python block can be opted out with an HTML comment on the line above
+the fence:
+
+    <!-- doc-test: skip -->
+    ```python
+    ...pseudo-code...
+    ```
+
+Usage:  PYTHONPATH=src python tools/run_doc_snippets.py README.md docs/api.md
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+FENCE_RE = re.compile(
+    r"(?P<prefix>^|\n)(?P<skip><!--\s*doc-test:\s*skip\s*-->\s*\n)?"
+    r"```python[^\n]*\n(?P<body>.*?)\n```",
+    re.DOTALL,
+)
+
+
+def extract_blocks(text: str):
+    for m in FENCE_RE.finditer(text):
+        if m.group("skip"):
+            continue
+        lineno = text[: m.start("body")].count("\n") + 1
+        yield lineno, m.group("body")
+
+
+def run_file(path: pathlib.Path) -> int:
+    ns: dict = {"__name__": f"doc_snippets:{path.name}"}
+    n = 0
+    for lineno, body in extract_blocks(path.read_text()):
+        n += 1
+        code = compile(body, f"{path}:{lineno}", "exec")
+        try:
+            exec(code, ns)
+        except Exception:
+            print(f"FAIL {path} block #{n} (line {lineno})", file=sys.stderr)
+            raise
+        print(f"ok   {path} block #{n} (line {lineno})")
+    if n == 0:
+        print(f"warn {path}: no runnable python blocks", file=sys.stderr)
+    return n
+
+
+def main(argv):
+    if not argv:
+        argv = ["README.md", "docs/api.md"]
+    total = 0
+    for name in argv:
+        total += run_file(pathlib.Path(name))
+    print(f"{total} doc snippet(s) executed")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])
