@@ -379,6 +379,78 @@ def bench_storage():
          f"snapshot_latency_ratio={lat_ratio:.2f}")
 
 
+def bench_ingest():
+    """Streaming ingest + compaction (§4.4 / ROADMAP): sustained
+    events/sec across micro update batches, the per-batch latency curve
+    (incremental version-chain append keeps it flat in batch size, not
+    total history size — measured on a steady-state churn workload so
+    graph growth doesn't mask the history term), and span compaction
+    (micro-span merge ratio, store GC byte consistency)."""
+    from repro.core.tgi import TGI, TGIConfig
+    from repro.data.temporal_graph_gen import generate
+    from repro.storage.kvstore import DeltaStore
+
+    n = N_EVENTS
+    events = generate(n, n_nodes_hint=max(n // 40, 64), seed=7)
+    cfg = TGIConfig(n_shards=4, parts_per_shard=2, events_per_span=n // 4,
+                    eventlist_size=256, checkpoints_per_span=4)
+    batch = max(n // 40, 1)  # micro-batches: 1/10th of a span
+
+    # --- per-batch update latency curve (incremental VC append) ---
+    store = DeltaStore(m=4, r=1, backend="mem")
+    tgi = TGI.build(events.take(slice(0, batch)), cfg, store)
+    lat = []
+    t0_all = time.perf_counter()
+    for lo in range(batch, n, batch):
+        t0 = time.perf_counter()
+        tgi.update(events.take(slice(lo, min(lo + batch, n))))
+        lat.append(time.perf_counter() - t0)
+    total_s = time.perf_counter() - t0_all
+    q = max(len(lat) // 4, 1)
+    early = float(np.median(lat[:q])) * 1e6
+    late = float(np.median(lat[-q:])) * 1e6
+    _row("ingest/update_batch_early", early, f"batch={batch}")
+    _row("ingest/update_batch_late", late,
+         f"late_over_early={late / max(early, 1):.2f}x")
+    _row("ingest/update_events_per_sec", 0.0,
+         f"eps={int((n - batch) / max(total_s, 1e-9))}")
+
+    # --- streamed append (buffered; spans sealed on threshold) ---
+    store2 = DeltaStore(m=4, r=1, backend="mem")
+    tgi2 = TGI.build(events.take(slice(0, batch)), cfg, store2)
+    t0 = time.perf_counter()
+    for lo in range(batch, n, batch):
+        tgi2.append(events.take(slice(lo, min(lo + batch, n))))
+    tgi2.flush()
+    append_s = time.perf_counter() - t0
+    _row("ingest/append_events_per_sec", 0.0,
+         f"eps={int((n - batch) / max(append_s, 1e-9))}")
+
+    # --- compaction: span merge + store GC ---
+    spans_before = len(tgi.spans)
+    live_before = tgi.index_size_bytes()
+    t0 = time.perf_counter()
+    stats = tgi.compact()
+    us = (time.perf_counter() - t0) * 1e6
+    _row("ingest/compact", us,
+         f"spans={spans_before}->{stats.spans_after};"
+         f"reduction={stats.span_reduction:.1f}x;"
+         f"keys_deleted={stats.keys_deleted}")
+    rep = tgi.storage_report()["totals"]
+    _row("ingest/compact_storage", 0.0,
+         f"live_bytes={live_before}->{tgi.index_size_bytes()};"
+         f"report_consistent={tgi.index_size_bytes() == rep['encoded']}")
+
+    # --- read path after the whole pipeline ---
+    t = int(np.mean(events.time_range()))
+
+    def snap():
+        tgi.invalidate_caches()
+        tgi.get_snapshot(t)
+
+    _row("ingest/snapshot_after_compact", _timeit(snap))
+
+
 def table1_index_comparison():
     """Table 1: measured fetch cost (deltas, cardinality, bytes) and index
     size for Log, DeltaGraph (monolithic), and TGI on the same history."""
@@ -486,6 +558,7 @@ BENCHES: Dict[str, Callable] = {
     "replay": bench_replay,
     "snapshots": bench_batched_snapshots,
     "storage": bench_storage,
+    "ingest": bench_ingest,
     "table1": table1_index_comparison,
     "ckpt": bench_checkpoint_store,
     "kernel": bench_delta_overlay_kernel,

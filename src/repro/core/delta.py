@@ -100,7 +100,12 @@ def _node_sum(a: Delta, b: Delta):
 
 
 def _edge_key(src, dst):
-    return src.astype(np.int64) * (2**31) + dst.astype(np.int64)
+    # shift-pack (slot, dst) into one sortable int64.  This is a delta-
+    # internal keyspace (src is a global SLOT id, not a node id) and is
+    # never compared against GraphState.edge_key / snapshot.pack_edge_key
+    # (which shifts by 32); both halves stay below 2^31 here (slots are
+    # n_parts*psize-bounded, dst ids are bounded by events.py int32)
+    return (src.astype(np.int64) << 31) | dst.astype(np.int64)
 
 
 def _edge_sum(a: Delta, b: Delta, cap: Optional[int] = None):

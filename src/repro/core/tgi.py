@@ -18,6 +18,11 @@ Index anatomy per timespan (all stored in the DeltaStore under
 
 Retrieval implements Algorithms 1-5.  Fetch cost accounting (deltas
 fetched, bytes) is recorded per query for the Table-1 benchmarks.
+
+The write path lives in ``repro.core.ingest``: one ``SpanBuilder``
+serves batch ``build``, incremental ``update``, the streaming
+``append``/``flush`` front-end (open-span reads overlay the not-yet-
+sealed buffer), and ``compact`` (micro-span merging + store GC).
 """
 from __future__ import annotations
 
@@ -29,14 +34,12 @@ from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import partition as part_mod
 from repro.core import delta as delta_mod
+from repro.core import ingest as ingest_mod
 from repro.core.delta import (
     FIELDS as DELTA_FIELDS,
     SENTINEL,
     Delta,
-    delta_difference,
-    delta_intersection,
     delta_sum,
 )
 from repro.core.events import EventLog
@@ -48,7 +51,7 @@ from repro.core.snapshot import (
     overlay_fold,
     pack_edge_key,
 )
-from repro.core.timespan import TimeSpan, span_for_time, split_timespans
+from repro.core.timespan import TimeSpan, split_timespans
 from repro.core.version_chain import VersionChains
 from repro.storage.kvstore import DeltaKey, DeltaStore
 
@@ -65,6 +68,9 @@ class TGIConfig:
     omega: str = "union_max"  # time-collapse for locality partitioning
     replicate_1hop: bool = False  # auxiliary edge-cut replication
     pad_multiple: int = 128
+    # streaming ingest: also seal a span once the buffered events cover
+    # this many time units (None = cut on events_per_span alone)
+    span_seal_time: Optional[int] = None
 
     @property
     def n_parts(self) -> int:
@@ -102,9 +108,14 @@ class TGI:
     def __init__(self, cfg: TGIConfig, store: DeltaStore):
         self.cfg = cfg
         self.store = store
-        self.spans: List[SpanIndex] = []
+        self.spans: List[SpanIndex] = []  # chronological
+        self._span_by_tsid: Dict[int, SpanIndex] = {}
+        self._next_tsid = 0  # monotonic — compaction rewrites under fresh ids
         self.vc: Optional[VersionChains] = None
         self.n_nodes = 0
+        self._events = EventLog.empty()
+        self._pending = EventLog.empty()  # streaming ingest buffer
+        self._final_state = GraphState.empty(0, cfg.n_attrs)
         self.last_cost = FetchCost()
         self._cost_accum: Optional[FetchCost] = None
         # reconstructed-snapshot LRU: key -> (GraphState, logical FetchCost)
@@ -154,243 +165,234 @@ class TGI:
         return tgi
 
     def _build_from(self, events: EventLog, state: GraphState):
-        cfg = self.cfg
-        spans = split_timespans(events, cfg.events_per_span)
+        self.spans = []
+        self._span_by_tsid = {}
+        self._next_tsid = 0
+        self._events = EventLog.empty()
+        self._pending = EventLog.empty()
+        self._final_state = state
         self.n_nodes = max(events.n_nodes, len(state.present))
-        span_of_event = np.zeros(len(events), np.int32)
-        bucket_of_event = np.zeros(len(events), np.int32)
-
-        for sp in spans:
-            ev_span = events.take(slice(sp.ev_lo, sp.ev_hi))
-            span_of_event[sp.ev_lo : sp.ev_hi] = sp.tsid
-            # nodes live in this span = existing state nodes + touched
-            touched = np.unique(np.concatenate([
-                ev_span.src, ev_span.dst[ev_span.dst >= 0],
-                state.node_ids(),
-            ])) if len(ev_span) else state.node_ids()
-            touched = touched[touched >= 0]
-            assignment = None
-            if cfg.partition_strategy == "locality" and len(ev_span):
-                nids_l, assignment = part_mod.partition_timespan(
-                    ev_span, cfg.n_parts, "locality", cfg.omega, seed=sp.tsid
-                )
-                # locality assigns only touched-by-edges; extend w/ hash
-                if len(nids_l) < len(touched):
-                    from repro.core.slots import hash32
-
-                    assign_full = (hash32(touched) % np.uint32(cfg.n_parts)).astype(np.int32)
-                    pos = np.searchsorted(touched, nids_l)
-                    assign_full[pos] = assignment
-                    assignment = assign_full
-            smap = SlotMap.build(touched, cfg.n_parts, assignment, cfg.pad_multiple)
-
-            # --- buckets + checkpoints ---
-            n_ev = sp.ev_hi - sp.ev_lo
-            n_buckets = max(math.ceil(n_ev / cfg.eventlist_size), 1)
-            ckpt_every = max(math.ceil(n_buckets / cfg.checkpoints_per_span), 1)
-            checkpoint_ts: List[int] = []
-            bucket_bounds: List[Tuple[int, int]] = []
-            leaves: List[Delta] = []
-            leaf_graphs: List[GraphState] = []
-
-            # leaf 0: state at span start
-            checkpoint_ts.append(sp.t_start - 1)
-            leaves.append(state.to_delta(smap, cfg.n_attrs))
-            leaf_graphs.append(state.copy())
-
-            for b in range(n_buckets):
-                lo = sp.ev_lo + b * cfg.eventlist_size
-                hi = min(sp.ev_lo + (b + 1) * cfg.eventlist_size, sp.ev_hi)
-                bucket_bounds.append((lo, hi))
-                bucket_of_event[lo:hi] = b
-                ev_b = events.take(slice(lo, hi))
-                self._store_eventlist(sp.tsid, b, ev_b, smap)
-                state.apply_bucket(ev_b)
-                # checkpoints only at bucket boundaries that don't split a
-                # timestamp — otherwise later same-t events would be in
-                # neither the checkpoint nor the (t > t_ck) replay filter
-                if ((b + 1) % ckpt_every == 0 and b + 1 < n_buckets
-                        and events.t[hi - 1] != events.t[hi]):
-                    checkpoint_ts.append(int(events.t[hi - 1]))
-                    leaves.append(state.to_delta(smap, cfg.n_attrs))
-                    leaf_graphs.append(state.copy())
-
-            self._store_hierarchy(sp.tsid, leaves, smap)
-            if cfg.replicate_1hop:
-                self._store_aux_replication(sp.tsid, leaf_graphs[-1], smap)
-            self.spans.append(
-                SpanIndex(span=sp, smap=smap, checkpoint_ts=checkpoint_ts,
-                          bucket_bounds=bucket_bounds)
-            )
-
-        self.vc = VersionChains.build(events, span_of_event, bucket_of_event,
-                                      self.n_nodes)
-        self._final_state = state  # retained for update()
-        self._events = events
+        z = np.empty(0, np.int32)
+        self.vc = VersionChains.build(EventLog.empty(), z, z, 0)
+        self._ingest_spans(events)
+        self.vc.consolidate()  # a bulk build lands as one base CSR
         self.invalidate_caches()
+
+    def _ingest_spans(self, new_events: EventLog) -> None:
+        """Seal append-only events into spans via the shared SpanBuilder
+        (one write path for build/update/flush) and extend the version
+        chains incrementally — O(batch), not O(total history)."""
+        base = len(self._events)
+        state = self._final_state
+        builder = ingest_mod.SpanBuilder(self.cfg, self.store)
+        spans = split_timespans(new_events, self.cfg.events_per_span)
+        span_of = np.empty(len(new_events), np.int32)
+        bucket_of = np.empty(len(new_events), np.int32)
+        for sp in spans:
+            sp2 = TimeSpan(self._next_tsid, sp.t_start, sp.t_end,
+                           base + sp.ev_lo, base + sp.ev_hi)
+            self._next_tsid += 1
+            ev_span = new_events.take(slice(sp.ev_lo, sp.ev_hi))
+            si, b_of = builder.build_span(sp2, ev_span, state)
+            span_of[sp.ev_lo:sp.ev_hi] = sp2.tsid
+            bucket_of[sp.ev_lo:sp.ev_hi] = b_of
+            self.spans.append(si)
+            self._span_by_tsid[sp2.tsid] = si
+        self._events = self._events.concat(new_events, sort=False)
+        self.n_nodes = max(self.n_nodes, new_events.n_nodes, len(state.present))
+        if len(new_events):
+            self.vc.append(new_events, span_of, bucket_of, self.n_nodes)
+            # snapshots strictly before the new events are untouched
+            self.invalidate_caches(t_from=int(new_events.t[0]))
 
     def update(self, new_events: EventLog):
         """Batch update (paper: 'accepts updates in batches of timespan
-        length'): builds spans for the new events on the running state and
-        merges metadata (an independent-TGI merge specialization)."""
+        length').  Spans for the new events are cut by the shared
+        SpanBuilder on the running state — the same layout policy as
+        ``build`` (locality partitioning and 1-hop replication included)
+        — and the version chains extend incrementally instead of being
+        re-derived from the full log."""
         assert len(new_events)
+        self.flush()  # seal any streaming buffer first: global order
         t_last = self._events.t[-1] if len(self._events) else -(2**62)
         assert new_events.t[0] >= t_last, "updates must be append-only"
-        base = len(self._events)
-        all_events = self._events.concat(new_events, sort=False)
-        state = self._final_state
-        old_spans = self.spans
-        self.spans = list(old_spans)
-        # rebuild only the new spans
-        spans = split_timespans(new_events, self.cfg.events_per_span)
-        span_of, bucket_of = [], []
-        tsid0 = len(old_spans)
+        self._ingest_spans(new_events)
+
+    # ------------------------------------------------------------------
+    # Streaming ingest (buffered append + span sealing + flush)
+    # ------------------------------------------------------------------
+
+    def append(self, new_events: EventLog) -> None:
+        """Streaming front-end: buffer events, cutting spans whenever the
+        buffer holds ``events_per_span`` events (and/or covers
+        ``cfg.span_seal_time`` time units).  Queries remain correct while
+        ingest is mid-flight: reads at t past the sealed history overlay
+        the buffer's live events (open-span reads); ``flush()`` seals the
+        remainder into a final (possibly short) span."""
+        if not len(new_events):
+            return
+        t_tail = self._pending.t[-1] if len(self._pending) else (
+            self._events.t[-1] if len(self._events) else None)
+        assert t_tail is None or new_events.t[0] >= t_tail, \
+            "appends must be append-only"
+        self._pending = self._pending.concat(new_events, sort=False)
+        # buffered events shadow cached snapshots at t >= their start
+        self.invalidate_caches(t_from=int(new_events.t[0]))
+        self._seal_ready(force=False)
+
+    def flush(self) -> None:
+        """Seal every buffered event into spans."""
+        self._seal_ready(force=True)
+
+    def _seal_ready(self, force: bool) -> None:
+        epb = self.cfg.events_per_span
+        window = self.cfg.span_seal_time
+        while True:
+            n = len(self._pending)
+            if n == 0:
+                return
+            timed_out = (window is not None and
+                         int(self._pending.t[-1]) - int(self._pending.t[0])
+                         >= window)
+            if not force and n < epb and not timed_out:
+                return
+            if force and n <= epb:
+                hi = n
+            elif n < epb:  # timed_out: close the window [t0, t0 + window)
+                hi = max(int(np.searchsorted(
+                    self._pending.t,
+                    int(self._pending.t[0]) + window, side="left")), 1)
+            else:
+                hi = epb
+            if hi < n:  # span boundaries never split a timestamp
+                t_edge = int(self._pending.t[hi - 1])
+                hi = int(np.searchsorted(self._pending.t, t_edge, side="right"))
+            self._ingest_spans(self._pending.take(slice(0, hi)))
+            self._pending = self._pending.take(slice(hi, n))
+
+    def _pending_floor(self) -> Optional[int]:
+        """First buffered (unsealed) timestamp, or None when fully sealed.
+        Reads at t >= this floor are open-span reads."""
+        return int(self._pending.t[0]) if len(self._pending) else None
+
+    def _overlay_pending(self, g: GraphState, t: int, si: SpanIndex,
+                         pids: Optional[Sequence[int]]) -> GraphState:
+        """Open-span read: apply the buffered events with t' <= t on top
+        of the sealed-index state.  With a pid subset, only events with an
+        endpoint in the subset are applied (mirroring the sealed eventlist
+        filter); events touching nodes the sealed SlotMap has never seen
+        (brand-new nodes, not yet in any partition) are kept
+        conservatively so histories and k-hop expansion stay complete."""
+        pend = self._pending.up_to(t)
+        if not len(pend):
+            return g
+        if pids is not None:
+            sel = np.asarray(pids)
+            pid_s, _, found_s = si.smap.lookup(pend.src)
+            keep = (found_s & np.isin(pid_s, sel)) | ~found_s
+            has_dst = pend.dst >= 0
+            if has_dst.any():
+                pid_d, _, found_d = si.smap.lookup(pend.dst)
+                keep |= has_dst & ((found_d & np.isin(pid_d, sel)) | ~found_d)
+            pend = pend.take(np.nonzero(keep)[0])
+        g.apply_bucket(pend)
+        return g
+
+    # ------------------------------------------------------------------
+    # Compaction (micro-span merging + store GC)
+    # ------------------------------------------------------------------
+
+    def compact(self, min_run: int = 2) -> "ingest_mod.CompactionStats":
+        """Merge runs of adjacent micro-spans (spans shorter than
+        ``events_per_span``, as accreted by small update/append batches)
+        into full-size spans: re-derives the merged spans' SlotMaps,
+        eventlist buckets, and hierarchy through the shared SpanBuilder,
+        rewrites them under fresh tsids, deletes the superseded store
+        keys (GC — ``storage_report`` shrinks), and re-derives the
+        version chains against the new layout (which also consolidates
+        any appended segments).  Snapshot-cache invalidation is scoped to
+        the affected spans' time ranges; cached snapshots outside them
+        survive.  A run is only rewritten when it actually reduces the
+        span count (``min_run`` adjacent micro-spans merging into fewer
+        full spans)."""
+        self.flush()
         cfg = self.cfg
-        for sp in spans:
-            sp2 = TimeSpan(tsid0 + sp.tsid, sp.t_start, sp.t_end,
-                           base + sp.ev_lo, base + sp.ev_hi)
-            ev_span = new_events.take(slice(sp.ev_lo, sp.ev_hi))
-            touched = np.unique(np.concatenate([
-                ev_span.src, ev_span.dst[ev_span.dst >= 0], state.node_ids()
-            ]))
-            touched = touched[touched >= 0]
-            smap = SlotMap.build(touched, cfg.n_parts, None, cfg.pad_multiple)
-            n_ev = sp.ev_hi - sp.ev_lo
-            n_buckets = max(math.ceil(n_ev / cfg.eventlist_size), 1)
-            ckpt_every = max(math.ceil(n_buckets / cfg.checkpoints_per_span), 1)
-            checkpoint_ts = [sp2.t_start - 1]
-            leaves = [state.to_delta(smap, cfg.n_attrs)]
-            bucket_bounds = []
-            for b in range(n_buckets):
-                lo = sp.ev_lo + b * cfg.eventlist_size
-                hi = min(sp.ev_lo + (b + 1) * cfg.eventlist_size, sp.ev_hi)
-                bucket_bounds.append((base + lo, base + hi))
-                ev_b = new_events.take(slice(lo, hi))
-                self._store_eventlist(sp2.tsid, b, ev_b, smap)
-                state.apply_bucket(ev_b)
-                span_of.extend([sp2.tsid] * (hi - lo))
-                bucket_of.extend([b] * (hi - lo))
-                if ((b + 1) % ckpt_every == 0 and b + 1 < n_buckets
-                        and new_events.t[hi - 1] != new_events.t[hi]):
-                    checkpoint_ts.append(int(new_events.t[hi - 1]))
-                    leaves.append(state.to_delta(smap, cfg.n_attrs))
-            self._store_hierarchy(sp2.tsid, leaves, smap)
-            self.spans.append(SpanIndex(sp2, smap, checkpoint_ts, bucket_bounds))
-        self._events = all_events
-        self.n_nodes = max(self.n_nodes, all_events.n_nodes)
-        old_span_of = self.vc  # rebuild VC from scratch (append-merge)
-        full_span_of = np.concatenate([
-            np.repeat(
-                [s.span.tsid for s in old_spans],
-                [s.span.ev_hi - s.span.ev_lo for s in old_spans],
-            ).astype(np.int32) if old_spans else np.empty(0, np.int32),
-            np.asarray(span_of, np.int32),
-        ])
-        full_bucket_of = np.concatenate([
-            self._bucket_of_old(old_spans),
-            np.asarray(bucket_of, np.int32),
-        ])
-        self.vc = VersionChains.build(all_events, full_span_of, full_bucket_of,
-                                      self.n_nodes)
-        self.invalidate_caches()
+        stats = ingest_mod.CompactionStats(spans_before=len(self.spans))
+        sizes = [s.span.ev_hi - s.span.ev_lo for s in self.spans]
+        runs: List[Tuple[int, int]] = []
+        i = 0
+        while i < len(self.spans):
+            if sizes[i] >= cfg.events_per_span:
+                i += 1
+                continue
+            j = i
+            while j < len(self.spans) and sizes[j] < cfg.events_per_span:
+                j += 1
+            total = sum(sizes[i:j])
+            if (j - i >= min_run
+                    and j - i > math.ceil(total / cfg.events_per_span)):
+                runs.append((i, j))
+            i = j
+        if not runs:
+            stats.spans_after = len(self.spans)
+            stats.cost = FetchCost()
+            return stats
+        bytes_w0 = self.store.stats.bytes_written
+        bytes_d0 = self.store.stats.bytes_deleted
+        builder = ingest_mod.SpanBuilder(cfg, self.store)
+        with self.cost_scope() as acc:
+            new_layout = list(self.spans)
+            affected: List[Tuple[int, int]] = []
+            # reversed: splice positions of earlier runs stay valid
+            for (i, j) in reversed(runs):
+                first, last = self.spans[i], self.spans[j - 1]
+                ev_lo, ev_hi = first.span.ev_lo, last.span.ev_hi
+                affected.append((first.span.t_start, last.span.t_end))
+                ev_run = self._events.take(slice(ev_lo, ev_hi))
+                # starting state = reconstructed state just before the run
+                # (spans before it are untouched by this pass)
+                if i == 0:
+                    state = GraphState.empty(0, cfg.n_attrs)
+                else:
+                    state = self.get_snapshot(self.spans[i - 1].span.t_end)
+                replacement = []
+                for sp in split_timespans(ev_run, cfg.events_per_span):
+                    sp2 = TimeSpan(self._next_tsid, sp.t_start, sp.t_end,
+                                   ev_lo + sp.ev_lo, ev_lo + sp.ev_hi)
+                    self._next_tsid += 1
+                    si, _ = builder.build_span(
+                        sp2, ev_run.take(slice(sp.ev_lo, sp.ev_hi)), state)
+                    replacement.append(si)
+                for old in self.spans[i:j]:  # GC superseded store keys
+                    for sid in range(cfg.n_shards):
+                        for k in self.store.keys_for_placement(
+                                old.span.tsid, sid):
+                            if self.store.delete(k):
+                                stats.keys_deleted += 1
+                stats.events_rewritten += ev_hi - ev_lo
+                stats.runs_merged += 1
+                new_layout[i:j] = replacement
+            self.spans = new_layout
+            self._span_by_tsid = {s.span.tsid: s for s in self.spans}
+            # re-derive version chains against the new layout (vectorized
+            # bounds arithmetic; the log itself is unchanged)
+            span_of, bucket_of = ingest_mod.span_bucket_arrays(self.spans)
+            self.vc = VersionChains.build(self._events, span_of, bucket_of,
+                                          self.n_nodes)
+            self.invalidate_caches(t_ranges=affected)
+        stats.spans_after = len(self.spans)
+        stats.bytes_deleted = self.store.stats.bytes_deleted - bytes_d0
+        stats.bytes_written = self.store.stats.bytes_written - bytes_w0
+        stats.cost = acc
+        return stats
 
     def _bucket_of_old(self, old_spans) -> np.ndarray:
-        out = []
-        for s in old_spans:
-            for b, (lo, hi) in enumerate(s.bucket_bounds):
-                out.extend([b] * (hi - lo))
-        return np.asarray(out, np.int32)
+        # shim over the vectorized helper (was a per-event Python loop)
+        return ingest_mod.span_bucket_arrays(old_spans)[1]
 
     # ---- storage helpers ----
     def _sid_of_pid(self, pid: int) -> int:
         return pid // self.cfg.parts_per_shard
-
-    def _store_eventlist(self, tsid: int, bucket: int, ev: EventLog, smap: SlotMap):
-        """Partitioned eventlists: events replicated to both endpoints'
-        shards, pid column included for micro-partition filtering."""
-        if not len(ev):
-            return
-        pid_src, _, _ = smap.lookup(ev.src)
-        pid_dst = np.full(len(ev), -1, np.int32)
-        has_dst = ev.dst >= 0
-        if has_dst.any():
-            pid_dst[has_dst] = smap.lookup(ev.dst[has_dst])[0]
-        for sid in range(self.cfg.n_shards):
-            ppl = self.cfg.parts_per_shard
-            in_shard = (pid_src // ppl == sid) | ((pid_dst >= 0) & (pid_dst // ppl == sid))
-            idx = np.nonzero(in_shard)[0]
-            if not len(idx):
-                continue
-            sub = ev.take(idx)
-            arrays = sub.to_dict()
-            arrays["pid"] = pid_src[idx] % ppl
-            self.store.put(DeltaKey(tsid, sid, f"E:{bucket}", 0), arrays)
-
-    def _delta_arrays(self, d: Delta, p: int) -> Dict[str, np.ndarray]:
-        """Micro-delta = one partition slice of a Delta.  Edge runs are
-        keyed by global slot, so partition p's run is a contiguous
-        [p*psize, (p+1)*psize) range of the sorted e_src."""
-        psize = d.valid.shape[1]
-        lo = np.searchsorted(d.e_src, p * psize)
-        hi = np.searchsorted(d.e_src, (p + 1) * psize)
-        return {
-            "valid": d.valid[p],
-            "present": d.present[p],
-            "attrs": d.attrs[p],
-            "e_src": d.e_src[lo:hi],
-            "e_dst": d.e_dst[lo:hi],
-            "e_op": d.e_op[lo:hi],
-            "e_val": d.e_val[lo:hi],
-        }
-
-    def _store_delta(self, tsid: int, did: str, d: Delta):
-        for p in range(self.cfg.n_parts):
-            sid = self._sid_of_pid(p)
-            self.store.put(
-                DeltaKey(tsid, sid, did, p % self.cfg.parts_per_shard),
-                self._delta_arrays(d, p),
-            )
-
-    def _store_hierarchy(self, tsid: int, leaves: List[Delta], smap: SlotMap):
-        """DeltaGraph-style binary intersection tree; store root + all
-        parent->child differences (paper §4.3b)."""
-        level = 0
-        nodes = leaves
-        while len(nodes) > 1:
-            parents = []
-            for i in range(0, len(nodes), 2):
-                if i + 1 < len(nodes):
-                    parent = delta_intersection(nodes[i], nodes[i + 1])
-                    self._store_delta(tsid, f"S:{level}:{i}",
-                                      delta_difference(nodes[i], parent))
-                    self._store_delta(tsid, f"S:{level}:{i+1}",
-                                      delta_difference(nodes[i + 1], parent))
-                else:
-                    # odd tail: node is its own parent; store an empty diff
-                    # so the root->leaf path naming stays uniform
-                    parent = nodes[i]
-                    self._store_delta(tsid, f"S:{level}:{i}",
-                                      delta_difference(nodes[i], nodes[i]))
-                parents.append(parent)
-            nodes = parents
-            level += 1
-        self._store_delta(tsid, f"S:{level}:0", nodes[0])  # root, stored fully
-        self._root_level = level
-
-    def _store_aux_replication(self, tsid: int, g: GraphState, smap: SlotMap):
-        """Aux micro-deltas with 1-hop external neighbors per partition."""
-        src, dst, val = g.edges()
-        pid_s, _, _ = smap.lookup(src)
-        pid_d, _, _ = smap.lookup(dst)
-        cut = pid_s != pid_d
-        for p in range(self.cfg.n_parts):
-            sel = cut & ((pid_s == p) | (pid_d == p))
-            if not sel.any():
-                continue
-            self.store.put(
-                DeltaKey(tsid, self._sid_of_pid(p), "X:0", p % self.cfg.parts_per_shard),
-                {"src": src[sel], "dst": dst[sel], "val": val[sel]},
-            )
 
     # ------------------------------------------------------------------
     # Retrieval
@@ -583,8 +585,26 @@ class TGI:
         while len(self._snap_cache) > self.SNAP_CACHE_MAX:
             self._snap_cache.popitem(last=False)
 
-    def invalidate_caches(self) -> None:
-        self._snap_cache.clear()
+    def invalidate_caches(self, t_from: Optional[int] = None,
+                          t_ranges: Optional[Sequence[Tuple[int, int]]] = None,
+                          ) -> None:
+        """Snapshot-LRU invalidation, scoped when possible.  With no
+        arguments everything is dropped (legacy behavior).  ``t_from``
+        drops entries at t >= t_from (append/update: snapshots strictly
+        before the new events stay valid); ``t_ranges`` drops entries
+        whose t falls inside any inclusive [lo, hi] range (compaction:
+        only the rewritten spans' windows are touched)."""
+        if t_from is None and t_ranges is None:
+            self._snap_cache.clear()
+            return
+        stale = [
+            k for k in self._snap_cache
+            if (t_from is not None and k[0] >= t_from)
+            or (t_ranges is not None
+                and any(lo <= k[0] <= hi for lo, hi in t_ranges))
+        ]
+        for k in stale:
+            del self._snap_cache[k]
 
     def get_snapshot(self, t: int, c: int = 1, pids: Optional[Sequence[int]] = None,
                      use_kernel: bool = False,
@@ -595,12 +615,17 @@ class TGI:
         passing one without "attrs" skips the attribute tiles entirely
         (the returned attrs are then -1/unset).  Results go through a
         small LRU keyed on (t, pids, projection); hits skip storage but
-        re-record the logical fetch cost."""
+        re-record the logical fetch cost.  Reads at t past the sealed
+        history (mid-stream ``append``) overlay the ingest buffer's live
+        events and bypass the LRU."""
         self.last_cost = FetchCost()
+        p0 = self._pending_floor()
+        open_read = p0 is not None and t >= p0
         key = self._snap_key(t, pids, projection, c)
-        hit = self._snap_cache_get(key)
-        if hit is not None:
-            return hit
+        if not open_read:
+            hit = self._snap_cache_get(key)
+            if hit is not None:
+                return hit
         with self.cost_scope() as acc:
             si = self._span_index(t)
             leaf = self._leaf_for(si, t)
@@ -618,7 +643,10 @@ class TGI:
             if pids is not None:
                 state = self._restrict_pids(state, si, pids)
             g = delta_to_graph(state, si.smap)
-        self._snap_cache_put(key, g, acc)
+            if open_read:
+                g = self._overlay_pending(g, t, si, pids)
+        if not open_read:
+            self._snap_cache_put(key, g, acc)
         return g
 
     def get_snapshots(self, ts: Sequence[int], c: int = 1,
@@ -637,16 +665,18 @@ class TGI:
         ts_list = [int(t) for t in np.asarray(ts, np.int64).ravel()]
         out: List[Optional[GraphState]] = [None] * len(ts_list)
         self.last_cost = FetchCost()
+        p0 = self._pending_floor()
         groups: Dict[Tuple[int, int], List[int]] = {}
         for j, t in enumerate(ts_list):
-            hit = self._snap_cache_get(self._snap_key(t, pids, projection, c))
-            if hit is not None:
-                out[j] = hit
-                continue
+            if p0 is None or t < p0:  # open reads bypass the LRU
+                hit = self._snap_cache_get(self._snap_key(t, pids, projection, c))
+                if hit is not None:
+                    out[j] = hit
+                    continue
             si = self._span_index(t)
             groups.setdefault((si.span.tsid, self._leaf_for(si, t)), []).append(j)
         for (tsid, leaf), members in groups.items():
-            si = self.spans[tsid]
+            si = self._span_by_tsid[tsid]
             t_ck = si.checkpoint_ts[leaf]
             t_hi = max(ts_list[j] for j in members)
             path = self._hierarchy_path(si, leaf)
@@ -666,7 +696,10 @@ class TGI:
             for j, state in zip(members, states):
                 if pids is not None:
                     state = self._restrict_pids(state, si, pids)
-                out[j] = delta_to_graph(state, si.smap)
+                g = delta_to_graph(state, si.smap)
+                if p0 is not None and ts_list[j] >= p0:
+                    g = self._overlay_pending(g, ts_list[j], si, pids)
+                out[j] = g
             # NOT inserted into the snapshot LRU: the group's fetch cost
             # is shared across members, so a per-t entry would over-
             # report the logical cost on later single-t cache hits
@@ -715,13 +748,23 @@ class TGI:
         ]
 
     def get_node_history(self, nid: int, t0: int, t1: int, c: int = 1):
-        """Algorithm 2: (initial state at t0, EventLog of changes (t0,t1])."""
+        """Algorithm 2: (initial state at t0, EventLog of changes (t0,t1]).
+        Buffered (unsealed) events in the window ride along from memory —
+        they are not yet referenced by the version chains."""
         self.last_cost = FetchCost()
         si = self._span_index(t0)
         pid, slot, found = si.smap.lookup(np.asarray([nid]))
+        p0 = self._pending_floor()
+        pend_has_nid = False
+        if p0 is not None and t0 >= p0:
+            pend0 = self._pending.up_to(t0)
+            pend_has_nid = bool(((pend0.src == nid) | (pend0.dst == nid)).any())
         init = None
-        if found[0]:
-            snap = self.get_snapshot(t0, c=c, pids=[int(pid[0])])
+        if found[0] or pend_has_nid:
+            # a node only the buffer knows has no sealed partition yet —
+            # fall back to the unrestricted overlay read
+            snap = self.get_snapshot(
+                t0, c=c, pids=[int(pid[0])] if found[0] else None)
             if nid < len(snap.present) and snap.present[nid]:
                 init = {
                     "present": 1,
@@ -731,7 +774,7 @@ class TGI:
         ts, tsids, buckets = self.vc.get(nid, t0, t1)
         ev = EventLog.empty()
         for tsid in np.unique(tsids):
-            si2 = self.spans[int(tsid)]
+            si2 = self._span_by_tsid[int(tsid)]
             bks = np.unique(buckets[tsids == tsid])
             # events touching nid are replicated to nid's shard: read it alone
             pid2, _, found2 = si2.smap.lookup(np.asarray([nid]))
@@ -739,6 +782,8 @@ class TGI:
             got = self._fetch_eventlists(si2, int(bks.min()), int(bks.max()) + 1, c,
                                          sids=sids)
             ev = ev.concat(got, sort=False)
+        if p0 is not None and t1 >= p0:
+            ev = ev.concat(self._pending.slice_time(t0, t1), sort=False)
         ev = ev.take(np.argsort(ev.t, kind="stable"))
         sel = ((ev.src == nid) | (ev.dst == nid)) & (ev.t > t0) & (ev.t <= t1)
         return init, ev.take(np.nonzero(sel)[0])
@@ -824,8 +869,17 @@ class TGI:
                 "hood": hood, "neighbor_events": neigh_events}
 
     # ---- stats ----
+    def time_range(self) -> Tuple[int, int]:
+        """Ingested time range, including still-buffered (pending) events."""
+        if len(self._pending):
+            t0 = self._events.t[0] if len(self._events) else self._pending.t[0]
+            return int(t0), int(self._pending.t[-1])
+        return self._events.time_range()
+
     def index_size_bytes(self) -> int:
-        return self.store.stats.bytes_written
+        """Live encoded bytes on the store (x replication) — shrinks when
+        compaction GCs superseded spans."""
+        return self.store.live_bytes()
 
     COMPONENT_NAMES = {"E": "eventlists", "S": "hierarchy", "X": "aux_replicas"}
 

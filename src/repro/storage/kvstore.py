@@ -43,6 +43,12 @@ class StorageNodeDown(RuntimeError):
     pass
 
 
+# file-backend deletion marker: a record whose length field holds this
+# sentinel carries no blob and tombstones every earlier write of its key
+# (reads are last-record-wins, so append-only chunk files stay valid)
+_TOMBSTONE = (1 << 64) - 1
+
+
 class KeyMissing(KeyError):
     pass
 
@@ -51,16 +57,19 @@ class KeyMissing(KeyError):
 class StoreStats:
     reads: int = 0
     writes: int = 0
+    n_deletes: int = 0  # keys GC'd (span compaction)
     bytes_read: int = 0  # encoded bytes touched off storage
     bytes_written: int = 0  # encoded bytes on disk (x replication)
     bytes_raw_written: int = 0  # pre-encoding bytes (x replication)
     bytes_decompressed: int = 0  # raw bytes materialized by reads
+    bytes_deleted: int = 0  # encoded bytes reclaimed by deletes (x repl.)
     failovers: int = 0
 
     def reset(self):
-        self.reads = self.writes = 0
+        self.reads = self.writes = self.n_deletes = 0
         self.bytes_read = self.bytes_written = 0
         self.bytes_raw_written = self.bytes_decompressed = 0
+        self.bytes_deleted = 0
         self.failovers = 0
 
 
@@ -161,12 +170,51 @@ class DeltaStore:
             off += klen
             blen = int.from_bytes(data[off : off + 8], "little")
             off += 8
+            if blen == _TOMBSTONE:  # deletion marker, no blob follows
+                if k == want:
+                    found = None
+                continue
             if k == want:
                 found = data[off : off + blen]  # last write wins
             off += blen
         if found is None:
             raise KeyMissing(key)
         return found
+
+    def delete(self, key: DeltaKey) -> bool:
+        """GC one micro-delta (span compaction's cleanup path): drops the
+        key from every live replica — the mem backend pops, the file
+        backend appends a tombstone record — and reverses the write
+        accounting (``key_sizes`` forgets the key, so ``size_report`` and
+        ``TGI.storage_report`` shrink; ``stats.bytes_deleted`` tracks the
+        reclaimed encoded bytes).  Returns whether the key was live."""
+        for node in self.replicas(key):
+            if node in self.down:
+                continue
+            if self.backend == "mem":
+                self._mem[node].pop(key, None)
+            else:
+                path = self._chunk_path(node, key.placement)
+                if not path.exists():
+                    continue
+                rec_key = f"{key.did}|{key.pid}".encode()
+                with self._lock, open(path, "ab") as f:
+                    f.write(len(rec_key).to_bytes(4, "little"))
+                    f.write(rec_key)
+                    f.write(_TOMBSTONE.to_bytes(8, "little"))
+        with self._lock:
+            sizes = self.key_sizes.pop(key, None)
+            if sizes is None:
+                return False
+            self.stats.n_deletes += 1
+            self.stats.bytes_deleted += sizes[1] * self.r
+        return True
+
+    def live_bytes(self) -> int:
+        """Encoded bytes currently live on the store (x replication) —
+        unlike ``stats.bytes_written`` this shrinks after GC."""
+        with self._lock:
+            return sum(enc for _, enc in self.key_sizes.values()) * self.r
 
     def get(self, key: DeltaKey,
             fields: Optional[Iterable[str]] = None,
@@ -274,7 +322,11 @@ class DeltaStore:
                 k = data[off : off + klen].decode()
                 off += klen
                 blen = int.from_bytes(data[off : off + 8], "little")
-                off += 8 + blen
+                off += 8
                 did, pid = k.rsplit("|", 1)
+                if blen == _TOMBSTONE:  # deleted (last record wins)
+                    ks.discard(DeltaKey(tsid, sid, did, int(pid)))
+                    continue
+                off += blen
                 ks.add(DeltaKey(tsid, sid, did, int(pid)))
         return sorted(ks)

@@ -82,11 +82,33 @@ class HistoricalGraphStore:
         return self.tgi.store
 
     def update(self, new_events: EventLog) -> None:
-        """Append a batch of new events to the index."""
+        """Append a batch of new events to the index (synchronous: every
+        event is sealed into spans before this returns)."""
         self.tgi.update(new_events)
 
+    def append(self, new_events: EventLog) -> None:
+        """Streaming ingest: buffer events, sealing spans as thresholds
+        are crossed (``events_per_span`` / ``cfg.span_seal_time``).
+        Queries issued mid-stream stay correct — reads past the sealed
+        history overlay the buffer's live events."""
+        self.tgi.append(new_events)
+
+    def flush(self) -> None:
+        """Seal every buffered (appended) event into spans."""
+        self.tgi.flush()
+
+    def compact(self, min_run: int = 2):
+        """Merge runs of adjacent micro-spans accreted by small
+        update/append batches and GC the superseded store keys.  Returns
+        ``CompactionStats``; the fetch cost of compaction's own reads
+        lands on ``last_cost`` (its write/delete I/O is in the stats'
+        byte counters)."""
+        stats = self.tgi.compact(min_run=min_run)
+        self.last_cost = stats.cost
+        return stats
+
     def time_range(self) -> Tuple[int, int]:
-        return self.tgi._events.time_range()
+        return self.tgi.time_range()
 
     def index_size_bytes(self) -> int:
         return self.tgi.index_size_bytes()
