@@ -199,23 +199,117 @@ def bench_query_pushdown():
     """Beyond-paper: planner pushdown — a selective TemporalQuery prunes
     partitions/shards and projects attrs away; cost vs the full fetch."""
     from repro.taf import HistoricalGraphStore
+    from repro.taf.plan import PlanExecutor
 
     events, cfg, kv, tgi = _build()
     store = HistoricalGraphStore.from_tgi(tgi)
     t0g, t1g = events.time_range()
     t0 = int(t0g + 0.4 * (t1g - t0g))
     t1 = int(t0g + 0.8 * (t1g - t0g))
+
+    def run_fresh(q):
+        # this bench measures the *fetch*: drop the cross-plan fetch
+        # cache, snapshot LRU, and decoded-block pool so repeats
+        # exercise the storage path, not the cache stack
+        PlanExecutor.clear_fetch_cache()
+        tgi.invalidate_caches()
+        return q.run()
+
     full = store.nodes(t0, t1)
-    us = _timeit(lambda: full.execute(), repeat=2)
-    cost = full.run().cost
+    us = _timeit(lambda: run_fresh(full), repeat=2)
+    cost = run_fresh(full).cost
     _row("pushdown/full_fetch", us,
          f"deltas={cost.n_deltas};bytes={cost.n_bytes}")
     ids = store.snapshot(t0).node_ids()[:4]
     pruned = store.nodes(t0, t1).filter(node_ids=ids).project(attrs=False)
-    us = _timeit(lambda: pruned.execute(), repeat=2)
-    cost = pruned.run().cost
+    us = _timeit(lambda: run_fresh(pruned), repeat=2)
+    cost = run_fresh(pruned).cost
     _row("pushdown/pruned_projected", us,
          f"deltas={cost.n_deltas};bytes={cost.n_bytes}")
+
+
+def bench_fetch():
+    """Read-path overhaul bench: (1) decoded-block buffer pool — warm vs
+    cold repeated snapshot/hierarchy reads over one span (gate: warm
+    >= 2x faster); (2) range-seek vs whole-file backend — physical file
+    bytes under ``projection=()`` i.e. project(attrs=False) (gate: seek
+    <= 0.5x bytes); (3) accounting consistency — pool hits reported
+    separately, never as physical decodes."""
+    import tempfile
+
+    from repro.core.tgi import TGI, TGIConfig
+    from repro.data.temporal_graph_gen import generate
+    from repro.storage.kvstore import DeltaStore
+
+    n = N_EVENTS
+    events = generate(n, seed=7)
+    cfg = TGIConfig(n_shards=4, parts_per_shard=2, events_per_span=n // 4,
+                    eventlist_size=256, checkpoints_per_span=4)
+    t0g, t1g = events.time_range()
+
+    # --- pool: repeated snapshot/hierarchy reads in one span ---
+    with tempfile.TemporaryDirectory() as root:
+        store = DeltaStore(m=4, r=1, backend="file", root=root)
+        tgi = TGI.build(events, cfg, store)
+        sp = tgi.spans[1].span
+        ts = np.linspace(sp.t_start + 1, sp.t_end, 8).astype(np.int64)
+
+        def read_all():
+            for t in ts:
+                tgi.get_snapshot(int(t))
+
+        def cold():
+            for t in ts:  # every read pays physical fetch + decode
+                tgi.invalidate_caches()  # snapshot LRU AND pool
+                tgi.get_snapshot(int(t))
+
+        def warm():
+            tgi.invalidate_caches(drop_pool=False)  # snapshot LRU only
+            read_all()
+
+        us_cold = _timeit(cold)
+        warm()  # fill the pool outside the timed region
+        us_warm = _timeit(warm)
+        _row("fetch/snapshots8_cold_pool", us_cold)
+        _row("fetch/snapshots8_warm_pool", us_warm,
+             f"speedup={us_cold / max(us_warm, 1):.2f}x")
+        tgi.invalidate_caches()
+        with tgi.cost_scope() as c_cold:
+            read_all()  # one shared pass: later reads pool-hit mid-pass
+        tgi.invalidate_caches(drop_pool=False)
+        with tgi.cost_scope() as c_warm:
+            read_all()
+        _row("fetch/pool_accounting", 0.0,
+             f"cold_phys={c_cold.n_bytes_decompressed};"
+             f"cold_pool={c_cold.n_bytes_pool};"
+             f"warm_phys={c_warm.n_bytes_decompressed};"
+             f"warm_pool={c_warm.n_bytes_pool};"
+             f"raw_total_consistent="
+             f"{c_cold.n_bytes_raw_total == c_warm.n_bytes_raw_total}")
+
+    # --- backend: whole-file slurp vs range-seek, projected fetch ---
+    t = int((t0g + t1g) // 2)
+    io_bytes, us_by_mode = {}, {}
+    for mode, seek in (("wholefile", False), ("rangeseek", True)):
+        with tempfile.TemporaryDirectory() as root:
+            store = DeltaStore(m=4, r=1, backend="file", root=root,
+                               seek=seek, pool_bytes=0)
+            tgi = TGI.build(events, cfg, store)
+            tgi.invalidate_caches()
+            store.stats.reset()
+            tgi.get_snapshot(t, projection=())  # attrs tiles skipped
+            io_bytes[mode] = store.stats.bytes_io
+
+            def snap():
+                tgi.invalidate_caches()
+                tgi.get_snapshot(t, projection=())
+
+            us_by_mode[mode] = _timeit(snap)
+            _row(f"fetch/{mode}_projected_snapshot", us_by_mode[mode],
+                 f"bytes_io={io_bytes[mode]}")
+    _row("fetch/rangeseek_vs_wholefile", 0.0,
+         f"io_ratio={io_bytes['rangeseek'] / max(io_bytes['wholefile'], 1):.3f};"
+         f"latency_ratio={us_by_mode['rangeseek'] / max(us_by_mode['wholefile'], 1):.2f}")
 
 
 def fig17_incremental_vs_temporal():
@@ -555,6 +649,7 @@ BENCHES: Dict[str, Callable] = {
     "fig15c": fig15c_taf_scaling,
     "fig17": fig17_incremental_vs_temporal,
     "pushdown": bench_query_pushdown,
+    "fetch": bench_fetch,
     "replay": bench_replay,
     "snapshots": bench_batched_snapshots,
     "storage": bench_storage,

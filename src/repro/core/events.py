@@ -118,3 +118,65 @@ def normalize_edges(src, dst):
     lo = np.minimum(src, dst)
     hi = np.maximum(src, dst)
     return lo, hi
+
+
+class ChunkedEventLog:
+    """Append-only event log held as a list of column segments.
+
+    ``TGI._events`` used to be one flat ``EventLog`` extended by
+    ``concat`` per ingest batch — an O(total-history) memcpy every time.
+    This holds the log as segments instead: ``append`` is O(1) (the
+    segment list grows; nothing is copied), and readers go through
+    ``flat()`` — or the ``t`` / ``take`` / ``time_range`` conveniences —
+    which concatenates lazily, at most once per read-after-append burst.
+    ``TGI.compact()`` calls ``fold()`` explicitly, so steady-state reads
+    between compactions are zero-copy."""
+
+    def __init__(self, base: Optional[EventLog] = None):
+        self._flat = base if base is not None else EventLog.empty()
+        self._tail: list = []
+        self._tail_len = 0
+
+    def __len__(self) -> int:
+        return len(self._flat) + self._tail_len
+
+    def append(self, ev: EventLog) -> None:
+        """O(1): queue a segment; no bytes move until the next read."""
+        if not len(ev):
+            return
+        self._tail.append(ev)
+        self._tail_len += len(ev)
+
+    def fold(self) -> EventLog:
+        """Concatenate pending segments into the flat log (idempotent)."""
+        if self._tail:
+            logs = [self._flat] + self._tail
+            self._flat = EventLog(**{
+                c: np.concatenate([getattr(log, c) for log in logs])
+                for c in COLUMNS
+            })
+            self._tail = []
+            self._tail_len = 0
+        return self._flat
+
+    # readers (EventLog-compatible views used by TGI/son/pipeline)
+    flat = fold
+
+    @property
+    def t(self) -> np.ndarray:
+        return self.fold().t
+
+    def take(self, idx) -> EventLog:
+        return self.fold().take(idx)
+
+    def time_range(self) -> Tuple[int, int]:
+        """First/last event time — segment bounds only, never folds."""
+        if len(self) == 0:
+            return (0, 0)
+        first = self._flat if len(self._flat) else self._tail[0]
+        last = self._tail[-1] if self._tail else self._flat
+        return int(first.t[0]), int(last.t[-1])
+
+    @property
+    def n_segments(self) -> int:
+        return (1 if len(self._flat) else 0) + len(self._tail)

@@ -16,6 +16,13 @@ One write path for everything between the event log and the read path:
 * ``CompactionStats`` — the result record of ``TGI.compact()``: span
   counts, deleted/rewritten store bytes, and the fetch cost of the reads
   compaction issued (surfaced as ``HistoricalGraphStore.last_cost``).
+
+Read-cache coherence: every write this subsystem emits goes through
+``DeltaStore.put`` and every GC through ``DeltaStore.delete``, both of
+which invalidate the store's decoded-block buffer pool per key — so
+build/update/append/compact can never leave stale decoded columns
+behind, and scoped snapshot-LRU invalidation (``t_from``/``t_ranges``)
+never needs to touch the pool.
 """
 from __future__ import annotations
 

@@ -23,6 +23,13 @@ The write path lives in ``repro.core.ingest``: one ``SpanBuilder``
 serves batch ``build``, incremental ``update``, the streaming
 ``append``/``flush`` front-end (open-span reads overlay the not-yet-
 sealed buffer), and ``compact`` (micro-span merging + store GC).
+
+The read path layers caches with truthful accounting: the snapshot LRU
+(whole states; hits replay logical FetchCost), the store's decoded-
+block pool (columns; pool bytes reported separately from physical
+decodes), and byte-grounded cost estimators (``estimate_fetch_cost``,
+``explain_k_hop``) that the query planner uses for snapshot-vs-expand
+and pruning decisions.
 """
 from __future__ import annotations
 
@@ -42,7 +49,7 @@ from repro.core.delta import (
     Delta,
     delta_sum,
 )
-from repro.core.events import EventLog
+from repro.core.events import ChunkedEventLog, EventLog
 from repro.core.slots import SlotMap
 from repro.core.snapshot import (
     GraphState,
@@ -53,7 +60,7 @@ from repro.core.snapshot import (
 )
 from repro.core.timespan import TimeSpan, split_timespans
 from repro.core.version_chain import VersionChains
-from repro.storage.kvstore import DeltaKey, DeltaStore
+from repro.storage.kvstore import DeltaKey, DeltaStore, ReadSizes
 
 
 @dataclasses.dataclass
@@ -88,15 +95,30 @@ class SpanIndex:
 @dataclasses.dataclass
 class FetchCost:
     n_deltas: int = 0
-    n_bytes: int = 0  # encoded bytes read off storage (wire/disk bytes)
+    n_bytes: int = 0  # encoded bytes physically read off storage
     sum_cardinality: int = 0
-    n_bytes_decompressed: int = 0  # raw bytes materialized after decode
+    n_bytes_decompressed: int = 0  # raw bytes physically decoded
+    n_bytes_pool: int = 0  # raw bytes served from the decoded-block pool
+    n_pool_hits: int = 0  # pooled columns served (never physical decodes)
 
-    def add(self, n=1, b=0, card=0, raw=0):
+    def add(self, n=1, b=0, card=0, raw=0, pool=0, pool_hits=0):
         self.n_deltas += n
         self.n_bytes += b
         self.sum_cardinality += card
         self.n_bytes_decompressed += raw
+        self.n_bytes_pool += pool
+        self.n_pool_hits += pool_hits
+
+    def copy(self) -> "FetchCost":
+        return dataclasses.replace(self)
+
+    @property
+    def n_bytes_raw_total(self) -> int:
+        """Logical raw bytes the query touched, however they were served
+        (physical decode + pool).  Invariant: identical with the pool on
+        or off — the pool moves bytes between the two buckets, it never
+        changes what a query logically reads."""
+        return self.n_bytes_decompressed + self.n_bytes_pool
 
 
 class TGI:
@@ -113,22 +135,28 @@ class TGI:
         self._next_tsid = 0  # monotonic — compaction rewrites under fresh ids
         self.vc: Optional[VersionChains] = None
         self.n_nodes = 0
-        self._events = EventLog.empty()
+        # chunked: ingest appends O(1) segments, reads concat lazily
+        self._events = ChunkedEventLog()
         self._pending = EventLog.empty()  # streaming ingest buffer
         self._final_state = GraphState.empty(0, cfg.n_attrs)
         self.last_cost = FetchCost()
         self._cost_accum: Optional[FetchCost] = None
         # reconstructed-snapshot LRU: key -> (GraphState, logical FetchCost)
         self._snap_cache: "collections.OrderedDict" = collections.OrderedDict()
+        # bumped by every cache invalidation (ingest, compaction, manual):
+        # the plan layer's cross-plan fetch cache keys on it, so a shared
+        # operand can never outlive the index state it was fetched from
+        self.read_epoch = 0
+        self._mean_degree_cache: Optional[Tuple[int, float]] = None
 
     # ------------------------------------------------------------------
     # Query-planner hooks (used by repro.taf.plan / repro.taf.query)
     # ------------------------------------------------------------------
 
-    def _record_cost(self, n=1, b=0, card=0, raw=0):
-        self.last_cost.add(n, b, card, raw)
+    def _record_cost(self, n=1, b=0, card=0, raw=0, pool=0, pool_hits=0):
+        self.last_cost.add(n, b, card, raw, pool, pool_hits)
         if self._cost_accum is not None:
-            self._cost_accum.add(n, b, card, raw)
+            self._cost_accum.add(n, b, card, raw, pool, pool_hits)
 
     @contextlib.contextmanager
     def cost_scope(self) -> Iterator[FetchCost]:
@@ -144,7 +172,8 @@ class TGI:
             self._cost_accum = prev
             if prev is not None:  # nested scopes roll up
                 prev.add(acc.n_deltas, acc.n_bytes, acc.sum_cardinality,
-                         acc.n_bytes_decompressed)
+                         acc.n_bytes_decompressed, acc.n_bytes_pool,
+                         acc.n_pool_hits)
 
     def pids_for_nodes(self, node_ids: np.ndarray, t: int) -> List[int]:
         """Partition-pruning pushdown: the micro-partitions that cover
@@ -153,6 +182,120 @@ class TGI:
         si = self._span_index(t)
         pid, _, found = si.smap.lookup(np.asarray(node_ids, np.int32))
         return sorted(set(int(p) for p in pid[found]))
+
+    def has_cached_snapshot(self, t: int, projection=None, c: int = 1) -> bool:
+        """Non-destructive snapshot-LRU probe (planner hook): a warm
+        *full* snapshot at t makes an unpruned fetch cheaper than a cold
+        pruned one — the executor asks before committing to pruning."""
+        return self._snap_key(int(t), None, projection, c) in self._snap_cache
+
+    def _span_fetch_keys(self, t: int, pids: Optional[Sequence[int]] = None,
+                         ) -> Tuple[List[DeltaKey], List[DeltaKey]]:
+        """The store keys Algorithm 1 would touch for a snapshot at ``t``:
+        ``(hierarchy path keys, eventlist keys)`` for the covering span,
+        leaf, and partition subset — the cost model's key enumeration
+        (shares the exact logic of ``get_snapshot``'s fetch)."""
+        if not self.spans:
+            return [], []
+        si = self._span_index(t)
+        leaf = self._leaf_for(si, t)
+        plist = list(range(self.cfg.n_parts)) if pids is None else list(pids)
+        hier = [
+            k for did in self._hierarchy_path(si, leaf)
+            for k in self._delta_keys(si.span.tsid, did, plist)
+        ]
+        t_ck = si.checkpoint_ts[leaf]
+        sids = sorted({self._sid_of_pid(int(p)) for p in plist})
+        ev_keys = []
+        bs = self._ev_buckets(si, t_ck, t)
+        if bs:  # the real fetch reads the contiguous [min, max] range
+            for b in range(min(bs), max(bs) + 1):
+                for sid in sids:
+                    ev_keys.append(DeltaKey(si.span.tsid, sid, f"E:{b}", 0))
+        return hier, ev_keys
+
+    def estimate_fetch_cost(self, t: int,
+                            pids: Optional[Sequence[int]] = None,
+                            ) -> Dict[str, float]:
+        """Planner estimate of one snapshot fetch at ``t``: encoded and
+        raw bytes of every key the fetch would touch — real write-time
+        sizes from ``store.key_sizes``, not guesses — split by component
+        and discounted by the decoded-block pool's residency.  The
+        ``physical_raw_bytes`` dimension is what cost-based plan
+        selection compares: it is the ``FetchCost.n_bytes_decompressed``
+        the fetch would actually pay, given what the pool already holds."""
+        hier, ev_keys = self._span_fetch_keys(t, pids)
+        out = {"enc_bytes": 0.0, "raw_bytes": 0.0, "physical_raw_bytes": 0.0,
+               "hier_raw_bytes": 0.0, "ev_raw_bytes": 0.0,
+               "hier_physical_bytes": 0.0, "ev_physical_bytes": 0.0}
+        for comp, keys in (("hier", hier), ("ev", ev_keys)):
+            for k in keys:
+                raw, enc = self.store.key_sizes.get(k, (0, 0))
+                phys = raw * (1.0 - self.store.pool_residency(k))
+                out["enc_bytes"] += enc
+                out["raw_bytes"] += raw
+                out["physical_raw_bytes"] += phys
+                out[f"{comp}_raw_bytes"] += raw
+                out[f"{comp}_physical_bytes"] += phys
+        return out
+
+    def _mean_degree(self) -> float:
+        """Mean degree of the final state (cached per read_epoch) — the
+        k-hop cost model's frontier-growth rate."""
+        cached = self._mean_degree_cache
+        if cached is not None and cached[0] == self.read_epoch:
+            return cached[1]
+        g = self._final_state
+        n_alive = int((g.present == 1).sum())
+        dbar = (2.0 * len(g.edge_key)) / max(n_alive, 1)
+        self._mean_degree_cache = (self.read_epoch, dbar)
+        return dbar
+
+    def explain_k_hop(self, nid: int, t: int, k: int) -> Dict[str, float]:
+        """The cost model behind ``get_k_hop(method="auto")``.
+
+        * ``snapshot_bytes`` — physical raw bytes of a full-span fetch
+          (pool-discounted ``estimate_fetch_cost``).
+        * ``expand_bytes`` — hierarchy bytes scaled by the expected
+          fraction of partitions a k-hop frontier touches (balls-into-
+          bins over the expected frontier size under the mean degree),
+          plus eventlist bytes for the covering shards (fetched once
+          physically: the pool absorbs the per-hop re-reads).
+
+        Grounded in ``FetchCost.n_bytes_decompressed`` units: both
+        estimates are the raw bytes the method would physically decode,
+        given current pool residency.  Ties fall back to the paper's
+        ``k <= 2 -> expand`` heuristic."""
+        full = self.estimate_fetch_cost(t)
+        n_parts, n_shards = self.cfg.n_parts, self.cfg.n_shards
+        dbar = self._mean_degree()
+        m = 1.0
+        fr = 1.0
+        for _ in range(k):
+            fr *= max(dbar, 1e-9)
+            m += fr
+        m = min(m, float(max(self.n_nodes, 1)))
+        # expected distinct partitions/shards hit by m uniform nodes
+        part_frac = 1.0 - (1.0 - 1.0 / max(n_parts, 1)) ** m
+        shard_frac = 1.0 - (1.0 - 1.0 / max(n_shards, 1)) ** m
+        snapshot_bytes = full["physical_raw_bytes"]
+        expand_bytes = (full["hier_physical_bytes"] * part_frac
+                        + full["ev_physical_bytes"] * shard_frac)
+        if expand_bytes < snapshot_bytes:
+            method = "expand"
+        elif expand_bytes > snapshot_bytes:
+            method = "snapshot"
+        else:
+            method = "expand" if k <= 2 else "snapshot"
+        return {
+            "snapshot_bytes": snapshot_bytes,
+            "expand_bytes": expand_bytes,
+            "mean_degree": dbar,
+            "expected_frontier": m,
+            "partition_fraction": part_frac,
+            "shard_fraction": shard_frac,
+            "method": method,
+        }
 
     # ------------------------------------------------------------------
     # Construction (paper §4.4 'Construction and Update')
@@ -168,7 +311,7 @@ class TGI:
         self.spans = []
         self._span_by_tsid = {}
         self._next_tsid = 0
-        self._events = EventLog.empty()
+        self._events = ChunkedEventLog()
         self._pending = EventLog.empty()
         self._final_state = state
         self.n_nodes = max(events.n_nodes, len(state.present))
@@ -198,7 +341,8 @@ class TGI:
             bucket_of[sp.ev_lo:sp.ev_hi] = b_of
             self.spans.append(si)
             self._span_by_tsid[sp2.tsid] = si
-        self._events = self._events.concat(new_events, sort=False)
+        # O(1) segment append — the flat view folds lazily on next read
+        self._events.append(new_events)
         self.n_nodes = max(self.n_nodes, new_events.n_nodes, len(state.present))
         if len(new_events):
             self.vc.append(new_events, span_of, bucket_of, self.n_nodes)
@@ -214,7 +358,8 @@ class TGI:
         re-derived from the full log."""
         assert len(new_events)
         self.flush()  # seal any streaming buffer first: global order
-        t_last = self._events.t[-1] if len(self._events) else -(2**62)
+        # time_range() reads segment bounds only — no fold on the ingest path
+        t_last = self._events.time_range()[1] if len(self._events) else -(2**62)
         assert new_events.t[0] >= t_last, "updates must be append-only"
         self._ingest_spans(new_events)
 
@@ -232,7 +377,7 @@ class TGI:
         if not len(new_events):
             return
         t_tail = self._pending.t[-1] if len(self._pending) else (
-            self._events.t[-1] if len(self._events) else None)
+            self._events.time_range()[1] if len(self._events) else None)
         assert t_tail is None or new_events.t[0] >= t_tail, \
             "appends must be append-only"
         self._pending = self._pending.concat(new_events, sort=False)
@@ -316,6 +461,7 @@ class TGI:
         span count (``min_run`` adjacent micro-spans merging into fewer
         full spans)."""
         self.flush()
+        self._events.fold()  # chunked log: segments collapse at compaction
         cfg = self.cfg
         stats = ingest_mod.CompactionStats(spans_before=len(self.spans))
         sizes = [s.span.ev_hi - s.span.ev_lo for s in self.spans]
@@ -377,8 +523,8 @@ class TGI:
             # re-derive version chains against the new layout (vectorized
             # bounds arithmetic; the log itself is unchanged)
             span_of, bucket_of = ingest_mod.span_bucket_arrays(self.spans)
-            self.vc = VersionChains.build(self._events, span_of, bucket_of,
-                                          self.n_nodes)
+            self.vc = VersionChains.build(self._events.fold(), span_of,
+                                          bucket_of, self.n_nodes)
             self.invalidate_caches(t_ranges=affected)
         stats.spans_after = len(self.spans)
         stats.bytes_deleted = self.store.stats.bytes_deleted - bytes_d0
@@ -393,6 +539,27 @@ class TGI:
     # ---- storage helpers ----
     def _sid_of_pid(self, pid: int) -> int:
         return pid // self.cfg.parts_per_shard
+
+    def _delta_keys(self, tsid: int, did: str,
+                    pids: Sequence[int]) -> List[DeltaKey]:
+        """Store keys of one delta restricted to a partition subset —
+        THE key layout of the fetch path; the cost model enumerates
+        through this same helper so estimates can't drift from reads."""
+        return [
+            DeltaKey(tsid, self._sid_of_pid(p), did,
+                     p % self.cfg.parts_per_shard)
+            for p in pids
+        ]
+
+    def _ev_buckets(self, si: SpanIndex, t_ck: int, t_hi: int) -> List[int]:
+        """Micro-eventlist buckets of ``si`` whose events intersect
+        (t_ck, t_hi] — shared by the real fetch (``_span_events_until``)
+        and the cost model (``_span_fetch_keys``)."""
+        return [
+            b for b, (lo, hi) in enumerate(si.bucket_bounds)
+            if hi > lo and self._events.t[lo] <= t_hi
+            and self._events.t[hi - 1] > t_ck
+        ]
 
     # ------------------------------------------------------------------
     # Retrieval
@@ -425,16 +592,13 @@ class TGI:
                      projection: Optional[Sequence[str]] = None) -> Delta:
         cfg = self.cfg
         pids = list(range(cfg.n_parts)) if pids is None else list(pids)
-        keys = [
-            DeltaKey(tsid, self._sid_of_pid(p), did, p % cfg.parts_per_shard)
-            for p in pids
-        ]
+        keys = self._delta_keys(tsid, did, pids)
         fields = None
         if projection is not None and "attrs" not in projection:
             # attribute-projection pushdown: the attrs tile (the widest
             # column) is never read off storage
             fields = tuple(f for f in DELTA_FIELDS if f != "attrs")
-        sizes: Dict[DeltaKey, Tuple[int, int]] = {}
+        sizes: Dict[DeltaKey, ReadSizes] = {}
         got = self.store.multiget(keys, c=c, fields=fields, sizes=sizes)
         psize = si.smap.psize
         d = Delta.empty(cfg.n_parts, psize, cfg.n_attrs, ecap=1)
@@ -447,8 +611,9 @@ class TGI:
                 d.attrs[p] = a["attrs"]
             ne = int((a["e_src"] != SENTINEL).sum())
             e_parts.append((a["e_src"][:ne], a["e_dst"][:ne], a["e_op"][:ne], a["e_val"][:ne]))
-            enc, raw = sizes[k]
-            self._record_cost(1, enc, int(a["valid"].sum()) + ne, raw)
+            s = sizes[k]
+            self._record_cost(1, s.enc, int(a["valid"].sum()) + ne, s.raw,
+                              s.pool, s.pool_cols)
         if e_parts:
             d.e_src = np.concatenate([e[0] for e in e_parts])
             d.e_dst = np.concatenate([e[1] for e in e_parts])
@@ -476,7 +641,7 @@ class TGI:
         # a bucket may have no events on a given shard -> key absent;
         # the stored pid column is for micro reads only — project it
         # away so it is seeked over, never decoded
-        sizes: Dict[DeltaKey, Tuple[int, int]] = {}
+        sizes: Dict[DeltaKey, ReadSizes] = {}
         got = self.store.multiget(keys, c=c, missing_ok=True, sizes=sizes,
                                   fields=("t", "kind", "src", "dst", "key", "val"))
         logs = []
@@ -484,8 +649,8 @@ class TGI:
             if k not in got:
                 continue
             a = got[k]
-            enc, raw = sizes[k]
-            self._record_cost(1, enc, len(a["t"]), raw)
+            s = sizes[k]
+            self._record_cost(1, s.enc, len(a["t"]), s.raw, s.pool, s.pool_cols)
             logs.append(a)
         if not logs:
             return out
@@ -510,11 +675,7 @@ class TGI:
                            pids: Optional[Sequence[int]]) -> EventLog:
         """Eventlists of the span covering (t_ck, t_hi], pid-filtered —
         fetched ONCE and re-filtered per timepoint by the batched path."""
-        ev_buckets = [
-            b for b, (lo, hi) in enumerate(si.bucket_bounds)
-            if hi > lo and self._events.t[lo] <= t_hi
-            and self._events.t[hi - 1] > t_ck
-        ]
+        ev_buckets = self._ev_buckets(si, t_ck, t_hi)
         if not ev_buckets:
             return EventLog.empty()
         sids = None
@@ -571,31 +732,41 @@ class TGI:
         self._snap_cache.move_to_end(key)
         g, cost = hit
         # replay the logical fetch cost: the LRU changes wall time, not
-        # the planner's accounting (cost invariants stay deterministic)
+        # the planner's accounting (cost invariants stay deterministic).
+        # The replay preserves the fill-time physical-vs-pool split, so
+        # bytes the block pool served are never re-counted as decodes
+        # (accounting parity with the fill-time read).
         self._record_cost(cost.n_deltas, cost.n_bytes, cost.sum_cardinality,
-                          cost.n_bytes_decompressed)
+                          cost.n_bytes_decompressed, cost.n_bytes_pool,
+                          cost.n_pool_hits)
         return g.copy()
 
     def _snap_cache_put(self, key, g: GraphState, cost: FetchCost) -> None:
-        self._snap_cache[key] = (
-            g.copy(), FetchCost(cost.n_deltas, cost.n_bytes,
-                                cost.sum_cardinality, cost.n_bytes_decompressed)
-        )
+        self._snap_cache[key] = (g.copy(), cost.copy())
         self._snap_cache.move_to_end(key)
         while len(self._snap_cache) > self.SNAP_CACHE_MAX:
             self._snap_cache.popitem(last=False)
 
     def invalidate_caches(self, t_from: Optional[int] = None,
                           t_ranges: Optional[Sequence[Tuple[int, int]]] = None,
-                          ) -> None:
-        """Snapshot-LRU invalidation, scoped when possible.  With no
-        arguments everything is dropped (legacy behavior).  ``t_from``
-        drops entries at t >= t_from (append/update: snapshots strictly
-        before the new events stay valid); ``t_ranges`` drops entries
-        whose t falls inside any inclusive [lo, hi] range (compaction:
-        only the rewritten spans' windows are touched)."""
+                          drop_pool: bool = True) -> None:
+        """Cache invalidation, scoped when possible.  With no arguments
+        everything is dropped — the snapshot LRU AND the store's
+        decoded-block pool (pass ``drop_pool=False`` to keep warm blocks,
+        e.g. when benchmarking the pool itself).  ``t_from`` drops LRU
+        entries at t >= t_from (append/update: snapshots strictly before
+        the new events stay valid); ``t_ranges`` drops entries whose t
+        falls inside any inclusive [lo, hi] range (compaction: only the
+        rewritten spans' windows are touched).  Scoped invalidation
+        leaves the block pool alone: stored blocks are immutable per
+        tsid, and the write paths invalidate per key through
+        ``DeltaStore.put``/``delete``.  Every call bumps ``read_epoch``
+        (the plan-layer fetch cache keys on it)."""
+        self.read_epoch += 1
         if t_from is None and t_ranges is None:
             self._snap_cache.clear()
+            if drop_pool:
+                self.store.clear_pool()
             return
         stale = [
             k for k in self._snap_cache
@@ -795,9 +966,13 @@ class TGI:
     def get_k_hop(self, nid: int, t: int, k: int, c: int = 1,
                   method: str = "auto") -> GraphState:
         """Algorithms 3/4.  'snapshot' filters a full snapshot; 'expand'
-        fetches partitions on demand (wins for k<=2, per the paper)."""
+        fetches partitions on demand.  'auto' is cost-based: it compares
+        the physical raw bytes each method would decode — real stored
+        sizes discounted by decoded-block-pool residency (see
+        ``explain_k_hop``) — instead of the paper's fixed k<=2 rule
+        (which remains the tie-break)."""
         if method == "auto":
-            method = "expand" if k <= 2 else "snapshot"
+            method = self.explain_k_hop(nid, t, k)["method"]
         if method == "snapshot":
             g = self.get_snapshot(t, c=c)
             return self._filter_k_hop(g, nid, k)
@@ -872,7 +1047,8 @@ class TGI:
     def time_range(self) -> Tuple[int, int]:
         """Ingested time range, including still-buffered (pending) events."""
         if len(self._pending):
-            t0 = self._events.t[0] if len(self._events) else self._pending.t[0]
+            t0 = (self._events.time_range()[0] if len(self._events)
+                  else int(self._pending.t[0]))
             return int(t0), int(self._pending.t[-1])
         return self._events.time_range()
 

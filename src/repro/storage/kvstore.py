@@ -12,9 +12,28 @@ Replication factor r places a chunk on r consecutive storage nodes;
 ``fail_node``/``heal_node`` inject failures — reads fall over to live
 replicas, writes raise only if *all* replicas are down.  A thread-pooled
 ``multiget`` models the paper's parallel fetch factor ``c``.
+
+Read-path fast layers (both on by default):
+
+* **Decoded-block buffer pool** (``BlockPool``): a byte-budgeted LRU of
+  *decoded* columns keyed ``(key, column)``.  Repeated hierarchy-path
+  and eventlist reads — the inner loop of snapshot retrieval and
+  compaction — skip storage I/O AND decompression entirely.  Pool hits
+  are accounted separately from physical decodes (``StoreStats.
+  pool_hits`` / ``bytes_pool_served`` vs ``bytes_decompressed``;
+  ``ReadSizes`` carries the per-key split) so FetchCost stays truthful.
+  Writers (``put``/``delete``) invalidate per key.
+* **Range-seek file backend** (``seek=True``): every put appends the
+  blob's (offset, length) extent to a ``.tgx`` sidecar next to the chunk
+  file; reads seek straight to the blob, parse the TGI2 directory from a
+  small prefix, and pread only the *requested* columns' byte ranges —
+  a ``fields=`` projection saves real disk I/O, not just decode time
+  (``StoreStats.bytes_io`` counts the physical file bytes actually
+  read; compare with ``seek=False``, which slurps whole chunk files).
 """
 from __future__ import annotations
 
+import collections
 import concurrent.futures as cf
 import dataclasses
 import os
@@ -26,6 +45,7 @@ from typing import Dict, Iterable, List, NamedTuple, Optional, Tuple
 import numpy as np
 
 from repro.storage import serialize
+from repro.storage.serialize import BlockCorruption  # re-export  # noqa: F401
 
 
 class DeltaKey(NamedTuple):
@@ -61,9 +81,15 @@ class StoreStats:
     bytes_read: int = 0  # encoded bytes touched off storage
     bytes_written: int = 0  # encoded bytes on disk (x replication)
     bytes_raw_written: int = 0  # pre-encoding bytes (x replication)
-    bytes_decompressed: int = 0  # raw bytes materialized by reads
+    bytes_decompressed: int = 0  # raw bytes physically decoded by reads
     bytes_deleted: int = 0  # encoded bytes reclaimed by deletes (x repl.)
     failovers: int = 0
+    # decoded-block pool accounting — pool hits are NEVER counted as
+    # physical decodes (bytes_decompressed), so FetchCost stays truthful
+    pool_hits: int = 0  # columns served from the pool
+    pool_misses: int = 0  # columns physically read + decoded (pool on)
+    bytes_pool_served: int = 0  # raw bytes served from the pool
+    bytes_io: int = 0  # physical file-backend bytes read (0 for mem)
 
     def reset(self):
         self.reads = self.writes = self.n_deletes = 0
@@ -71,26 +97,179 @@ class StoreStats:
         self.bytes_raw_written = self.bytes_decompressed = 0
         self.bytes_deleted = 0
         self.failovers = 0
+        self.pool_hits = self.pool_misses = self.bytes_pool_served = 0
+        self.bytes_io = 0
+
+
+class ReadSizes(NamedTuple):
+    """Per-key byte accounting of one ``get`` (the ``sizes=`` out-param):
+    what physically crossed storage vs what the decoded-block pool
+    served.  ``enc + raw`` describe the physical read; ``pool`` raw
+    bytes (over ``pool_cols`` columns) came from the pool and must never
+    be reported as decompression."""
+
+    enc: int  # encoded bytes physically read off storage
+    raw: int  # raw bytes physically materialized by decode
+    pool: int = 0  # raw bytes served from the decoded-block pool
+    pool_cols: int = 0  # pooled columns in this read
+
+
+# default decoded-block pool budget per store (bytes); 0 disables
+DEFAULT_POOL_BYTES = 48 << 20
+
+
+class BlockPool:
+    """Byte-budgeted LRU of *decoded* columns keyed ``(DeltaKey, column)``.
+
+    The buffer-pool-over-compressed-deltas design (Khurana & Deshpande):
+    snapshot retrieval and compaction re-read the same hierarchy-path
+    and eventlist blocks over and over; caching their decoded arrays
+    turns those repeats into dictionary lookups — no storage I/O, no
+    decompression, no checksum pass.  Entries are copied on insert and
+    stored read-only: the cold-read caller keeps its own (possibly
+    writeable) array, so no mutation can reach the pool, and a pooled
+    column never pins the blob buffer it was decoded from.  Warm reads
+    hand the read-only array out without copying (callers already
+    tolerate read-only arrays — raw/zlib decodes are ``frombuffer``
+    views).  The parsed per-key directory rides along so a fully pooled
+    key is served with zero backend touches.
+    """
+
+    def __init__(self, budget_bytes: int):
+        self.budget = int(budget_bytes)
+        self._lock = threading.Lock()
+        self._cols: "collections.OrderedDict" = collections.OrderedDict()
+        self._dirs: Dict[DeltaKey, List[serialize.ColumnMeta]] = {}
+        self._by_key: Dict[DeltaKey, set] = defaultdict(set)
+        self.bytes_cached = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.inserts = 0
+        self.invalidations = 0
+
+    def get(self, key: DeltaKey, col: str) -> Optional[np.ndarray]:
+        with self._lock:
+            a = self._cols.get((key, col))
+            if a is None:
+                self.misses += 1
+                return None
+            self._cols.move_to_end((key, col))
+            self.hits += 1
+            return a
+
+    def peek(self, key: DeltaKey, col: str) -> bool:
+        """Residency probe without LRU promotion or hit/miss accounting
+        (the planner's cost model asks, it doesn't read)."""
+        with self._lock:
+            return (key, col) in self._cols
+
+    def put(self, key: DeltaKey, col: str, arr: np.ndarray) -> None:
+        nb = int(arr.nbytes)
+        if nb > self.budget:
+            return  # larger than the whole pool: not cacheable
+        # own copy, marked read-only: (a) a caller mutating its cold-read
+        # array can never poison the pooled one, and (b) frombuffer views
+        # into a whole blob would otherwise pin the entire encoded blob
+        # while bytes_cached only counted the column
+        arr = np.array(arr, copy=True)
+        arr.flags.writeable = False
+        with self._lock:
+            k = (key, col)
+            old = self._cols.pop(k, None)
+            if old is not None:
+                self.bytes_cached -= old.nbytes
+            self._cols[k] = arr
+            self._by_key[key].add(col)
+            self.bytes_cached += nb
+            self.inserts += 1
+            while self.bytes_cached > self.budget and self._cols:
+                (ek, ecol), ea = self._cols.popitem(last=False)
+                self.bytes_cached -= ea.nbytes
+                cols = self._by_key.get(ek)
+                if cols is not None:
+                    cols.discard(ecol)
+                    if not cols:
+                        del self._by_key[ek]
+                        self._dirs.pop(ek, None)
+                self.evictions += 1
+
+    def dir_get(self, key: DeltaKey) -> Optional[List[serialize.ColumnMeta]]:
+        with self._lock:
+            return self._dirs.get(key)
+
+    def dir_put(self, key: DeltaKey, entries: List[serialize.ColumnMeta]) -> None:
+        with self._lock:
+            self._dirs[key] = entries
+            self._by_key.setdefault(key, set())
+
+    def invalidate(self, key: DeltaKey) -> None:
+        """Drop every pooled column (and the directory) of one key —
+        called by ``put``/``delete`` so ingest and GC can never leave
+        stale decoded blocks behind."""
+        with self._lock:
+            cols = self._by_key.pop(key, None)
+            self._dirs.pop(key, None)
+            if not cols:
+                return
+            for c in cols:
+                a = self._cols.pop((key, c), None)
+                if a is not None:
+                    self.bytes_cached -= a.nbytes
+            self.invalidations += 1
+
+    def clear(self) -> None:
+        with self._lock:
+            self._cols.clear()
+            self._dirs.clear()
+            self._by_key.clear()
+            self.bytes_cached = 0
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {
+                "budget_bytes": self.budget,
+                "bytes_cached": self.bytes_cached,
+                "entries": len(self._cols),
+                "keys": len(self._by_key),
+                "hits": self.hits,
+                "misses": self.misses,
+                "inserts": self.inserts,
+                "evictions": self.evictions,
+                "invalidations": self.invalidations,
+            }
 
 
 class DeltaStore:
     """m storage nodes, replication r, mem or file backend.  ``fmt``
     selects the on-disk block format ("TGI2" compressed columnar by
     default, "TGI1" raw); reads MAGIC-dispatch, so a store can read
-    blobs of either format regardless of its write format."""
+    blobs of either format regardless of its write format.
+
+    ``pool_bytes`` budgets the decoded-block buffer pool (0 disables);
+    ``seek`` selects range-seek reads on the file backend (extent
+    sidecars + per-column preads) vs whole-chunk-file slurps."""
 
     def __init__(self, m: int = 4, r: int = 1, backend: str = "mem",
-                 root: Optional[str] = None, fmt: Optional[str] = None):
+                 root: Optional[str] = None, fmt: Optional[str] = None,
+                 pool_bytes: int = DEFAULT_POOL_BYTES, seek: bool = True):
         assert 1 <= r <= m
         self.m, self.r = m, r
         self.backend = backend
         self.fmt = fmt or serialize.DEFAULT_FORMAT
+        self.seek = seek
+        self.pool: Optional[BlockPool] = (
+            BlockPool(pool_bytes) if pool_bytes else None)
         self.down: set = set()
         self.stats = StoreStats()
         # per-DeltaKey (raw, encoded) bytes of the last write — the
         # storage-accounting source for TGI.storage_report()
         self.key_sizes: Dict[DeltaKey, Tuple[int, int]] = {}
         self._lock = threading.Lock()
+        # file backend: per-(node, placement) extent tables, lazily
+        # loaded from the .tgx sidecars (or one legacy chunk scan)
+        self._ext_cache: Dict[Tuple[int, Tuple[int, int]],
+                              Dict[bytes, Tuple[int, int]]] = {}
         if backend == "mem":
             self._mem: List[Dict] = [dict() for _ in range(m)]
         else:
@@ -117,6 +296,75 @@ class DeltaStore:
         tsid, sid = placement
         return self.root / f"node{node}" / f"ts{tsid}_s{sid}.tgi"
 
+    def _extent_path(self, node: int, placement) -> Path:
+        tsid, sid = placement
+        return self.root / f"node{node}" / f"ts{tsid}_s{sid}.tgx"
+
+    def _ext_record(self, node: int, placement, rec_key: bytes,
+                    off: int, length: int) -> None:
+        """Append one (key -> blob offset, length) extent to the sidecar
+        and mirror it into the in-memory table.  A ``_TOMBSTONE`` length
+        marks deletion.  Caller holds ``self._lock``."""
+        with open(self._extent_path(node, placement), "ab") as f:
+            f.write(len(rec_key).to_bytes(4, "little"))
+            f.write(rec_key)
+            f.write(off.to_bytes(8, "little"))
+            f.write(length.to_bytes(8, "little"))
+        cache = self._ext_cache.get((node, placement))
+        if cache is not None:
+            if length == _TOMBSTONE:
+                cache.pop(rec_key, None)
+            else:
+                cache[rec_key] = (off, length)
+
+    def _extents(self, node: int, placement) -> Dict[bytes, Tuple[int, int]]:
+        """Extent table of one chunk: rec_key -> (blob offset, length),
+        last record wins.  Loaded once from the ``.tgx`` sidecar — or,
+        for a legacy chunk written without one, rebuilt by a single full
+        scan — then kept current inline by put/delete."""
+        ck = (node, placement)
+        with self._lock:
+            cache = self._ext_cache.get(ck)
+            if cache is not None:
+                return cache
+            cache = {}
+            epath = self._extent_path(node, placement)
+            cpath = self._chunk_path(node, placement)
+            if epath.exists():
+                data = epath.read_bytes()
+                self.stats.bytes_io += len(data)
+                off = 0
+                while off < len(data):
+                    klen = int.from_bytes(data[off : off + 4], "little")
+                    off += 4
+                    k = bytes(data[off : off + klen])
+                    off += klen
+                    boff = int.from_bytes(data[off : off + 8], "little")
+                    blen = int.from_bytes(data[off + 8 : off + 16], "little")
+                    off += 16
+                    if blen == _TOMBSTONE:
+                        cache.pop(k, None)
+                    else:
+                        cache[k] = (boff, blen)
+            elif cpath.exists():
+                data = cpath.read_bytes()
+                self.stats.bytes_io += len(data)
+                off = 0
+                while off < len(data):
+                    klen = int.from_bytes(data[off : off + 4], "little")
+                    off += 4
+                    k = bytes(data[off : off + klen])
+                    off += klen
+                    blen = int.from_bytes(data[off : off + 8], "little")
+                    off += 8
+                    if blen == _TOMBSTONE:
+                        cache.pop(k, None)
+                        continue
+                    cache[k] = (off, blen)
+                    off += blen
+            self._ext_cache[ck] = cache
+            return cache
+
     def put(self, key: DeltaKey, arrays: Dict[str, np.ndarray]):
         # eventlists ('E:*') are the replay hot path — dozens of blobs
         # per snapshot — so they encode under the latency-biased profile;
@@ -136,14 +384,26 @@ class DeltaStore:
                 # delta key (append-style record: key line + length + blob)
                 path = self._chunk_path(node, key.placement)
                 rec_key = f"{key.did}|{key.pid}".encode()
-                with self._lock, open(path, "ab") as f:
-                    f.write(len(rec_key).to_bytes(4, "little"))
-                    f.write(rec_key)
-                    f.write(len(blob).to_bytes(8, "little"))
-                    f.write(blob)
+                # chunk record + extent append under ONE lock hold, so
+                # concurrent puts of a key can't leave the sidecar
+                # pointing at a superseded blob.  Sidecars are written
+                # regardless of this store's read mode so a later
+                # seek=True open of the same root sees a complete
+                # extent history.
+                with self._lock:
+                    with open(path, "ab") as f:
+                        base = f.tell()
+                        f.write(len(rec_key).to_bytes(4, "little"))
+                        f.write(rec_key)
+                        f.write(len(blob).to_bytes(8, "little"))
+                        f.write(blob)
+                    self._ext_record(node, key.placement, rec_key,
+                                     base + 4 + len(rec_key) + 8, len(blob))
             wrote = True
         if not wrote:
             raise StorageNodeDown(f"all replicas down for {key}")
+        if self.pool is not None:  # a rewrite must never serve stale blocks
+            self.pool.invalidate(key)
         with self._lock:
             self.stats.writes += 1
             self.stats.bytes_written += len(blob) * self.r
@@ -161,6 +421,8 @@ class DeltaStore:
         want = f"{key.did}|{key.pid}".encode()
         with open(path, "rb") as f:
             data = f.read()
+        with self._lock:  # the whole-file slurp: every byte of the chunk
+            self.stats.bytes_io += len(data)
         off = 0
         found = None
         while off < len(data):
@@ -198,10 +460,15 @@ class DeltaStore:
                 if not path.exists():
                     continue
                 rec_key = f"{key.did}|{key.pid}".encode()
-                with self._lock, open(path, "ab") as f:
-                    f.write(len(rec_key).to_bytes(4, "little"))
-                    f.write(rec_key)
-                    f.write(_TOMBSTONE.to_bytes(8, "little"))
+                with self._lock:
+                    with open(path, "ab") as f:
+                        f.write(len(rec_key).to_bytes(4, "little"))
+                        f.write(rec_key)
+                        f.write(_TOMBSTONE.to_bytes(8, "little"))
+                    self._ext_record(node, key.placement, rec_key,
+                                     0, _TOMBSTONE)
+        if self.pool is not None:  # GC'd blocks must never be served
+            self.pool.invalidate(key)
         with self._lock:
             sizes = self.key_sizes.pop(key, None)
             if sizes is None:
@@ -216,17 +483,132 @@ class DeltaStore:
         with self._lock:
             return sum(enc for _, enc in self.key_sizes.values()) * self.r
 
+    def _pool_dir_fill(self, key: DeltaKey, blob: bytes) -> None:
+        if self.pool is not None and self.pool.dir_get(key) is None:
+            self.pool.dir_put(key, serialize.walk(blob))
+
+    def _read_columns(self, node: int, key: DeltaKey,
+                      fields: Optional[Tuple[str, ...]],
+                      ) -> Tuple[Dict[str, np.ndarray], int, int]:
+        """Physically read + decode the requested columns from one
+        replica; returns ``(arrays, enc_read, raw_read)`` and caches the
+        block directory in the pool."""
+        if self.backend == "file" and self.seek:
+            return self._read_columns_seek(node, key, fields)
+        blob = self._read_node(node, key)
+        arrays, enc_read, raw_read = serialize.loads_sized(blob, fields=fields)
+        self._pool_dir_fill(key, blob)
+        return arrays, enc_read, raw_read
+
+    # prefix read size for range-seek blob reads: one pread that covers
+    # the whole TGI2 directory for any realistic column count (~40 bytes
+    # per entry), grown geometrically for the rare block that overflows
+    _DIR_PREFIX = 4096
+
+    def _read_columns_seek(self, node: int, key: DeltaKey,
+                           fields: Optional[Tuple[str, ...]],
+                           ) -> Tuple[Dict[str, np.ndarray], int, int]:
+        """Range-seek read: extent lookup -> directory prefix pread ->
+        one pread per requested column.  Unrequested columns cost zero
+        file bytes (``stats.bytes_io`` counts exactly what was read)."""
+        path = self._chunk_path(node, key.placement)
+        ext = self._extents(node, key.placement)
+        rec = ext.get(f"{key.did}|{key.pid}".encode())
+        if rec is None:
+            raise KeyMissing(key)
+        off, blen = rec
+        io_bytes = 0
+        with open(path, "rb") as f:
+            f.seek(off)
+            prefix = f.read(min(blen, self._DIR_PREFIX))
+            io_bytes += len(prefix)
+            if bytes(prefix[:4]) == serialize.MAGIC:
+                # TGI1 interleaves headers with payloads: no seekable
+                # directory — fall back to reading this blob in full
+                blob = prefix + f.read(blen - len(prefix))
+                io_bytes += max(blen - len(prefix), 0)
+                arrays, enc_read, raw_read = serialize.loads_sized(
+                    blob, fields=fields)
+                self._pool_dir_fill(key, blob)
+                with self._lock:
+                    self.stats.bytes_io += io_bytes
+                return arrays, enc_read, raw_read
+            entries = serialize.parse_directory(prefix)
+            while entries is None and len(prefix) < blen:
+                more = f.read(min(blen - len(prefix), len(prefix)))
+                if not more:
+                    break
+                prefix += more
+                io_bytes += len(more)
+                entries = serialize.parse_directory(prefix)
+            if entries is None:
+                raise BlockCorruption(f"truncated TGI2 directory for {key}")
+            if self.pool is not None and self.pool.dir_get(key) is None:
+                self.pool.dir_put(key, entries)
+            want = None if fields is None else set(fields)
+            arrays: Dict[str, np.ndarray] = {}
+            enc_read, raw_read = 8, 0
+            view = memoryview(prefix)
+            for e in entries:
+                if want is not None and e.name not in want:
+                    continue
+                if e.off + e.length <= len(prefix):
+                    payload = view[e.off : e.off + e.length]
+                else:
+                    f.seek(off + e.off)
+                    payload = f.read(e.length)
+                    io_bytes += e.length
+                arrays[e.name] = serialize.decode_entry(e, payload)
+                enc_read += e.length
+                raw_read += arrays[e.name].nbytes
+        with self._lock:
+            self.stats.bytes_io += io_bytes
+        return arrays, enc_read, raw_read
+
     def get(self, key: DeltaKey,
             fields: Optional[Iterable[str]] = None,
-            sizes: Optional[Dict[DeltaKey, Tuple[int, int]]] = None,
+            sizes: Optional[Dict[DeltaKey, "ReadSizes"]] = None,
             ) -> Dict[str, np.ndarray]:
         """Read one micro-delta.  ``fields`` projects the read to the named
         arrays: unrequested columns are seeked over via the block directory
-        (never decompressed or materialized) and only the projected bytes
-        count toward ``stats.bytes_read`` (the storage end of the
-        planner's projection pushdown).  ``sizes``, if given, is filled
-        with this key's ``(encoded_read, raw_decompressed)`` byte counts
-        — the FetchCost accounting side-channel."""
+        (never decompressed or materialized — and on the range-seek file
+        backend never even read off disk); only the projected bytes count
+        toward ``stats.bytes_read`` (the storage end of the planner's
+        projection pushdown).
+
+        Columns resident in the decoded-block pool are served from it:
+        no storage I/O, no decode, no checksum pass.  ``sizes``, if
+        given, is filled with this key's ``ReadSizes`` — the physical
+        (enc, raw) bytes vs the pool-served bytes, the FetchCost
+        accounting side-channel (pool hits are never reported as
+        physical decodes)."""
+        want = None if fields is None else tuple(fields)
+        pooled: Dict[str, np.ndarray] = {}
+        pool_raw = 0
+        need = want
+        if self.pool is not None:
+            entries = self.pool.dir_get(key)
+            if entries is not None:
+                wset = None if want is None else set(want)
+                targets = [e.name for e in entries
+                           if wset is None or e.name in wset]
+                missing = []
+                for n in targets:
+                    a = self.pool.get(key, n)
+                    if a is None:
+                        missing.append(n)
+                    else:
+                        pooled[n] = a
+                        pool_raw += a.nbytes
+                if not missing:  # fully pooled: zero backend touches
+                    with self._lock:
+                        self.stats.reads += 1
+                        self.stats.pool_hits += len(pooled)
+                        self.stats.bytes_pool_served += pool_raw
+                    if sizes is not None:
+                        sizes[key] = ReadSizes(0, 0, pool_raw, len(pooled))
+                    return dict(pooled)
+                need = tuple(missing)
         last_err: Exception = KeyMissing(key)
         for j, node in enumerate(self.replicas(key)):
             if node in self.down:
@@ -234,28 +616,65 @@ class DeltaStore:
                     self.stats.failovers += j > 0 or self.r == 1
                 continue
             try:
-                blob = self._read_node(node, key)
+                arrays, enc_read, raw_read = self._read_columns(node, key, need)
             except KeyMissing as e:
                 last_err = e
                 continue
-            arrays, enc_read, raw_read = serialize.loads_sized(blob, fields=fields)
+            except BlockCorruption as e:
+                # a corrupt replica is as dead as a down one: fail over
+                # to the next copy (the error surfaces only when every
+                # replica is corrupt or missing)
+                last_err = e
+                with self._lock:
+                    self.stats.failovers += 1
+                continue
             with self._lock:
                 self.stats.reads += 1
                 self.stats.bytes_read += enc_read
                 self.stats.bytes_decompressed += raw_read
+                if self.pool is not None:
+                    self.stats.pool_hits += len(pooled)
+                    self.stats.pool_misses += len(arrays)
+                    self.stats.bytes_pool_served += pool_raw
                 if j > 0:
                     self.stats.failovers += 1
+            if self.pool is not None:
+                for n, a in arrays.items():
+                    self.pool.put(key, n, a)
             if sizes is not None:
-                sizes[key] = (enc_read, raw_read)
+                sizes[key] = ReadSizes(enc_read, raw_read, pool_raw, len(pooled))
+            if pooled:
+                arrays = {**pooled, **arrays}
             return arrays
-        if isinstance(last_err, KeyMissing):
+        if isinstance(last_err, (KeyMissing, BlockCorruption)):
             raise last_err
         raise StorageNodeDown(f"no live replica for {key}")
+
+    def clear_pool(self) -> None:
+        """Drop every decoded block (``TGI.invalidate_caches()`` full
+        path and cold-read benchmarking)."""
+        if self.pool is not None:
+            self.pool.clear()
+
+    def pool_stats(self) -> Dict[str, int]:
+        return self.pool.stats() if self.pool is not None else {}
+
+    def pool_residency(self, key: DeltaKey) -> float:
+        """Fraction of ``key``'s columns currently pooled (0.0 when the
+        key has never been read) — the planner's pool-awareness hook for
+        discounting warm blocks in fetch-cost estimates."""
+        if self.pool is None:
+            return 0.0
+        entries = self.pool.dir_get(key)
+        if not entries:
+            return 0.0
+        present = sum(1 for e in entries if self.pool.peek(key, e.name))
+        return present / len(entries)
 
     def multiget(self, keys: Iterable[DeltaKey], c: int = 1,
                  fields: Optional[Iterable[str]] = None,
                  missing_ok: bool = False,
-                 sizes: Optional[Dict[DeltaKey, Tuple[int, int]]] = None,
+                 sizes: Optional[Dict[DeltaKey, "ReadSizes"]] = None,
                  ) -> Dict[DeltaKey, Dict]:
         """Parallel fetch with c clients (paper Fig. 11/12's c parameter).
         Keys are routed per storage node so each client drains distinct

@@ -39,6 +39,13 @@ buy roughly an order of magnitude before displacing raw.  The codecs
 are numpy-vectorized (no per-value Python on either hot path);
 ``loads_sized`` additionally reports (encoded bytes touched, raw bytes
 materialized) so the kvstore/FetchCost layers can account compression.
+
+Every TGI2 directory entry carries a crc32 of its encoded payload,
+verified on decode (``BlockCorruption`` on mismatch), and the absolute
+payload offsets make the directory a *range map*: ``parse_directory``
+parses it from a byte prefix and ``decode_entry`` decodes one column
+from its own payload bytes — the kvstore's range-seek file backend and
+decoded-block buffer pool are built on these two hooks.
 """
 from __future__ import annotations
 
@@ -46,13 +53,17 @@ import io
 import math
 import struct
 import zlib
-from typing import Dict, Iterable, Optional, Tuple
+from typing import Dict, Iterable, List, NamedTuple, Optional, Tuple
 
 import numpy as np
 
 MAGIC = b"TGI1"
 MAGIC2 = b"TGI2"
 DEFAULT_FORMAT = "TGI2"
+# high bit of the TGI2 column-count word: directory entries carry a
+# trailing u32 crc32 (the pre-checksum layout has the bit clear, and
+# its 17-byte entry tail keeps loading — no rewrite needed)
+DIR_HAS_CRC = 0x80000000
 ZLIB_LEVEL = 6
 RAW_KEEP_BYTES = 128  # columns at or below this stay raw (decode-latency floor)
 DICT_MAX_ELEMS = 1 << 16  # skip np.unique-based dict probing above this
@@ -97,6 +108,29 @@ ENC_WEIGHTS = {
 _VARINTABLE = {np.dtype(np.int8), np.dtype(np.int16), np.dtype(np.int32),
                np.dtype(np.int64), np.dtype(np.uint8), np.dtype(np.uint16),
                np.dtype(np.uint32)}
+
+
+class BlockCorruption(RuntimeError):
+    """A stored column failed its crc32 check: the payload bytes on
+    storage do not match what the writer recorded.  Raised *before* any
+    decode, so corruption surfaces as a clear error instead of silently
+    mis-decoded arrays."""
+
+
+class ColumnMeta(NamedTuple):
+    """One directory entry: everything needed to locate, verify, and
+    decode a single column without touching the rest of the block.
+    ``off``/``length`` are byte positions relative to the block start;
+    ``crc`` is the crc32 of the *encoded* payload (None for TGI1 blocks,
+    which predate checksums)."""
+
+    name: str
+    dtype: np.dtype
+    shape: Tuple[int, ...]
+    enc: int
+    off: int
+    length: int
+    crc: Optional[int]
 
 
 # ---------------------------------------------------------------------------
@@ -392,17 +426,18 @@ def _dumps_v2(arrays: Dict[str, np.ndarray], profile: str = "size") -> bytes:
         enc, payload = _encode_column(arr, profile)
         nb = name.encode()
         cols.append((nb, arr, enc, payload))
-        dir_len += 2 + len(nb) + 2 + 8 * arr.ndim + 17
+        dir_len += 2 + len(nb) + 2 + 8 * arr.ndim + 21
     buf = io.BytesIO()
     buf.write(MAGIC2)
-    buf.write(struct.pack("<I", len(cols)))
+    buf.write(struct.pack("<I", len(cols) | DIR_HAS_CRC))
     off = dir_len
     for nb, arr, enc, payload in cols:  # directory, absolute payload offsets
         buf.write(struct.pack("<H", len(nb)))
         buf.write(nb)
         buf.write(struct.pack("<BB", _DT_CODE[np.dtype(arr.dtype)], arr.ndim))
         buf.write(struct.pack(f"<{arr.ndim}q", *arr.shape))
-        buf.write(struct.pack("<BQQ", enc, len(payload), off))
+        buf.write(struct.pack("<BQQI", enc, len(payload), off,
+                              zlib.crc32(payload) & 0xFFFFFFFF))
         off += len(payload)
     for _, _, _, payload in cols:  # payloads, directory order
         buf.write(payload)
@@ -427,10 +462,13 @@ def dumps(arrays: Dict[str, np.ndarray], fmt: Optional[str] = None,
 # ---------------------------------------------------------------------------
 
 
-def _walk_v1(buf):
-    """Yield (name, dt, shape, payload_off, payload_len) per TGI1 column."""
+def _walk_v1(buf) -> List[ColumnMeta]:
+    """TGI1 directory: headers interleave with payloads, so this is pure
+    shape arithmetic over the whole blob.  Every column reads as ENC_RAW
+    with no checksum (the format predates them)."""
     (n,) = struct.unpack_from("<I", buf, 4)
     off = 8
+    out = []
     for _ in range(n):
         (ln,) = struct.unpack_from("<H", buf, off)
         off += 2
@@ -442,29 +480,79 @@ def _walk_v1(buf):
         off += 8 * ndim
         dt = _CODE_DT[code]
         nbytes = math.prod(shape) * dt.itemsize
-        yield name, dt, shape, off, nbytes
+        out.append(ColumnMeta(name, dt, tuple(shape), ENC_RAW, off, nbytes, None))
         off += nbytes
+    return out
 
 
-def _walk_v2(buf):
-    """Parse the TGI2 directory: a list of
-    (name, dt, shape, enc, payload_off, payload_len), one per column.
-    A plain function (not a generator) — it runs per stored blob on the
-    hot retrieval path, and this is the ONE implementation of the
-    directory byte layout (loads_sized and block_info both use it)."""
-    (n,) = struct.unpack_from("<I", buf, 4)
+def parse_directory(prefix) -> Optional[List[ColumnMeta]]:
+    """Parse a TGI2 directory from a byte *prefix* of the block.
+
+    Returns the column list, or None when the prefix is too short to
+    hold the whole directory — the range-seek backend reads a small
+    prefix first, and grows it only for the rare block whose directory
+    overflows it.  Raises on a non-TGI2 magic (the caller dispatches
+    TGI1 blobs to a full read first)."""
+    buf = memoryview(prefix)
+    if len(buf) < 8:
+        return None
+    if bytes(buf[:4]) != MAGIC2:
+        raise ValueError("not a TGI2 block")
+    (raw_n,) = struct.unpack_from("<I", buf, 4)
+    has_crc = bool(raw_n & DIR_HAS_CRC)
+    n = raw_n & ~DIR_HAS_CRC
+    tail = 21 if has_crc else 17  # enc + len + off (+ crc32)
     off = 8
     out = []
     for _ in range(n):
+        if off + 4 > len(buf):
+            return None
         (ln,) = struct.unpack_from("<H", buf, off)
+        if off + 2 + ln + 2 > len(buf):
+            return None
         name = bytes(buf[off + 2 : off + 2 + ln]).decode()
         off += 2 + ln
         code, ndim = struct.unpack_from("<BB", buf, off)
+        if off + 2 + 8 * ndim + tail > len(buf):
+            return None
         shape = struct.unpack_from(f"<{ndim}q", buf, off + 2)
-        enc, plen, poff = struct.unpack_from("<BQQ", buf, off + 2 + 8 * ndim)
-        off += 19 + 8 * ndim
-        out.append((name, _CODE_DT[code], shape, enc, poff, plen))
+        if has_crc:
+            enc, plen, poff, crc = struct.unpack_from(
+                "<BQQI", buf, off + 2 + 8 * ndim)
+        else:  # pre-checksum directory layout: no crc to verify
+            enc, plen, poff = struct.unpack_from("<BQQ", buf, off + 2 + 8 * ndim)
+            crc = None
+        off += 2 + 8 * ndim + tail
+        out.append(ColumnMeta(name, _CODE_DT[code], tuple(shape), enc,
+                              poff, plen, crc))
     return out
+
+
+def walk(data) -> List[ColumnMeta]:
+    """Directory of a complete block, MAGIC-dispatched (TGI1 or TGI2).
+    The ONE implementation of both directory byte layouts — loads_sized,
+    block_info, and the kvstore read paths all go through it."""
+    buf = memoryview(data)
+    magic = bytes(buf[:4])
+    if magic == MAGIC:
+        return _walk_v1(buf)
+    if magic == MAGIC2:
+        out = parse_directory(buf)
+        assert out is not None, "bad TGI2 block (truncated directory)"
+        return out
+    raise AssertionError("bad TGI block (unknown MAGIC)")
+
+
+def decode_entry(meta: ColumnMeta, payload) -> np.ndarray:
+    """Decode one column from its encoded payload bytes, verifying the
+    directory's crc32 first (TGI2): corruption raises ``BlockCorruption``
+    *before* any decode instead of silently mis-decoding."""
+    if meta.crc is not None and zlib.crc32(payload) & 0xFFFFFFFF != meta.crc:
+        raise BlockCorruption(
+            f"column {meta.name!r}: payload crc32 mismatch "
+            f"(stored {meta.crc:#010x}, computed "
+            f"{zlib.crc32(payload) & 0xFFFFFFFF:#010x})")
+    return _decode_column(meta.enc, payload, meta.shape, meta.dtype)
 
 
 def loads_sized(data: bytes, fields: Optional[Iterable[str]] = None,
@@ -476,33 +564,19 @@ def loads_sized(data: bytes, fields: Optional[Iterable[str]] = None,
     arithmetic (TGI1), never decompressed or copied.  ``encoded_read``
     counts header + the projected columns' stored bytes (what actually
     crossed storage); ``raw_read`` counts the materialized bytes (the
-    FetchCost bytes-decompressed dimension)."""
+    FetchCost bytes-decompressed dimension).  TGI2 payload checksums are
+    verified on every decode (``BlockCorruption`` on mismatch)."""
     buf = memoryview(data)
-    magic = bytes(buf[:4])
     want = None if fields is None else set(fields)
     out: Dict[str, np.ndarray] = {}
-    enc_read = raw_read = 0
-    if magic == MAGIC:
-        for name, dt, shape, off, nbytes in _walk_v1(buf):
-            if want is None or name in want:
-                count = math.prod(shape)
-                out[name] = np.frombuffer(
-                    buf, dtype=dt, count=count, offset=off).reshape(shape)
-                enc_read += nbytes
-                raw_read += nbytes
-        enc_read += 8  # MAGIC + count (per-column headers are ~free)
-    elif magic == MAGIC2:
-        # absolute payload offsets in the directory let unwanted columns
-        # be seeked over without decoding
-        for name, dt, shape, enc, poff, plen in _walk_v2(buf):
-            if want is None or name in want:
-                out[name] = _decode_column(enc, buf[poff : poff + plen],
-                                           shape, dt)
-                enc_read += plen
-                raw_read += out[name].nbytes
-        enc_read += 8
-    else:
-        raise AssertionError("bad TGI block (unknown MAGIC)")
+    enc_read = 8  # MAGIC + count (per-column headers are ~free)
+    raw_read = 0
+    for meta in walk(buf):
+        if want is None or meta.name in want:
+            out[meta.name] = decode_entry(
+                meta, buf[meta.off : meta.off + meta.length])
+            enc_read += meta.length
+            raw_read += out[meta.name].nbytes
     return out, enc_read, raw_read
 
 
@@ -514,21 +588,13 @@ def loads(data: bytes, fields: Optional[Iterable[str]] = None) -> Dict[str, np.n
 
 def block_info(data: bytes) -> Dict[str, Dict]:
     """Per-column metadata of a stored block (no payload decode):
-    ``{name: {dtype, shape, encoding, stored_bytes, raw_bytes}}``."""
-    buf = memoryview(data)
-    magic = bytes(buf[:4])
+    ``{name: {dtype, shape, encoding, stored_bytes, raw_bytes, crc}}``."""
     info: Dict[str, Dict] = {}
-    if magic == MAGIC:
-        for name, dt, shape, _off, nbytes in _walk_v1(buf):
-            info[name] = {"dtype": str(dt), "shape": tuple(shape),
-                          "encoding": "raw", "stored_bytes": nbytes,
-                          "raw_bytes": nbytes}
-    elif magic == MAGIC2:
-        for name, dt, shape, enc, _off, plen in _walk_v2(buf):
-            count = math.prod(shape)
-            info[name] = {"dtype": str(dt), "shape": tuple(shape),
-                          "encoding": ENC_NAME[enc], "stored_bytes": plen,
-                          "raw_bytes": count * dt.itemsize}
-    else:
-        raise AssertionError("bad TGI block (unknown MAGIC)")
+    for meta in walk(data):
+        info[meta.name] = {
+            "dtype": str(meta.dtype), "shape": tuple(meta.shape),
+            "encoding": ENC_NAME[meta.enc], "stored_bytes": meta.length,
+            "raw_bytes": math.prod(meta.shape) * meta.dtype.itemsize,
+            "crc": meta.crc,
+        }
     return info

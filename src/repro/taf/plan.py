@@ -30,10 +30,19 @@ sorted-event pass over the operand serves every timepoint.  The executor
 additionally keeps a small LRU of replayed timeslices keyed on
 (operand identity, timepoints), so repeated slices of one operand cost
 one replay total.
+
+Plan selection is cost-based at run time: the Fetch stage re-decides
+partition pruning against the TGI's byte estimates (real stored sizes
+discounted by decoded-block-pool residency) and the snapshot LRU, and a
+cross-plan fetch cache shares one fetched operand between plans over
+the same interval/pushdowns (invalidated by ``TGI.read_epoch`` bumps).
+``PlanResult.notes`` records every runtime decision.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import weakref
 from typing import Any, Callable, Optional, Tuple
 
 import numpy as np
@@ -209,6 +218,9 @@ class PlanResult:
     cost: FetchCost
     operand: Optional[SoN]
     plan: Plan
+    # runtime plan-selection decisions (cost-based fetch choices, fetch-
+    # cache hits) — what ``explain()`` could not know at compile time
+    notes: Tuple[str, ...] = ()
 
 
 # ---------------------------------------------------------------------------
@@ -217,26 +229,42 @@ class PlanResult:
 
 
 class PlanExecutor:
-    """Runs a Plan: one fetch (pushdowns applied), then vectorized host
-    operators or shard_map device kernels over the operand."""
+    """Runs a Plan: one fetch (pushdowns applied + runtime cost-based
+    source selection), then vectorized host operators or shard_map
+    device kernels over the operand."""
 
     # shared across executors: TemporalQuery.run() builds a fresh
     # executor per plan, but repeated slices of one materialized operand
     # should still hit the cache
     _replay_cache = replay.ReplayCache(maxsize=32)
 
+    # cross-plan fetch sharing: plans over the same (tgi, interval,
+    # pushdowns) reuse one fetched operand — multi-timepoint plans that
+    # hit the same (span, leaf) groups pay one fetch total (finer
+    # cross-plan sharing, different t in the same span, is the decoded-
+    # block pool's job one layer down).  Entries key on TGI.read_epoch,
+    # so any ingest/compaction invalidates them; the weakref guards
+    # against id() recycling.  Logical FetchCost is replayed on hits.
+    FETCH_CACHE_MAX = 8
+    _fetch_cache: "collections.OrderedDict" = collections.OrderedDict()
+
     def __init__(self, tgi=None):
         self.tgi = tgi
+
+    @classmethod
+    def clear_fetch_cache(cls) -> None:
+        cls._fetch_cache.clear()
 
     def run(self, plan: Plan) -> PlanResult:
         plan.validate()
         operand: Optional[SoN] = None
         value: Any = None
         cost = FetchCost()
+        notes: Tuple[str, ...] = ()
         for stage in plan.stages:
             k = stage.kind
             if k == "fetch":
-                operand, cost = self._fetch(stage)
+                operand, cost, notes = self._fetch(stage)
                 value = operand
             elif k == "materialize":
                 operand = stage.operand
@@ -255,7 +283,8 @@ class PlanExecutor:
                 value = self._aggregate(value, stage.op)
             else:  # pragma: no cover
                 raise ValueError(f"unknown stage kind {k!r}")
-        return PlanResult(value=value, cost=cost, operand=operand, plan=plan)
+        return PlanResult(value=value, cost=cost, operand=operand, plan=plan,
+                          notes=notes)
 
     # ---- stage implementations ----
 
@@ -276,14 +305,45 @@ class PlanExecutor:
         return {k: (v.copy() if isinstance(v, np.ndarray) else v)
                 for k, v in hit.items()}
 
-    def _fetch(self, stage: Fetch) -> Tuple[SoN, FetchCost]:
+    def _fetch(self, stage: Fetch) -> Tuple[SoN, FetchCost, Tuple[str, ...]]:
         if self.tgi is None:
             raise ValueError("Fetch stage requires a TGI-backed executor")
         node_ids = None
         pids = None
+        notes = []
         if stage.node_ids is not None:
             node_ids = np.unique(np.asarray(stage.node_ids, np.int32))
             pids = self.tgi.pids_for_nodes(node_ids, stage.t0)
+            # cost-based source selection: compile-time pushdown said
+            # "prune", but runtime state can beat it —
+            # (a) the selection covers every partition: pruning buys
+            #     nothing and costs the eventlist re-filter;
+            # (b) a warm full snapshot sits in the snapshot LRU and the
+            #     pruned keys are mostly cold (pool-discounted byte
+            #     estimate): the LRU hit costs zero storage bytes while
+            #     the pruned read would pay real decodes.
+            if len(pids) >= self.tgi.cfg.n_parts:
+                pids = None
+                notes.append("fetch: pruned->full (selection covers "
+                             "every partition)")
+            elif self.tgi.has_cached_snapshot(stage.t0, stage.projection,
+                                              stage.c):
+                est = self.tgi.estimate_fetch_cost(stage.t0, pids)
+                if est["physical_raw_bytes"] > 0.5 * max(est["raw_bytes"], 1):
+                    pids = None
+                    notes.append(
+                        "fetch: pruned->full (warm snapshot LRU beats a "
+                        f"mostly-cold pruned read of "
+                        f"~{int(est['physical_raw_bytes'])}B)")
+        ck = (id(self.tgi), self.tgi.read_epoch, stage.t0, stage.t1,
+              stage.subgraph, stage.node_ids, stage.projection, stage.c,
+              None if pids is None else tuple(pids))
+        hit = self._fetch_cache.get(ck)
+        if hit is not None and hit[0]() is self.tgi:
+            self._fetch_cache.move_to_end(ck)
+            notes.append("fetch: shared across plans (fetch-cache hit, "
+                         "logical cost replayed)")
+            return hit[1], hit[2].copy(), tuple(notes)
         build = build_sots if stage.subgraph else build_son
         with self.tgi.cost_scope() as acc:
             operand = build(self.tgi, stage.t0, stage.t1, node_ids=node_ids,
@@ -293,7 +353,10 @@ class PlanExecutor:
             # universe is the t0 snapshot, so drop requested ids that are
             # not alive at t0 (build_son materializes them regardless)
             operand = operand.subset(np.nonzero(operand.init_present == 1)[0])
-        return operand, acc
+        self._fetch_cache[ck] = (weakref.ref(self.tgi), operand, acc.copy())
+        while len(self._fetch_cache) > self.FETCH_CACHE_MAX:
+            self._fetch_cache.popitem(last=False)
+        return operand, acc, tuple(notes)
 
     def _compute(self, son: SoN, stage: Compute) -> Any:
         if stage.style == "static":

@@ -146,10 +146,31 @@ class HistoricalGraphStore:
         return out
 
     def k_hop(self, nid: int, t: int, k: int, c: int = 1, method: str = "auto"):
+        """Algorithms 3/4.  ``method="auto"`` is cost-based: it compares
+        the physical raw bytes a full-snapshot fetch vs an expanding
+        partition fetch would decode (real stored sizes, discounted by
+        decoded-block-pool residency) — see ``explain_k_hop``."""
         with self.tgi.cost_scope() as acc:
             g = self.tgi.get_k_hop(nid, t, k, c=c, method=method)
         self.last_cost = acc
         return g
+
+    def explain_k_hop(self, nid: int, t: int, k: int) -> dict:
+        """The byte estimates behind ``k_hop(method="auto")``."""
+        return self.tgi.explain_k_hop(nid, t, k)
+
+    def cache_stats(self) -> dict:
+        """Caching-layers overview (see docs/api.md): the snapshot LRU
+        (whole reconstructed snapshots), the plan-layer fetch cache
+        (operands shared across plans), the executor's replay cache
+        (timeslices of one operand), and the storage-layer decoded-block
+        pool (columns shared across everything above)."""
+        return {
+            "snapshot_lru_entries": len(self.tgi._snap_cache),
+            "fetch_cache_entries": len(PlanExecutor._fetch_cache),
+            "replay_cache_entries": len(PlanExecutor._replay_cache),
+            "block_pool": self.store.pool_stats(),
+        }
 
     def node_1hop_history(self, nid: int, t0: int, t1: int, c: int = 1):
         with self.tgi.cost_scope() as acc:

@@ -377,3 +377,6 @@ class ReplayCache:
 
     def clear(self) -> None:
         self._d.clear()
+
+    def __len__(self) -> int:
+        return len(self._d)

@@ -176,10 +176,20 @@ def test_kvstore_tracks_raw_vs_encoded_and_decompressed():
     store.stats.reset()
     sizes = {}
     store.get(key, sizes=sizes)
-    enc_read, raw_read = sizes[key]
+    enc_read, raw_read, pool_read, pool_cols = sizes[key]
     assert raw_read == raw
+    assert (pool_read, pool_cols) == (0, 0)  # cold read: nothing pooled
     assert store.stats.bytes_decompressed == raw
     assert store.stats.bytes_read == enc_read <= enc + 16
+    # second read: served from the decoded-block pool — zero physical
+    # decode, the raw bytes move to the pool bucket
+    sizes2 = {}
+    store.get(key, sizes=sizes2)
+    enc2, raw2, pool2, cols2 = sizes2[key]
+    assert (enc2, raw2) == (0, 0)
+    assert pool2 == raw and cols2 == len(arrays)
+    assert store.stats.bytes_decompressed == raw  # unchanged: no new decode
+    assert store.stats.bytes_pool_served == raw
 
 
 def test_mixed_format_store_reads_both():
