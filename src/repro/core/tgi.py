@@ -1086,6 +1086,11 @@ class TGI:
                 "count": count_total,
                 "ratio": (enc_total / raw_total) if raw_total else 1.0,
             },
+            # per-node health and live-data placement — the same shape
+            # whether the store is the in-process DeltaStore or a
+            # RemoteDeltaStore over storage cells, so chaos tests assert
+            # cluster health through one report
+            "nodes": self.store.node_status(),
         }
 
 

@@ -1,0 +1,14 @@
+"""Temporal graph service plane: ``DeltaStore`` promoted to a served
+system.  A ``StorageCell`` owns one storage node's chunk/extent files
+and serves them over a length-prefixed binary wire protocol
+(``wire``); ``RemoteDeltaStore`` is a drop-in ``DeltaStore`` whose
+nodes are cells reached over sockets — TGI, the PlanExecutor fetch
+stage, and the decoded-block pool run unchanged on top of it.  An
+append-only change feed per cell (``feed_since``) drives replica
+catch-up after a crash.  ``LocalCluster`` spins up N cells x r
+replicas in threads or subprocesses for tests, benches, and docs."""
+from repro.service.cell import StorageCell
+from repro.service.client import RemoteDeltaStore
+from repro.service.cluster import ClusterSpec, LocalCluster
+
+__all__ = ["StorageCell", "RemoteDeltaStore", "ClusterSpec", "LocalCluster"]

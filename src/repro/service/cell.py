@@ -1,0 +1,360 @@
+"""StorageCell: one storage node served over the wire protocol.
+
+A cell owns one node's chunk/extent files through a private
+single-node ``DeltaStore`` (m=1, r=1, no decoded-block pool — decoding
+is the *client's* job; the cell ships encoded columns verbatim via
+``get_encoded``/``assemble_block``, so a projected GET costs the cell
+only the projected columns' file bytes).
+
+Writes are change-feed records: the client stamps every ``put``/
+``delete`` with a globally monotonic ``seq`` and fans it out to the
+key's replica cells.  Each cell appends applied records to an
+append-only ``feed.log`` (and an in-memory tail) — the cell's entire
+write history in arrival order.  Because the client serializes writes
+(one fan-out at a time), arrival order IS seq order, which makes a
+cell's chunk/extent/feed files a pure function of its record set: a
+killed-and-restarted cell that replays the records it missed via
+``feed_since(last_seq)`` from its peers, in seq order, converges to
+byte-identical files.  Duplicate deliveries (client retries, catch-up
+racing a live write) are dropped by seq: a record is applied iff
+``seq > boot_last_seq`` and it has not been applied since boot.
+
+The server is a plain threaded accept loop — one thread per
+connection, blocking frame reads, every reply framed under
+``wire.PROTO_VERSION`` (a mismatched client gets ERR "VERSION" and the
+connection closed).  Run one per process via ``python -m
+repro.service.cell`` (prints ``CELL READY node=<i> port=<p>`` for the
+cluster harness) or in-process via ``LocalCluster(mode="thread")``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import signal
+import socket
+import struct
+import sys
+import threading
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+from repro.service import wire
+from repro.storage.kvstore import (DeltaStore, KeyMissing, replica_nodes)
+
+
+class StorageCell:
+    def __init__(self, node_id: int, n_cells: int, r: int,
+                 backend: str = "file", root: Optional[str] = None,
+                 fmt: Optional[str] = None, host: str = "127.0.0.1",
+                 port: int = 0):
+        assert backend in ("mem", "file")
+        self.node_id = node_id
+        self.n_cells = n_cells
+        self.r = r
+        self.host = host
+        self.port = port  # 0 -> ephemeral; real port known after start()
+        self.root = Path(root) if root is not None else None
+        if backend == "file":
+            assert root is not None
+            self.root.mkdir(parents=True, exist_ok=True)
+        self.store = DeltaStore(m=1, r=1, backend=backend, root=root,
+                                fmt=fmt, pool_bytes=0, seek=True)
+        # change feed: full in-memory tail + append-only feed.log (file
+        # backend).  _flock serializes apply+append so the log can never
+        # disagree with the store.
+        self._feed: List[wire.FeedRecord] = []
+        self._flock = threading.Lock()
+        self._applied: set = set()  # seqs applied since boot (dedupe)
+        self.last_seq = 0
+        self.boot_last_seq = 0
+        self._load_feed()
+        self._lsock: Optional[socket.socket] = None
+        self._stop = threading.Event()
+        self._threads: List[threading.Thread] = []
+        self._conns: set = set()
+
+    # ---- feed persistence ----
+    def _feed_path(self) -> Optional[Path]:
+        return None if self.root is None else self.root / "feed.log"
+
+    def _load_feed(self) -> None:
+        """Boot: rebuild ``last_seq`` and the store's per-key size
+        accounting from ``feed.log``.  The chunk/extent files already
+        hold the data (the store's file backend persists), so records
+        are NOT re-applied — only the bookkeeping is replayed."""
+        path = self._feed_path()
+        if path is None or not path.exists():
+            return
+        data = path.read_bytes()
+        off = 0
+        while off < len(data):
+            rec, off = wire.FeedRecord.unpack(data, off)
+            self._feed.append(rec)
+            self.last_seq = max(self.last_seq, rec.seq)
+            if rec.op == wire.OP_PUT:
+                self.store.key_sizes[rec.key] = (rec.raw_bytes, len(rec.blob))
+            else:
+                self.store.key_sizes.pop(rec.key, None)
+        self.boot_last_seq = self.last_seq
+
+    def _owns(self, key) -> bool:
+        return self.node_id in replica_nodes(key.tsid, key.sid,
+                                             self.n_cells, self.r)
+
+    def apply(self, rec: wire.FeedRecord) -> Tuple[bool, bool]:
+        """Apply one feed record (a wire PUT/DELETE or a catch-up
+        replay); returns ``(applied, existed)``.  Duplicates — client
+        retries after a lost ack, catch-up overlapping a live write —
+        are detected by seq and acked without touching the store, so a
+        record can never double-append to the chunk files."""
+        with self._flock:
+            if rec.seq <= self.boot_last_seq or rec.seq in self._applied:
+                return False, False
+            if rec.op == wire.OP_PUT:
+                self.store.put_encoded(rec.key, rec.blob, rec.raw_bytes)
+                existed = True
+            else:
+                existed = self.store.delete(rec.key)
+            self._feed.append(rec)
+            self._applied.add(rec.seq)
+            self.last_seq = max(self.last_seq, rec.seq)
+            path = self._feed_path()
+            if path is not None:
+                with open(path, "ab") as f:
+                    f.write(rec.pack())
+            return True, existed
+
+    def feed_since(self, seq: int) -> List[wire.FeedRecord]:
+        with self._flock:
+            return [r for r in self._feed if r.seq > seq]
+
+    # ---- replica catch-up ----
+    def catch_up(self, peers: List[Tuple[str, int]],
+                 timeout: float = 5.0) -> int:
+        """Converge with the cluster after a restart: pull every peer's
+        feed tail past our ``last_seq``, keep the records whose key's
+        replica chain includes this cell, and apply them in seq order.
+        Returns the number of records applied.  Unreachable peers are
+        skipped — with r-way replication any single live peer of a key
+        suffices."""
+        fetched: Dict[int, wire.FeedRecord] = {}
+        for host, port in peers:
+            try:
+                with socket.create_connection((host, port),
+                                              timeout=timeout) as s:
+                    s.settimeout(timeout)
+                    wire.send_frame(s, wire.MSG_FEED_SINCE, 0,
+                                    struct.pack("<Q", self.last_seq))
+                    reply = wire.recv_frame(s)
+                if reply.msg_type != wire.MSG_OK:
+                    continue
+                for rec in wire.unpack_records(reply.body):
+                    if self._owns(rec.key):
+                        fetched.setdefault(rec.seq, rec)
+            except (OSError, wire.WireError):
+                continue
+        n = 0
+        for seq in sorted(fetched):
+            applied, _ = self.apply(fetched[seq])
+            n += applied
+        return n
+
+    # ---- server ----
+    def start(self, peers: Optional[List[Tuple[str, int]]] = None) -> int:
+        """Catch up from ``peers`` (if any), bind, and serve in
+        background threads.  Returns the bound port.  A second catch-up
+        pass runs after bind so records that landed on peers while this
+        cell was binding are not missed."""
+        if peers:
+            self.catch_up(peers)
+        self._lsock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._lsock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._lsock.bind((self.host, self.port))
+        self._lsock.listen(64)
+        self.port = self._lsock.getsockname()[1]
+        t = threading.Thread(target=self._accept_loop,
+                             name=f"cell{self.node_id}-accept", daemon=True)
+        t.start()
+        self._threads.append(t)
+        if peers:
+            self.catch_up(peers)
+        return self.port
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._lsock is not None:
+            try:
+                self._lsock.close()
+            except OSError:
+                pass
+        for c in list(self._conns):
+            try:
+                c.close()
+            except OSError:
+                pass
+
+    def _accept_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                conn, _ = self._lsock.accept()
+            except OSError:
+                return  # listen socket closed by stop()
+            self._conns.add(conn)
+            t = threading.Thread(target=self._serve_conn, args=(conn,),
+                                 daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def _serve_conn(self, conn: socket.socket) -> None:
+        try:
+            while not self._stop.is_set():
+                try:
+                    frame = wire.recv_frame(conn)
+                except wire.ConnectionClosed:
+                    return
+                except wire.WireError:
+                    return  # garbage on the stream: drop the connection
+                if frame.version != wire.PROTO_VERSION:
+                    # answer under OUR version so the peer's codec can
+                    # still read the rejection, then hang up
+                    wire.send_frame(
+                        conn, wire.MSG_ERR, frame.req_id,
+                        wire.pack_err(wire.ERR_VERSION,
+                                      f"cell speaks v{wire.PROTO_VERSION}, "
+                                      f"client sent v{frame.version}"))
+                    return
+                try:
+                    mtype, body = self._handle(frame.msg_type, frame.body)
+                except KeyMissing as e:
+                    mtype, body = wire.MSG_ERR, wire.pack_err(
+                        wire.ERR_KEY_MISSING, str(e.args[0]))
+                except (struct.error, IndexError, UnicodeDecodeError,
+                        AssertionError) as e:
+                    mtype, body = wire.MSG_ERR, wire.pack_err(
+                        wire.ERR_BAD_REQUEST, f"{type(e).__name__}: {e}")
+                except Exception as e:  # noqa: BLE001 — relay, don't die
+                    mtype, body = wire.MSG_ERR, wire.pack_err(
+                        wire.ERR_INTERNAL, f"{type(e).__name__}: {e}")
+                try:
+                    wire.send_frame(conn, mtype, frame.req_id, body)
+                except OSError:
+                    return
+        finally:
+            self._conns.discard(conn)
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+    def _handle(self, msg_type: int, body: bytes) -> Tuple[int, bytes]:
+        if msg_type in (wire.MSG_HELLO, wire.MSG_PING):
+            reply = wire.MSG_HELLO if msg_type == wire.MSG_HELLO else wire.MSG_OK
+            return reply, struct.pack("<BQ", self.node_id, self.last_seq)
+        if msg_type == wire.MSG_GET:
+            key, off = wire.unpack_key(body, 0)
+            fields, _ = wire.unpack_fields(body, off)
+            return wire.MSG_OK, self.store.get_encoded(key, fields)
+        if msg_type == wire.MSG_MULTIGET:
+            (n,) = struct.unpack_from("<I", body, 0)
+            off = 4
+            keys = []
+            for _ in range(n):
+                k, off = wire.unpack_key(body, off)
+                keys.append(k)
+            fields, off = wire.unpack_fields(body, off)
+            (missing_ok,) = struct.unpack_from("<B", body, off)
+            found = []
+            for k in keys:
+                try:
+                    found.append((k, self.store.get_encoded(k, fields)))
+                except KeyMissing:
+                    if not missing_ok:
+                        raise
+            out = [struct.pack("<I", len(found))]
+            for k, blob in found:
+                out.append(wire.pack_key(k))
+                out.append(wire.pack_blob(blob))
+            return wire.MSG_OK, b"".join(out)
+        if msg_type == wire.MSG_PUT:
+            key, off = wire.unpack_key(body, 0)
+            seq, raw = struct.unpack_from("<QQ", body, off)
+            blob, _ = wire.unpack_blob(body, off + 16)
+            applied, _ = self.apply(
+                wire.FeedRecord(seq, wire.OP_PUT, key, raw, blob))
+            return wire.MSG_OK, struct.pack("<B", applied)
+        if msg_type == wire.MSG_DELETE:
+            key, off = wire.unpack_key(body, 0)
+            (seq,) = struct.unpack_from("<Q", body, off)
+            _, existed = self.apply(
+                wire.FeedRecord(seq, wire.OP_DELETE, key, 0, b""))
+            return wire.MSG_OK, struct.pack("<B", existed)
+        if msg_type == wire.MSG_FEED_SINCE:
+            (since,) = struct.unpack_from("<Q", body, 0)
+            return wire.MSG_OK, wire.pack_records(self.feed_since(since))
+        if msg_type == wire.MSG_STATUS:
+            s = self.store.stats
+            status = {
+                "node": self.node_id, "last_seq": self.last_seq,
+                "n_keys": len(self.store.key_sizes),
+                "live_bytes": self.store.live_bytes(),
+                "backend": self.store.backend,
+                "feed_len": len(self._feed),
+                "stats": {"reads": s.reads, "writes": s.writes,
+                          "bytes_read": s.bytes_read,
+                          "bytes_written": s.bytes_written,
+                          "bytes_io": s.bytes_io},
+            }
+            return wire.MSG_OK, json.dumps(status).encode()
+        if msg_type == wire.MSG_KEYS:
+            tsid, sid = struct.unpack_from("<qq", body, 0)
+            keys = self.store.keys_for_placement(tsid, sid)
+            return wire.MSG_OK, (struct.pack("<I", len(keys))
+                                 + b"".join(wire.pack_key(k) for k in keys))
+        raise AssertionError(f"unknown message type {msg_type}")
+
+
+def _parse_peers(spec: str) -> List[Tuple[str, int]]:
+    out = []
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        host, port = part.rsplit(":", 1)
+        out.append((host, int(port)))
+    return out
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Run one temporal-graph storage cell.")
+    ap.add_argument("--node-id", type=int, required=True)
+    ap.add_argument("--n-cells", type=int, required=True)
+    ap.add_argument("--replication", type=int, default=1)
+    ap.add_argument("--backend", default="file", choices=("mem", "file"))
+    ap.add_argument("--root", default=None,
+                    help="cell data dir (chunk/extent files + feed.log)")
+    ap.add_argument("--fmt", default=None, help="block format (TGI2 default)")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0,
+                    help="listen port (0 = ephemeral, printed on READY)")
+    ap.add_argument("--peers", default="",
+                    help="comma-separated host:port peers for boot catch-up")
+    args = ap.parse_args(argv)
+    cell = StorageCell(node_id=args.node_id, n_cells=args.n_cells,
+                       r=args.replication, backend=args.backend,
+                       root=args.root, fmt=args.fmt, host=args.host,
+                       port=args.port)
+    port = cell.start(peers=_parse_peers(args.peers))
+    print(f"CELL READY node={cell.node_id} port={port}", flush=True)
+    stop = threading.Event()
+    signal.signal(signal.SIGTERM, lambda *_: stop.set())
+    try:
+        stop.wait()
+    except KeyboardInterrupt:
+        pass
+    cell.stop()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

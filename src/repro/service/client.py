@@ -1,0 +1,373 @@
+"""RemoteDeltaStore: the local ``DeltaStore`` surface over wire cells.
+
+A drop-in store whose ``m`` nodes are ``StorageCell`` servers reached
+over sockets — ``TGI``, the PlanExecutor fetch stage, and the
+decoded-block pool run on top of it unchanged, because everything
+above the physical-I/O layer is *inherited*: placement, replica
+failover, the pool preamble, projection, and stats all come from
+``DeltaStore``; this class only swaps dict/file reads for wire frames.
+
+Read path: ``_read_columns`` issues one GET per key (fields pushed
+through the wire, so the cell preads only the projected columns) and
+decodes the TGI2 reply client-side — a reply that fails its per-column
+crc32 raises ``BlockCorruption``, which the inherited ``get`` treats
+as a dead replica and fails over, extending corrupt-replica failover
+across the process boundary.  ``_group_fetch`` batches each multiget
+group into one MULTIGET frame per replica tier; a group whose primary
+cell is known-unavailable is hedged straight to the fallback replicas
+(``StoreStats.hedged_reads``).  Requests carry a per-request timeout
+and bounded-backoff retries; a cell that stays unreachable is marked
+*suspect* for ``suspect_ttl`` seconds so subsequent reads skip it
+without paying the timeout again, then re-probed.
+
+Write path: every ``put``/``delete`` is stamped with a globally
+monotonic ``seq`` and fanned out to the key's replica cells while the
+writer lock is held — writes are serialized, so every cell receives
+its records in seq order, which is what makes change-feed catch-up
+(``StorageCell.catch_up``) converge to byte-identical files.  A write
+is acknowledged when at least one replica cell accepted it; cells that
+were down catch up from their peers' feeds on restart.
+"""
+from __future__ import annotations
+
+import socket
+import struct
+import threading
+import time
+from typing import Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.service import wire
+from repro.storage import serialize
+from repro.storage.kvstore import (DEFAULT_POOL_BYTES, BlockCorruption,
+                                   DeltaKey, DeltaStore, KeyMissing,
+                                   NodeUnavailable, ReadSizes,
+                                   StorageNodeDown, replica_nodes)
+
+
+class RemoteDeltaStore(DeltaStore):
+    def __init__(self, addrs: List[Tuple[str, int]], r: int = 1,
+                 fmt: Optional[str] = None,
+                 pool_bytes: int = DEFAULT_POOL_BYTES,
+                 timeout: float = 5.0, retries: int = 2,
+                 backoff: float = 0.05, suspect_ttl: float = 2.0):
+        super().__init__(m=len(addrs), r=r, backend="mem", fmt=fmt,
+                         pool_bytes=pool_bytes)
+        self.backend = "remote"
+        self.addrs = list(addrs)
+        self.timeout = timeout
+        self.retries = retries
+        self.backoff = backoff
+        self.suspect_ttl = suspect_ttl
+        self._suspects: Dict[int, float] = {}
+        self._conns: List[List[socket.socket]] = [[] for _ in addrs]
+        self._conn_lock = threading.Lock()
+        self._req_id = 0
+        self._wlock = threading.Lock()
+        # resume the global write sequence from the cluster's high-water
+        # mark, so a fresh client attaching to live cells can never
+        # stamp a seq the feeds have already seen (which dedupe would
+        # silently drop)
+        self._seq = 0
+        for i in range(self.m):
+            try:
+                _, last_seq = struct.unpack(
+                    "<BQ", self._request(i, wire.MSG_PING, b"", retries=0))
+                self._seq = max(self._seq, last_seq)
+            except NodeUnavailable:
+                self._mark_unavailable(i)
+
+    # ---- connection pool ----
+    def _dial(self, node: int) -> socket.socket:
+        sock = socket.create_connection(self.addrs[node],
+                                        timeout=self.timeout)
+        sock.settimeout(self.timeout)
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        wire.send_frame(sock, wire.MSG_HELLO, 0)
+        reply = wire.recv_frame(sock)
+        if reply.msg_type == wire.MSG_ERR:
+            code, msg = wire.unpack_err(reply.body)
+            sock.close()
+            if code == wire.ERR_VERSION:
+                raise wire.ProtocolMismatch(msg)
+            raise wire.RemoteError(code, msg)
+        if reply.msg_type != wire.MSG_HELLO:
+            sock.close()
+            raise wire.FrameError(
+                f"expected HELLO reply, got type {reply.msg_type}")
+        return sock
+
+    def _checkout(self, node: int) -> socket.socket:
+        with self._conn_lock:
+            if self._conns[node]:
+                return self._conns[node].pop()
+        return self._dial(node)
+
+    def _checkin(self, node: int, sock: socket.socket) -> None:
+        with self._conn_lock:
+            self._conns[node].append(sock)
+
+    def close(self) -> None:
+        with self._conn_lock:
+            for stack in self._conns:
+                while stack:
+                    try:
+                        stack.pop().close()
+                    except OSError:
+                        pass
+
+    # ---- request/reply with timeout, retry, bounded backoff ----
+    def _request(self, node: int, msg_type: int, body: bytes,
+                 retries: Optional[int] = None) -> bytes:
+        """One request to one cell.  Transport failures (connect/read
+        timeout, reset, torn or corrupt frame) are retried with bounded
+        exponential backoff, then surface as ``NodeUnavailable`` — the
+        caller fails over.  Server-relayed errors (ERR frames) are not
+        retried: the cell is alive, the request itself failed."""
+        retries = self.retries if retries is None else retries
+        delay = self.backoff
+        last: Exception = NodeUnavailable(f"cell {node}")
+        for _ in range(retries + 1):
+            sock = None
+            try:
+                sock = self._checkout(node)
+                with self._lock:
+                    self._req_id += 1
+                    req_id = self._req_id
+                wire.send_frame(sock, msg_type, req_id, body)
+                reply = wire.recv_frame(sock)
+                if reply.req_id != req_id:
+                    raise wire.FrameError("reply req_id mismatch")
+                if reply.msg_type == wire.MSG_ERR:
+                    code, msg = wire.unpack_err(reply.body)
+                    self._checkin(node, sock)
+                    if code == wire.ERR_VERSION:
+                        raise wire.ProtocolMismatch(msg)
+                    if code == wire.ERR_KEY_MISSING:
+                        raise KeyMissing(msg)
+                    raise wire.RemoteError(code, msg)
+                self._checkin(node, sock)
+                return reply.body
+            except (wire.ProtocolMismatch, wire.RemoteError, KeyMissing):
+                raise
+            except (OSError, wire.WireError) as e:
+                if sock is not None:
+                    try:
+                        sock.close()
+                    except OSError:
+                        pass
+                last = e
+                time.sleep(delay)
+                delay = min(delay * 2, 1.0)
+        raise NodeUnavailable(
+            f"cell {node} @ {self.addrs[node]}: {last}") from last
+
+    # ---- node health (suspect set with re-probe TTL) ----
+    def _node_ok(self, i: int) -> bool:
+        if i in self.down:
+            return False
+        t = self._suspects.get(i)
+        if t is None:
+            return True
+        if time.monotonic() - t > self.suspect_ttl:
+            self._suspects.pop(i, None)  # TTL over: re-probe the cell
+            return True
+        return False
+
+    def _mark_unavailable(self, i: int) -> None:
+        self._suspects[i] = time.monotonic()
+
+    # ---- physical I/O overrides (everything above is inherited) ----
+    def _read_columns(self, node: int, key: DeltaKey,
+                      fields: Optional[Tuple[str, ...]],
+                      ) -> Tuple[Dict[str, np.ndarray], int, int]:
+        flist = None if fields is None else list(fields)
+        body = wire.pack_key(key) + wire.pack_fields(flist)
+        blob = self._request(node, wire.MSG_GET, body)
+        # the reply IS a TGI2 block: per-column crc32 verified on decode
+        # (BlockCorruption -> inherited get() fails over to next replica)
+        arrays, enc_read, raw_read = serialize.loads_sized(blob, fields=flist)
+        self._pool_dir_fill(key, blob)
+        return arrays, enc_read, raw_read
+
+    def put_encoded(self, key: DeltaKey, blob: bytes, raw_bytes: int):
+        with self._wlock:
+            self._seq += 1
+            seq = self._seq
+            body = (wire.pack_key(key) + struct.pack("<QQ", seq, raw_bytes)
+                    + wire.pack_blob(blob))
+            wrote = False
+            for node in self.replicas(key):
+                if not self._node_ok(node):
+                    continue
+                try:
+                    self._request(node, wire.MSG_PUT, body)
+                    wrote = True
+                except NodeUnavailable:
+                    self._mark_unavailable(node)
+            if not wrote:
+                raise StorageNodeDown(f"all replica cells down for {key}")
+        if self.pool is not None:
+            self.pool.invalidate(key)
+        with self._lock:
+            self.stats.writes += 1
+            self.stats.bytes_written += len(blob) * self.r
+            self.stats.bytes_raw_written += raw_bytes * self.r
+            self.key_sizes[key] = (raw_bytes, len(blob))
+
+    def delete(self, key: DeltaKey) -> bool:
+        with self._wlock:
+            self._seq += 1
+            body = wire.pack_key(key) + struct.pack("<Q", self._seq)
+            existed = False
+            for node in self.replicas(key):
+                if not self._node_ok(node):
+                    continue
+                try:
+                    reply = self._request(node, wire.MSG_DELETE, body)
+                    existed |= bool(reply[0])
+                except NodeUnavailable:
+                    self._mark_unavailable(node)
+        if self.pool is not None:
+            self.pool.invalidate(key)
+        with self._lock:
+            sizes = self.key_sizes.pop(key, None)
+            if sizes is not None:
+                self.stats.n_deletes += 1
+                self.stats.bytes_deleted += sizes[1] * self.r
+        return existed or sizes is not None
+
+    def _group_fetch(self, primary: int, gkeys: List[DeltaKey],
+                     fields: Optional[Iterable[str]], missing_ok: bool,
+                     sizes: Optional[Dict[DeltaKey, ReadSizes]],
+                     ) -> Dict[DeltaKey, Dict]:
+        """One MULTIGET frame per replica tier for a whole primary-node
+        group.  Keys with pooled state go through the inherited per-key
+        ``get`` (it merges pool hits with a partial fetch); cold keys
+        ride the batch.  An unavailable tier redirects the *remaining
+        batch* to the next replica in one frame — the hedged path."""
+        out: Dict[DeltaKey, Dict] = {}
+        batch: List[DeltaKey] = []
+        for k in gkeys:
+            if self.pool is not None and self.pool.dir_get(k) is not None:
+                try:
+                    out[k] = self.get(k, fields=fields, sizes=sizes)
+                except KeyMissing:
+                    if not missing_ok:
+                        raise
+            else:
+                batch.append(k)
+        if not batch:
+            return out
+        if not self._node_ok(primary):
+            with self._lock:
+                self.stats.hedged_reads += len(batch)
+        flist = None if fields is None else list(fields)
+        pending = batch
+        reachable = False
+        for j, node in enumerate(self.replicas(batch[0])):
+            if not pending:
+                break
+            if not self._node_ok(node):
+                if j > 0 or self.r == 1:
+                    with self._lock:
+                        self.stats.failovers += len(pending)
+                continue
+            req = [struct.pack("<I", len(pending))]
+            req += [wire.pack_key(k) for k in pending]
+            req.append(wire.pack_fields(flist))
+            req.append(struct.pack("<B", 1))  # found-subset reply; the
+            # client decides missing vs try-next-replica
+            try:
+                reply = self._request(node, wire.MSG_MULTIGET, b"".join(req))
+            except NodeUnavailable:
+                self._mark_unavailable(node)
+                with self._lock:
+                    self.stats.failovers += len(pending)
+                continue
+            reachable = True
+            (n,) = struct.unpack_from("<I", reply, 0)
+            off = 4
+            got: Dict[DeltaKey, bytes] = {}
+            for _ in range(n):
+                k, off = wire.unpack_key(reply, off)
+                blob, off = wire.unpack_blob(reply, off)
+                got[k] = blob
+            still: List[DeltaKey] = []
+            for k in pending:
+                blob = got.get(k)
+                if blob is None:
+                    still.append(k)  # not on this tier: try the next
+                    continue
+                try:
+                    arrays, enc_read, raw_read = serialize.loads_sized(
+                        blob, fields=flist)
+                except BlockCorruption:
+                    with self._lock:
+                        self.stats.failovers += 1
+                    still.append(k)
+                    continue
+                self._pool_dir_fill(k, blob)
+                with self._lock:
+                    self.stats.reads += 1
+                    self.stats.bytes_read += enc_read
+                    self.stats.bytes_decompressed += raw_read
+                    if self.pool is not None:
+                        self.stats.pool_misses += len(arrays)
+                    if j > 0:
+                        self.stats.failovers += 1
+                if self.pool is not None:
+                    for name, a in arrays.items():
+                        self.pool.put(k, name, a)
+                if sizes is not None:
+                    sizes[k] = ReadSizes(enc_read, raw_read, 0, 0)
+                out[k] = arrays
+            pending = still
+        if pending:
+            if not reachable:
+                raise StorageNodeDown(
+                    f"no live replica cell for {pending[0]}")
+            if not missing_ok:
+                raise KeyMissing(pending[0])
+        return out
+
+    def keys_for_placement(self, tsid: int, sid: int) -> List[DeltaKey]:
+        body = struct.pack("<qq", tsid, sid)
+        last: Exception = StorageNodeDown(
+            f"no live replica cell for placement ({tsid}, {sid})")
+        for node in replica_nodes(tsid, sid, self.m, self.r):
+            if not self._node_ok(node):
+                continue
+            try:
+                reply = self._request(node, wire.MSG_KEYS, body)
+            except NodeUnavailable as e:
+                self._mark_unavailable(node)
+                last = e
+                continue
+            (n,) = struct.unpack_from("<I", reply, 0)
+            off = 4
+            out = []
+            for _ in range(n):
+                k, off = wire.unpack_key(reply, off)
+                out.append(k)
+            return out
+        raise StorageNodeDown(str(last))
+
+    def node_status(self) -> Dict:
+        """The shared cluster-health shape, with liveness *probed*: each
+        cell answers a PING (one attempt) so "up" reflects the cluster
+        as it is now, not just the suspect cache."""
+        for i in range(self.m):
+            try:
+                self._request(i, wire.MSG_PING, b"", retries=0)
+                self._suspects.pop(i, None)
+            except (NodeUnavailable, wire.WireError):
+                self._mark_unavailable(i)
+        return super().node_status()
+
+    def cell_status(self, node: int) -> Dict:
+        """Server-side view of one cell (its own stats/feed/last_seq) —
+        the bench asserts server-measured ``bytes_io`` through this."""
+        import json
+        return json.loads(self._request(node, wire.MSG_STATUS, b""))

@@ -1,0 +1,279 @@
+"""Wire protocol for the temporal graph service plane.
+
+Length-prefixed binary framing over a byte stream (TCP).  Every message
+is one frame:
+
+    header (16 bytes, little-endian):
+        magic     2s   b"TW"
+        version   u8   PROTO_VERSION — checked on BOTH ends; a server
+                       answers a mismatched frame with ERR code
+                       "VERSION" (framed under ITS version) so old
+                       clients fail with ProtocolMismatch, not garbage
+        type      u8   message type (MSG_*)
+        req_id    u32  request correlation id, echoed in the reply
+        body_len  u32  payload byte count (<= MAX_FRAME)
+        body_crc  u32  crc32 of the payload
+    body (body_len bytes)
+
+Bodies are hand-rolled ``struct`` packing — no msgpack, no pickle.
+Block payloads are NOT re-encoded for the wire: a GET reply body *is* a
+TGI2 block (``serialize.assemble_block`` of the projected columns), so
+per-column crc32s ride end to end and a corrupt reply surfaces as
+``BlockCorruption`` on decode, which the client treats as a replica
+failure (failover), exactly like a corrupt local disk read.
+
+Decoding is total: truncated, oversized, corrupt, or garbage frames
+raise *typed* errors (``FrameError`` / ``FrameTooLarge`` /
+``FrameCorrupt`` / ``ProtocolMismatch``) — never a hang, never a
+silent mis-parse.  ``decode_frame`` is a pure bytes->Frame function so
+the codec is fuzzable without sockets.
+"""
+from __future__ import annotations
+
+import socket
+import struct
+import zlib
+from typing import List, NamedTuple, Optional, Tuple
+
+from repro.storage.kvstore import DeltaKey
+
+PROTO_VERSION = 1
+FRAME_MAGIC = b"TW"
+HEADER = struct.Struct("<2sBBIII")  # magic, version, type, req_id, len, crc
+MAX_FRAME = 1 << 28  # 256 MiB: far above any block, far below a bomb
+
+(MSG_HELLO, MSG_OK, MSG_ERR, MSG_PING, MSG_GET, MSG_MULTIGET, MSG_PUT,
+ MSG_DELETE, MSG_FEED_SINCE, MSG_STATUS, MSG_KEYS) = range(1, 12)
+
+# ERR body codes (pack_str'd): the client maps these back to the local
+# store's exception types so failure semantics match the local backend
+ERR_KEY_MISSING = "KEY_MISSING"
+ERR_BAD_REQUEST = "BAD_REQUEST"
+ERR_INTERNAL = "INTERNAL"
+ERR_VERSION = "VERSION"
+
+# change-feed record ops
+OP_PUT = 0
+OP_DELETE = 1
+
+
+class WireError(RuntimeError):
+    """Base of every wire-protocol error."""
+
+
+class FrameError(WireError):
+    """Malformed frame: bad magic, truncated header/body, or trailing
+    garbage where a frame boundary should be."""
+
+
+class FrameTooLarge(WireError):
+    """Declared body length exceeds MAX_FRAME — rejected before any
+    body byte is read, so a hostile length can't balloon memory."""
+
+
+class FrameCorrupt(WireError):
+    """Body bytes fail the header's crc32."""
+
+
+class ProtocolMismatch(WireError):
+    """Peer speaks a different PROTO_VERSION."""
+
+
+class ConnectionClosed(WireError):
+    """Clean EOF between frames (peer went away)."""
+
+
+class RemoteError(WireError):
+    """Server-side failure relayed through an ERR frame."""
+
+    def __init__(self, code: str, message: str):
+        super().__init__(f"{code}: {message}")
+        self.code = code
+        self.message = message
+
+
+class Frame(NamedTuple):
+    version: int
+    msg_type: int
+    req_id: int
+    body: bytes
+
+
+# ---------------------------------------------------------------------------
+# frame codec (pure bytes <-> Frame; the socket layer wraps these)
+# ---------------------------------------------------------------------------
+
+
+def encode_frame(msg_type: int, req_id: int, body: bytes = b"",
+                 version: int = PROTO_VERSION) -> bytes:
+    if len(body) > MAX_FRAME:
+        raise FrameTooLarge(f"body of {len(body)} bytes exceeds MAX_FRAME")
+    return HEADER.pack(FRAME_MAGIC, version, msg_type, req_id, len(body),
+                       zlib.crc32(body) & 0xFFFFFFFF) + body
+
+
+def decode_frame(data: bytes) -> Tuple[Frame, int]:
+    """Decode one complete frame from the head of ``data``; returns
+    ``(frame, bytes_consumed)``.  Raises typed errors on anything that
+    is not a well-formed frame — a decoder that can't throw can only
+    hang or mis-parse."""
+    if len(data) < HEADER.size:
+        raise FrameError(f"truncated header: {len(data)} < {HEADER.size} bytes")
+    magic, version, msg_type, req_id, body_len, body_crc = HEADER.unpack_from(data)
+    if magic != FRAME_MAGIC:
+        raise FrameError(f"bad frame magic {magic!r}")
+    if body_len > MAX_FRAME:
+        raise FrameTooLarge(f"declared body of {body_len} bytes exceeds MAX_FRAME")
+    end = HEADER.size + body_len
+    if len(data) < end:
+        raise FrameError(f"truncated body: have {len(data) - HEADER.size} "
+                         f"of {body_len} bytes")
+    body = bytes(data[HEADER.size:end])
+    if zlib.crc32(body) & 0xFFFFFFFF != body_crc:
+        raise FrameCorrupt("frame body crc32 mismatch")
+    return Frame(version, msg_type, req_id, body), end
+
+
+def _recv_exact(sock: socket.socket, n: int, mid_frame: bool) -> bytes:
+    chunks = []
+    got = 0
+    while got < n:
+        chunk = sock.recv(n - got)
+        if not chunk:
+            if got == 0 and not mid_frame:
+                raise ConnectionClosed("peer closed the connection")
+            raise FrameError(f"connection closed mid-frame ({got}/{n} bytes)")
+        chunks.append(chunk)
+        got += len(chunk)
+    return b"".join(chunks)
+
+
+def send_frame(sock: socket.socket, msg_type: int, req_id: int,
+               body: bytes = b"", version: int = PROTO_VERSION) -> None:
+    sock.sendall(encode_frame(msg_type, req_id, body, version))
+
+
+def recv_frame(sock: socket.socket) -> Frame:
+    """Read one frame off a socket.  The header is validated before the
+    body is read, so an oversized length raises without allocating."""
+    head = _recv_exact(sock, HEADER.size, mid_frame=False)
+    magic, version, msg_type, req_id, body_len, body_crc = HEADER.unpack(head)
+    if magic != FRAME_MAGIC:
+        raise FrameError(f"bad frame magic {magic!r}")
+    if body_len > MAX_FRAME:
+        raise FrameTooLarge(f"declared body of {body_len} bytes exceeds MAX_FRAME")
+    body = _recv_exact(sock, body_len, mid_frame=True) if body_len else b""
+    if zlib.crc32(body) & 0xFFFFFFFF != body_crc:
+        raise FrameCorrupt("frame body crc32 mismatch")
+    return Frame(version, msg_type, req_id, body)
+
+
+# ---------------------------------------------------------------------------
+# body packing helpers (hand-rolled struct, no external codec)
+# ---------------------------------------------------------------------------
+
+
+def pack_str(s: str) -> bytes:
+    b = s.encode()
+    return struct.pack("<H", len(b)) + b
+
+
+def unpack_str(buf: bytes, off: int) -> Tuple[str, int]:
+    (n,) = struct.unpack_from("<H", buf, off)
+    off += 2
+    return buf[off:off + n].decode(), off + n
+
+
+def pack_key(key: DeltaKey) -> bytes:
+    return struct.pack("<qqq", key.tsid, key.sid, key.pid) + pack_str(key.did)
+
+
+def unpack_key(buf: bytes, off: int) -> Tuple[DeltaKey, int]:
+    tsid, sid, pid = struct.unpack_from("<qqq", buf, off)
+    did, off = unpack_str(buf, off + 24)
+    return DeltaKey(tsid, sid, did, pid), off
+
+
+# u16 0xFFFF marks "no projection" (fields=None: every column); 0 is a
+# legal empty projection
+_ALL_FIELDS = 0xFFFF
+
+
+def pack_fields(fields: Optional[List[str]]) -> bytes:
+    if fields is None:
+        return struct.pack("<H", _ALL_FIELDS)
+    assert len(fields) < _ALL_FIELDS
+    return struct.pack("<H", len(fields)) + b"".join(pack_str(f) for f in fields)
+
+
+def unpack_fields(buf: bytes, off: int) -> Tuple[Optional[List[str]], int]:
+    (n,) = struct.unpack_from("<H", buf, off)
+    off += 2
+    if n == _ALL_FIELDS:
+        return None, off
+    out = []
+    for _ in range(n):
+        f, off = unpack_str(buf, off)
+        out.append(f)
+    return out, off
+
+
+def pack_blob(b: bytes) -> bytes:
+    return struct.pack("<I", len(b)) + b
+
+
+def unpack_blob(buf: bytes, off: int) -> Tuple[bytes, int]:
+    (n,) = struct.unpack_from("<I", buf, off)
+    off += 4
+    return bytes(buf[off:off + n]), off + n
+
+
+class FeedRecord(NamedTuple):
+    """One change-feed entry: a client-stamped globally monotonic ``seq``
+    plus the write it carries.  ``blob`` is the encoded block verbatim
+    (``raw_bytes`` rides along for storage accounting); DELETE records
+    carry an empty blob.  Replaying records in ``seq`` order through
+    ``put_encoded``/``delete`` reproduces a cell's chunk/extent files
+    byte for byte — the catch-up convergence property."""
+
+    seq: int
+    op: int  # OP_PUT | OP_DELETE
+    key: DeltaKey
+    raw_bytes: int
+    blob: bytes
+
+    def pack(self) -> bytes:
+        return (struct.pack("<QB", self.seq, self.op) + pack_key(self.key)
+                + struct.pack("<Q", self.raw_bytes) + pack_blob(self.blob))
+
+    @staticmethod
+    def unpack(buf: bytes, off: int) -> Tuple["FeedRecord", int]:
+        seq, op = struct.unpack_from("<QB", buf, off)
+        key, off = unpack_key(buf, off + 9)
+        (raw,) = struct.unpack_from("<Q", buf, off)
+        blob, off = unpack_blob(buf, off + 8)
+        return FeedRecord(seq, op, key, raw, blob), off
+
+
+def pack_records(records: List[FeedRecord]) -> bytes:
+    return struct.pack("<I", len(records)) + b"".join(r.pack() for r in records)
+
+
+def unpack_records(buf: bytes, off: int = 0) -> List[FeedRecord]:
+    (n,) = struct.unpack_from("<I", buf, off)
+    off += 4
+    out = []
+    for _ in range(n):
+        rec, off = FeedRecord.unpack(buf, off)
+        out.append(rec)
+    return out
+
+
+def pack_err(code: str, message: str) -> bytes:
+    return pack_str(code) + pack_str(message)
+
+
+def unpack_err(buf: bytes) -> Tuple[str, str]:
+    code, off = unpack_str(buf, 0)
+    message, _ = unpack_str(buf, off)
+    return code, message

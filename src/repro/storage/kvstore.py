@@ -59,8 +59,27 @@ class DeltaKey(NamedTuple):
         return (self.tsid, self.sid)
 
 
+def replica_nodes(tsid: int, sid: int, m: int, r: int) -> List[int]:
+    """The placement function, shared by every party that must agree on
+    it: ``DeltaStore`` (local reads/writes), ``RemoteDeltaStore``
+    (routing), and ``StorageCell`` (feed catch-up filters peer records
+    to the keys whose replica chain includes this cell).  A placement
+    key hashes to a primary node; replicas live on the next ``r - 1``
+    consecutive nodes (the paper's equitable-distribution layout)."""
+    h = (tsid * 0x9E3779B1 + sid * 0x85EBCA77) % m
+    return [(h + j) % m for j in range(r)]
+
+
 class StorageNodeDown(RuntimeError):
     pass
+
+
+class NodeUnavailable(RuntimeError):
+    """One replica could not be reached (remote cell down, connect or
+    request timeout).  Read paths treat it exactly like a down node:
+    fail over to the next replica; only when every replica is
+    unavailable does the error surface as ``StorageNodeDown``.  Local
+    backends never raise it."""
 
 
 # file-backend deletion marker: a record whose length field holds this
@@ -84,6 +103,10 @@ class StoreStats:
     bytes_decompressed: int = 0  # raw bytes physically decoded by reads
     bytes_deleted: int = 0  # encoded bytes reclaimed by deletes (x repl.)
     failovers: int = 0
+    # multiget batch redirects: keys routed straight to a fallback
+    # replica because their node was known-unavailable at batch start
+    # (hedged as a group, not rediscovered per key)
+    hedged_reads: int = 0
     # decoded-block pool accounting — pool hits are NEVER counted as
     # physical decodes (bytes_decompressed), so FetchCost stays truthful
     pool_hits: int = 0  # columns served from the pool
@@ -96,7 +119,7 @@ class StoreStats:
         self.bytes_read = self.bytes_written = 0
         self.bytes_raw_written = self.bytes_decompressed = 0
         self.bytes_deleted = 0
-        self.failovers = 0
+        self.failovers = self.hedged_reads = 0
         self.pool_hits = self.pool_misses = self.bytes_pool_served = 0
         self.bytes_io = 0
 
@@ -280,16 +303,49 @@ class DeltaStore:
 
     # ---- placement ----
     def replicas(self, key: DeltaKey) -> List[int]:
-        tsid, sid = key.placement
-        h = (tsid * 0x9E3779B1 + sid * 0x85EBCA77) % self.m
-        return [(h + j) % self.m for j in range(self.r)]
+        return replica_nodes(key.tsid, key.sid, self.m, self.r)
 
-    # ---- failure injection ----
+    # ---- failure injection / node health ----
     def fail_node(self, i: int):
         self.down.add(i)
 
     def heal_node(self, i: int):
         self.down.discard(i)
+
+    def _node_ok(self, i: int) -> bool:
+        """Whether node ``i`` is currently worth sending a request to.
+        The local store only knows injected failures; RemoteDeltaStore
+        additionally tracks cells whose last request failed (suspects,
+        with a re-probe TTL)."""
+        return i not in self.down
+
+    def _mark_unavailable(self, i: int) -> None:
+        """Health feedback from a failed read — no-op locally (injected
+        failures are authoritative); the remote store marks the cell
+        suspect so the next batch hedges straight to replicas."""
+
+    def node_status(self) -> Dict:
+        """Per-node health and live-data report, shared by local and
+        remote stores (chaos tests assert cluster health through one
+        shape): for each of the ``m`` nodes, whether it is up and the
+        live keys / encoded bytes it hosts (replicas counted on every
+        node holding them, from the write-time ``key_sizes``)."""
+        keys_per = [0] * self.m
+        bytes_per = [0] * self.m
+        with self._lock:
+            items = list(self.key_sizes.items())
+        for key, (_, enc) in items:
+            for n in self.replicas(key):
+                keys_per[n] += 1
+                bytes_per[n] += enc
+        nodes = [
+            {"node": i, "up": self._node_ok(i), "live_keys": keys_per[i],
+             "live_bytes": bytes_per[i]}
+            for i in range(self.m)
+        ]
+        return {"m": self.m, "r": self.r, "backend": self.backend,
+                "n_down": sum(1 for n in nodes if not n["up"]),
+                "nodes": nodes}
 
     # ---- io ----
     def _chunk_path(self, node: int, placement) -> Path:
@@ -365,14 +421,30 @@ class DeltaStore:
             self._ext_cache[ck] = cache
             return cache
 
-    def put(self, key: DeltaKey, arrays: Dict[str, np.ndarray]):
-        # eventlists ('E:*') are the replay hot path — dozens of blobs
-        # per snapshot — so they encode under the latency-biased profile;
-        # hierarchy deltas and aux replicas (the bulk of the bytes, a few
-        # blobs per query) maximize compression
+    def encode_payload(self, key: DeltaKey,
+                       arrays: Dict[str, np.ndarray]) -> Tuple[bytes, int]:
+        """Serialize one micro-delta to its stored block: ``(blob,
+        raw_bytes)``.  Eventlists ('E:*') are the replay hot path —
+        dozens of blobs per snapshot — so they encode under the
+        latency-biased profile; hierarchy deltas and aux replicas (the
+        bulk of the bytes, a few blobs per query) maximize compression.
+        Split out of ``put`` so the remote client encodes ONCE and fans
+        the same bytes out to every replica cell."""
         profile = "speed" if key.did.startswith("E:") else "size"
         blob = serialize.dumps(arrays, fmt=self.fmt, profile=profile)
         raw_bytes = sum(np.asarray(a).nbytes for a in arrays.values())
+        return blob, raw_bytes
+
+    def put(self, key: DeltaKey, arrays: Dict[str, np.ndarray]):
+        blob, raw_bytes = self.encode_payload(key, arrays)
+        self.put_encoded(key, blob, raw_bytes)
+
+    def put_encoded(self, key: DeltaKey, blob: bytes, raw_bytes: int):
+        """Store an already-encoded block verbatim.  This is the write
+        primitive a StorageCell applies for wire PUTs and change-feed
+        replay: because the bytes land untouched, every replica's chunk
+        and extent files stay byte-identical to the writer's encoding —
+        the property feed-based catch-up converges on."""
         wrote = False
         for node in self.replicas(key):
             if node in self.down:
@@ -611,7 +683,7 @@ class DeltaStore:
                 need = tuple(missing)
         last_err: Exception = KeyMissing(key)
         for j, node in enumerate(self.replicas(key)):
-            if node in self.down:
+            if not self._node_ok(node):
                 with self._lock:
                     self.stats.failovers += j > 0 or self.r == 1
                 continue
@@ -625,6 +697,14 @@ class DeltaStore:
                 # to the next copy (the error surfaces only when every
                 # replica is corrupt or missing)
                 last_err = e
+                with self._lock:
+                    self.stats.failovers += 1
+                continue
+            except NodeUnavailable as e:
+                # an unreachable cell (remote backend): mark it suspect
+                # so the rest of the batch hedges, and fail over
+                last_err = e
+                self._mark_unavailable(node)
                 with self._lock:
                     self.stats.failovers += 1
                 continue
@@ -677,29 +757,171 @@ class DeltaStore:
                  sizes: Optional[Dict[DeltaKey, "ReadSizes"]] = None,
                  ) -> Dict[DeltaKey, Dict]:
         """Parallel fetch with c clients (paper Fig. 11/12's c parameter).
-        Keys are routed per storage node so each client drains distinct
-        nodes — the paper's direct QP->storage parallelism.  With
+        Keys are grouped by their primary replica node and each group is
+        drained as one batch, so concurrent clients hit distinct nodes —
+        the paper's direct QP->storage parallelism (keys sharing a
+        primary share the whole replica chain, so a group fails over as
+        a unit).  A group whose primary is known-unavailable at batch
+        start is *hedged*: every key goes straight to the fallback
+        replicas in one batch instead of rediscovering the dead node per
+        key (``StoreStats.hedged_reads`` counts them).  With
         ``missing_ok`` absent keys are skipped instead of raising (sparse
         key spaces like per-shard eventlists); node failures still raise."""
         keys = list(keys)
+        groups: Dict[int, List[DeltaKey]] = {}
+        for k in keys:
+            groups.setdefault(self.replicas(k)[0], []).append(k)
         out: Dict[DeltaKey, Dict] = {}
-        if c <= 1:
-            for k in keys:
-                try:
-                    out[k] = self.get(k, fields=fields, sizes=sizes)
-                except KeyMissing:
-                    if not missing_ok:
-                        raise
+        if c <= 1 or len(groups) == 1:
+            for primary, gkeys in groups.items():
+                out.update(self._group_fetch(primary, gkeys, fields,
+                                             missing_ok, sizes))
             return out
         with cf.ThreadPoolExecutor(max_workers=c) as ex:
-            futs = {ex.submit(self.get, k, fields, sizes): k for k in keys}
+            futs = [
+                ex.submit(self._group_fetch, primary, gkeys, fields,
+                          missing_ok, sizes)
+                for primary, gkeys in groups.items()
+            ]
             for fut in cf.as_completed(futs):
-                try:
-                    out[futs[fut]] = fut.result()
-                except KeyMissing:
-                    if not missing_ok:
-                        raise
+                out.update(fut.result())
         return out
+
+    def _group_fetch(self, primary: int, gkeys: List[DeltaKey],
+                     fields: Optional[Iterable[str]], missing_ok: bool,
+                     sizes: Optional[Dict[DeltaKey, "ReadSizes"]],
+                     ) -> Dict[DeltaKey, Dict]:
+        """Fetch one primary-node group of a multiget.  The base store
+        reads key by key (``get`` already fails over); the remote store
+        overrides this with one wire MULTIGET frame per replica tier.
+        Either way, an unavailable primary is detected once for the
+        whole group — the keys are hedged to the replicas as a batch."""
+        if not self._node_ok(primary):
+            with self._lock:
+                self.stats.hedged_reads += len(gkeys)
+        out: Dict[DeltaKey, Dict] = {}
+        for k in gkeys:
+            try:
+                out[k] = self.get(k, fields=fields, sizes=sizes)
+            except KeyMissing:
+                if not missing_ok:
+                    raise
+        return out
+
+    # ---- encoded (no-decode) reads: the service plane's serving path ----
+
+    def get_encoded(self, key: DeltaKey,
+                    fields: Optional[Iterable[str]] = None) -> bytes:
+        """Projected block read *without decoding*: returns a TGI2 block
+        whose directory lists every column of the stored blob but whose
+        payload section carries only the requested columns' encoded
+        bytes, copied verbatim.  This is what a StorageCell serves for a
+        wire GET — the cell never decompresses, per-column crc32s ride
+        along unchanged (the client verifies on decode), and on the
+        range-seek file backend only the projected columns' byte ranges
+        are read off disk (``stats.bytes_io`` measures exactly that)."""
+        want = None if fields is None else set(fields)
+        last_err: Exception = KeyMissing(key)
+        for j, node in enumerate(self.replicas(key)):
+            if not self._node_ok(node):
+                with self._lock:
+                    self.stats.failovers += j > 0 or self.r == 1
+                continue
+            try:
+                entries, payloads, enc_read = self._read_encoded(
+                    node, key, want)
+            except KeyMissing as e:
+                last_err = e
+                continue
+            except BlockCorruption as e:
+                last_err = e
+                with self._lock:
+                    self.stats.failovers += 1
+                continue
+            with self._lock:
+                self.stats.reads += 1
+                self.stats.bytes_read += enc_read
+                if j > 0:
+                    self.stats.failovers += 1
+            return serialize.assemble_block(entries, payloads)
+        if isinstance(last_err, (KeyMissing, BlockCorruption)):
+            raise last_err
+        raise StorageNodeDown(f"no live replica for {key}")
+
+    def _read_encoded(self, node: int, key: DeltaKey,
+                      want: Optional[set],
+                      ) -> Tuple[List[serialize.ColumnMeta],
+                                 Dict[str, bytes], int]:
+        """Read one replica's directory plus the wanted columns' encoded
+        payload bytes — no decode, no checksum pass (the reader
+        verifies).  Returns ``(all entries, {name: payload}, enc_read)``."""
+        if self.backend == "file" and self.seek:
+            return self._read_encoded_seek(node, key, want)
+        blob = memoryview(self._read_node(node, key))
+        entries = serialize.walk(blob)
+        payloads = {
+            e.name: bytes(blob[e.off : e.off + e.length])
+            for e in entries if want is None or e.name in want
+        }
+        enc_read = 8 + sum(len(p) for p in payloads.values())
+        return entries, payloads, enc_read
+
+    def _read_encoded_seek(self, node: int, key: DeltaKey,
+                           want: Optional[set],
+                           ) -> Tuple[List[serialize.ColumnMeta],
+                                      Dict[str, bytes], int]:
+        """Range-seek twin of ``_read_encoded``: extent lookup ->
+        directory prefix pread -> one pread per wanted column.
+        Unrequested columns cost zero file bytes."""
+        path = self._chunk_path(node, key.placement)
+        ext = self._extents(node, key.placement)
+        rec = ext.get(f"{key.did}|{key.pid}".encode())
+        if rec is None:
+            raise KeyMissing(key)
+        off, blen = rec
+        io_bytes = 0
+        with open(path, "rb") as f:
+            f.seek(off)
+            prefix = f.read(min(blen, self._DIR_PREFIX))
+            io_bytes += len(prefix)
+            if bytes(prefix[:4]) == serialize.MAGIC:
+                # TGI1: headers interleave with payloads — full read
+                blob = prefix + f.read(blen - len(prefix))
+                io_bytes += max(blen - len(prefix), 0)
+                with self._lock:
+                    self.stats.bytes_io += io_bytes
+                blob_v = memoryview(blob)
+                entries = serialize.walk(blob_v)
+                payloads = {
+                    e.name: bytes(blob_v[e.off : e.off + e.length])
+                    for e in entries if want is None or e.name in want
+                }
+                return entries, payloads, 8 + sum(
+                    len(p) for p in payloads.values())
+            entries = serialize.parse_directory(prefix)
+            while entries is None and len(prefix) < blen:
+                more = f.read(min(blen - len(prefix), len(prefix)))
+                if not more:
+                    break
+                prefix += more
+                io_bytes += len(more)
+                entries = serialize.parse_directory(prefix)
+            if entries is None:
+                raise BlockCorruption(f"truncated TGI2 directory for {key}")
+            view = memoryview(prefix)
+            payloads: Dict[str, bytes] = {}
+            for e in entries:
+                if want is not None and e.name not in want:
+                    continue
+                if e.off + e.length <= len(prefix):
+                    payloads[e.name] = bytes(view[e.off : e.off + e.length])
+                else:
+                    f.seek(off + e.off)
+                    payloads[e.name] = f.read(e.length)
+                    io_bytes += e.length
+        with self._lock:
+            self.stats.bytes_io += io_bytes
+        return entries, payloads, 8 + sum(len(p) for p in payloads.values())
 
     def size_report(self) -> Dict[str, Dict[str, int]]:
         """Raw vs. encoded bytes per did component, from the per-key

@@ -444,6 +444,48 @@ def _dumps_v2(arrays: Dict[str, np.ndarray], profile: str = "size") -> bytes:
     return buf.getvalue()
 
 
+def assemble_block(entries: List["ColumnMeta"],
+                   payloads: Dict[str, bytes]) -> bytes:
+    """Re-emit a TGI2 block from *already-encoded* columns — the service
+    plane's projected-read path.  A StorageCell copies the requested
+    columns' payload bytes verbatim (no decode, no re-encode) into a
+    fresh block whose directory still lists EVERY column of the source
+    blob, so the client learns the blob's full column set from a
+    projected reply (its decoded-block pool needs the complete
+    directory).  Entries without a payload keep their stored length but
+    point at offset 0: decoding one fails its crc check loudly instead
+    of silently returning garbage — readers must project to the supplied
+    columns.  Columns sourced from a TGI1 blob (crc None) get a fresh
+    crc32, so every reply is checksummed end to end."""
+    dir_len = 8
+    for e in entries:
+        dir_len += 2 + len(e.name.encode()) + 2 + 8 * len(e.shape) + 21
+    buf = io.BytesIO()
+    buf.write(MAGIC2)
+    buf.write(struct.pack("<I", len(entries) | DIR_HAS_CRC))
+    off = dir_len
+    for e in entries:
+        nb = e.name.encode()
+        payload = payloads.get(e.name)
+        if payload is None:
+            poff, crc = 0, (e.crc if e.crc is not None else 0)
+        else:
+            poff = off
+            off += len(payload)
+            crc = (e.crc if e.crc is not None
+                   else zlib.crc32(payload) & 0xFFFFFFFF)
+        buf.write(struct.pack("<H", len(nb)))
+        buf.write(nb)
+        buf.write(struct.pack("<BB", _DT_CODE[np.dtype(e.dtype)], len(e.shape)))
+        buf.write(struct.pack(f"<{len(e.shape)}q", *e.shape))
+        buf.write(struct.pack("<BQQI", e.enc, e.length, poff, crc))
+    for e in entries:
+        payload = payloads.get(e.name)
+        if payload is not None:
+            buf.write(payload)
+    return buf.getvalue()
+
+
 def dumps(arrays: Dict[str, np.ndarray], fmt: Optional[str] = None,
           profile: str = "size") -> bytes:
     """Serialize a dict of ndarrays (``fmt`` in {"TGI1", "TGI2"}; default

@@ -170,6 +170,10 @@ class HistoricalGraphStore:
             "fetch_cache_entries": len(PlanExecutor._fetch_cache),
             "replay_cache_entries": len(PlanExecutor._replay_cache),
             "block_pool": self.store.pool_stats(),
+            # replica-level resilience counters (nonzero only when a
+            # storage node was down or unreachable during reads)
+            "failovers": self.store.stats.failovers,
+            "hedged_reads": self.store.stats.hedged_reads,
         }
 
     def node_1hop_history(self, nid: int, t0: int, t1: int, c: int = 1):

@@ -1,0 +1,40 @@
+"""Shared pytest plumbing.
+
+``@pytest.mark.timeout(seconds)`` — hard wall-clock bound on a single
+test, enforced with SIGALRM (no external plugin).  Socket tests carry
+it so a wedged storage cell fails the test instead of hanging CI: the
+alarm interrupts any blocking recv/accept in the main thread with a
+``TimeoutError``.  On platforms without SIGALRM the marker is a no-op.
+"""
+import signal
+
+import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "timeout(seconds): fail (not hang) if the test runs longer — "
+        "SIGALRM-based, main thread only",
+    )
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_call(item):
+    marker = item.get_closest_marker("timeout")
+    if marker is None or not hasattr(signal, "SIGALRM"):
+        yield
+        return
+    seconds = int(marker.args[0]) if marker.args else 60
+
+    def _alarm(signum, frame):
+        raise TimeoutError(
+            f"{item.nodeid} exceeded its {seconds}s timeout marker")
+
+    old = signal.signal(signal.SIGALRM, _alarm)
+    signal.alarm(seconds)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)

@@ -1,0 +1,437 @@
+"""Service plane: wire codec (fuzzed round-trips, typed rejection of
+truncated/oversized/garbage frames, version handshake), storage cells
+over sockets (projection pushed to the server, corrupt-replica
+failover across the process boundary), routed clients (parity with the
+local store under TGI, hedged multiget, node_status), and change-feed
+catch-up (kill -> write -> restart converges byte-identically)."""
+import hashlib
+import socket
+import struct
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core.tgi import TGIConfig
+from repro.data.temporal_graph_gen import generate, naive_state_at
+from repro.service import ClusterSpec, LocalCluster, StorageCell
+from repro.service import wire
+from repro.service.client import RemoteDeltaStore
+from repro.storage import serialize
+from repro.storage.kvstore import DeltaKey, DeltaStore, KeyMissing
+from repro.taf.query import HistoricalGraphStore
+
+
+# ---------------------------------------------------------------------------
+# wire codec (pure bytes — no sockets)
+# ---------------------------------------------------------------------------
+
+
+def test_frame_roundtrip_fuzz():
+    rng = np.random.RandomState(0)
+    for _ in range(200):
+        body = rng.bytes(int(rng.randint(0, 4096)))
+        mtype = int(rng.randint(1, 12))
+        req_id = int(rng.randint(0, 2**32))
+        buf = wire.encode_frame(mtype, req_id, body)
+        frame, used = wire.decode_frame(buf + b"trailing junk")
+        assert used == len(buf)
+        assert frame == wire.Frame(wire.PROTO_VERSION, mtype, req_id, body)
+
+
+def test_truncated_frames_rejected():
+    buf = wire.encode_frame(wire.MSG_GET, 7, b"x" * 100)
+    for cut in (0, 1, wire.HEADER.size - 1, wire.HEADER.size,
+                wire.HEADER.size + 50, len(buf) - 1):
+        with pytest.raises(wire.FrameError):
+            wire.decode_frame(buf[:cut])
+
+
+def test_oversized_frame_rejected():
+    # a hostile header declaring a huge body must be rejected from the
+    # 16 header bytes alone — before any allocation
+    head = wire.HEADER.pack(wire.FRAME_MAGIC, wire.PROTO_VERSION,
+                            wire.MSG_GET, 1, wire.MAX_FRAME + 1, 0)
+    with pytest.raises(wire.FrameTooLarge):
+        wire.decode_frame(head)
+    with pytest.raises(wire.FrameTooLarge):
+        wire.encode_frame(wire.MSG_PUT, 1, b"\0" * (wire.MAX_FRAME + 1))
+
+
+def test_garbage_and_corrupt_frames_rejected():
+    rng = np.random.RandomState(1)
+    for _ in range(50):
+        junk = rng.bytes(int(rng.randint(16, 256)))
+        if junk[:2] == wire.FRAME_MAGIC:
+            continue
+        with pytest.raises((wire.FrameError, wire.FrameTooLarge)):
+            wire.decode_frame(junk)
+    good = wire.encode_frame(wire.MSG_OK, 3, b"payload bytes")
+    flipped = bytearray(good)
+    flipped[-1] ^= 0xFF  # body bit-flip -> crc mismatch, typed
+    with pytest.raises(wire.FrameCorrupt):
+        wire.decode_frame(bytes(flipped))
+
+
+def test_body_codecs_roundtrip():
+    key = DeltaKey(12, 3, "S:2:11", 4)
+    k2, off = wire.unpack_key(wire.pack_key(key), 0)
+    assert k2 == key and off == len(wire.pack_key(key))
+    for fields in (None, [], ["a"], ["present", "attrs", "edge_key"]):
+        out, _ = wire.unpack_fields(wire.pack_fields(fields), 0)
+        assert out == fields
+    recs = [wire.FeedRecord(5, wire.OP_PUT, key, 100, b"\x01\x02"),
+            wire.FeedRecord(6, wire.OP_DELETE, key, 0, b"")]
+    assert wire.unpack_records(wire.pack_records(recs)) == recs
+
+
+# ---------------------------------------------------------------------------
+# handshake + single cell over a real socket
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture()
+def one_cell(tmp_path):
+    cell = StorageCell(node_id=0, n_cells=1, r=1, backend="file",
+                       root=str(tmp_path / "cell0"))
+    cell.start()
+    yield cell
+    cell.stop()
+
+
+@pytest.mark.timeout(30)
+def test_protocol_version_mismatch_handshake(one_cell):
+    with socket.create_connection(("127.0.0.1", one_cell.port),
+                                  timeout=5) as s:
+        s.settimeout(5)
+        wire.send_frame(s, wire.MSG_HELLO, 1,
+                        version=wire.PROTO_VERSION + 1)
+        reply = wire.recv_frame(s)
+    assert reply.msg_type == wire.MSG_ERR
+    code, msg = wire.unpack_err(reply.body)
+    assert code == wire.ERR_VERSION
+    assert f"v{wire.PROTO_VERSION}" in msg
+    # the client maps that rejection to a typed ProtocolMismatch
+    store = RemoteDeltaStore([("127.0.0.1", one_cell.port)], r=1)
+    orig = wire.PROTO_VERSION
+    try:
+        wire.PROTO_VERSION = orig + 1
+        with pytest.raises(wire.ProtocolMismatch):
+            store._request(0, wire.MSG_PING, b"")
+    finally:
+        wire.PROTO_VERSION = orig
+        store.close()
+
+
+@pytest.mark.timeout(60)
+def test_cell_roundtrip_and_projection_pushdown(one_cell):
+    """Column projection survives the network hop: the *server's*
+    physical file I/O for a projected GET is a fraction of the full
+    blob (the acceptance criterion's server-measured bytes_io)."""
+    store = RemoteDeltaStore([("127.0.0.1", one_cell.port)], r=1,
+                             pool_bytes=0)
+    key = DeltaKey(0, 0, "S:0:0", 0)
+    arrays = {"big": np.random.RandomState(0).randn(200_000).astype(np.float32),
+              "small": np.arange(64, dtype=np.int64)}
+    store.put(key, arrays)
+    one_cell.store.stats.reset()
+    got = store.get(key, fields=["small"])
+    assert set(got) == {"small"}
+    np.testing.assert_array_equal(got["small"], arrays["small"])
+    proj_io = one_cell.store.stats.bytes_io
+    one_cell.store.stats.reset()
+    full = store.get(key)
+    np.testing.assert_array_equal(full["big"], arrays["big"])
+    full_io = one_cell.store.stats.bytes_io
+    assert 0 < proj_io < full_io / 10, (proj_io, full_io)
+    # server-side status report agrees with the client-held accounting
+    status = store.cell_status(0)
+    assert status["n_keys"] == 1 and status["last_seq"] == 1
+    store.close()
+
+
+@pytest.mark.timeout(60)
+def test_put_delete_missing_over_wire(one_cell):
+    store = RemoteDeltaStore([("127.0.0.1", one_cell.port)], r=1)
+    key = DeltaKey(1, 0, "E:0", 0)
+    with pytest.raises(KeyMissing):
+        store.get(key)
+    store.put(key, {"x": np.arange(10)})
+    assert store.get(key)["x"].sum() == 45
+    assert store.delete(key) is True
+    store.clear_pool()
+    with pytest.raises(KeyMissing):
+        store.get(key)
+    out = store.multiget([key], missing_ok=True)
+    assert out == {}
+    store.close()
+
+
+@pytest.mark.timeout(60)
+def test_feed_since_and_seq_dedupe(one_cell):
+    key = DeltaKey(0, 0, "E:0", 0)
+    blob, raw = DeltaStore(m=1, r=1, backend="mem").encode_payload(
+        key, {"x": np.arange(32)})
+    rec = wire.FeedRecord(1, wire.OP_PUT, key, raw, blob)
+    assert one_cell.apply(rec) == (True, True)
+    assert one_cell.apply(rec) == (False, False)  # duplicate seq: dropped
+    assert [r.seq for r in one_cell.feed_since(0)] == [1]
+    assert one_cell.feed_since(1) == []
+    assert one_cell.apply(
+        wire.FeedRecord(2, wire.OP_DELETE, key, 0, b"")) == (True, True)
+    assert [r.op for r in one_cell.feed_since(0)] == [wire.OP_PUT,
+                                                      wire.OP_DELETE]
+
+
+# ---------------------------------------------------------------------------
+# clusters: parity, failover, hedging, catch-up
+# ---------------------------------------------------------------------------
+
+
+def _fill(store, n_ts=4, n_sid=3):
+    rng = np.random.RandomState(3)
+    keys = [DeltaKey(t, s, "E:0", p) for t in range(n_ts)
+            for s in range(n_sid) for p in range(2)]
+    for k in keys:
+        store.put(k, {"t": np.arange(150, dtype=np.int64) * (k.tsid + 1),
+                      "v": rng.randn(150).astype(np.float32)})
+    return keys
+
+
+@pytest.mark.timeout(120)
+def test_cluster_parity_with_local_store(tmp_path):
+    """The same TGI build + snapshot query over a 3x r=2 wire cluster
+    and over the in-process store produce identical graph state — the
+    drop-in property the client is built for."""
+    events = generate(2500, seed=11)
+    cfg = TGIConfig(n_shards=3, parts_per_shard=2, events_per_span=900,
+                    eventlist_size=128, checkpoints_per_span=4)
+    spec = ClusterSpec(n_cells=3, r=2, backend="file",
+                       root=str(tmp_path / "cluster"))
+    with LocalCluster(spec, mode="thread") as cl:
+        remote = cl.client(timeout=5.0)
+        hs = HistoricalGraphStore.build(events, cfg, store=remote)
+        t0, t1 = events.time_range()
+        for frac in (0.25, 0.8):
+            t = int(t0 + frac * (t1 - t0))
+            got = hs.tgi.get_snapshot(t, c=4)
+            want = naive_state_at(events, t, cfg.n_attrs)
+            n = max(len(got.present), len(want.present))
+            got.grow(n)
+            want.grow(n)
+            assert (got.present == want.present).all()
+            assert (got.edge_key == want.edge_key).all()
+            assert (got.edge_val == want.edge_val).all()
+        # the lazy query surface (PlanExecutor fetch) runs unchanged too
+        dens = hs.density_evolution(t0, t1, n_samples=4)
+        assert len(dens) >= 1
+        remote.close()
+
+
+@pytest.mark.timeout(120)
+def test_kill_replica_failover_and_hedging(tmp_path):
+    """One dead cell must cost zero failed reads: every key stays
+    servable through its surviving replica, the client counts the
+    failovers, and once the cell is a known suspect whole multiget
+    groups are hedged straight to the fallback."""
+    spec = ClusterSpec(n_cells=3, r=2, backend="file",
+                       root=str(tmp_path / "cluster"))
+    with LocalCluster(spec, mode="subprocess") as cl:
+        store = cl.client(timeout=2.0, retries=1, backoff=0.02,
+                          suspect_ttl=30.0)
+        keys = _fill(store)
+        cl.kill(0)
+        store.clear_pool()
+        out = store.multiget(keys, c=4)  # discovery pass: timeouts -> failover
+        assert len(out) == len(keys)
+        assert store.stats.failovers > 0
+        store.clear_pool()
+        out = store.multiget(keys, c=4)  # suspect pass: hedged batches
+        assert len(out) == len(keys)
+        assert store.stats.hedged_reads > 0
+        # single gets on a suspect node fail over without a timeout wait
+        store.clear_pool()
+        for k in keys:
+            assert "t" in store.get(k)
+        store.close()
+
+
+@pytest.mark.timeout(120)
+def test_restart_catch_up_converges_byte_identical(tmp_path):
+    """Kill a cell, keep writing (it misses records), restart it: after
+    ``feed_since`` catch-up its chunk, extent, AND feed files are byte-
+    for-byte what they would have been had it never died."""
+
+    def run(root, kill):
+        spec = ClusterSpec(n_cells=3, r=2, backend="file", root=str(root))
+        with LocalCluster(spec, mode="subprocess") as cl:
+            store = cl.client(timeout=2.0, retries=1, backoff=0.02,
+                              suspect_ttl=0.2)
+            rng = np.random.RandomState(5)
+            keys = [DeltaKey(t, s, "E:0", p) for t in range(4)
+                    for s in range(3) for p in range(2)]
+            half = len(keys) // 2
+            for k in keys[:half]:
+                store.put(k, {"t": np.arange(100, dtype=np.int64),
+                              "v": rng.randn(100).astype(np.float32)})
+            if kill:
+                cl.kill(0)
+            for k in keys[half:]:  # cell 0 misses its share of these
+                store.put(k, {"t": np.arange(100, dtype=np.int64),
+                              "v": rng.randn(100).astype(np.float32)})
+            store.delete(keys[1])
+            if kill:
+                cl.restart(0)
+            # quiesce, then verify every live key is readable cluster-wide
+            store.clear_pool()
+            store._suspects.clear()
+            for k in keys:
+                if k == keys[1]:
+                    continue
+                assert "t" in store.get(k)
+            store.close()
+        return {
+            str(p.relative_to(root)): hashlib.sha256(p.read_bytes()).hexdigest()
+            for p in sorted(Path(root, "cell0").rglob("*")) if p.is_file()
+        }
+
+    baseline = run(tmp_path / "a", kill=False)
+    recovered = run(tmp_path / "b", kill=True)
+    assert baseline == recovered
+    assert any(f.endswith(".tgi") for f in baseline)  # chunks exist
+    assert any(f.endswith(".tgx") for f in baseline)  # extents exist
+    assert "cell0/feed.log" in baseline
+
+
+@pytest.mark.timeout(90)
+def test_corrupt_replica_fails_over_across_the_wire(tmp_path):
+    """PR 5's corrupt-replica failover, across the process boundary:
+    flip payload bytes in one cell's chunk file on disk — the client's
+    per-column crc check rejects that replica's reply and the read is
+    served by the other copy."""
+    spec = ClusterSpec(n_cells=3, r=2, backend="file",
+                       root=str(tmp_path / "cluster"))
+    with LocalCluster(spec, mode="thread") as cl:
+        store = cl.client(timeout=5.0)
+        key = DeltaKey(0, 0, "E:0", 0)
+        store.put(key, {"x": np.arange(4096, dtype=np.int64)})
+        primary = store.replicas(key)[0]
+        chunk = Path(spec.cell_root(primary), "node0", "ts0_s0.tgi")
+        data = bytearray(chunk.read_bytes())
+        data[-64:] = b"\xff" * 64  # trash payload tail bytes
+        chunk.write_bytes(bytes(data))
+        cl._cells[primary].store._ext_cache.clear()  # drop cached extents
+        store.clear_pool()
+        got = store.get(key)
+        np.testing.assert_array_equal(got["x"], np.arange(4096))
+        assert store.stats.failovers > 0
+        store.close()
+
+
+@pytest.mark.timeout(60)
+def test_node_status_uniform_local_and_remote(tmp_path):
+    """Chaos tooling asserts cluster health through ONE shape, whatever
+    the backend: same keys, same per-node fields, live keys counted on
+    every replica."""
+    local = DeltaStore(m=3, r=2, backend="mem")
+    _fill(local, n_ts=2, n_sid=2)
+    local.fail_node(1)
+    ls = local.node_status()
+    spec = ClusterSpec(n_cells=3, r=2, backend="file",
+                       root=str(tmp_path / "cluster"))
+    with LocalCluster(spec, mode="thread") as cl:
+        remote = cl.client(timeout=5.0)
+        _fill(remote, n_ts=2, n_sid=2)
+        cl.kill(1)
+        rs = remote.node_status()
+        remote.close()
+    assert set(ls) == set(rs)
+    assert [set(n) for n in ls["nodes"]] == [set(n) for n in rs["nodes"]]
+    assert ls["n_down"] == rs["n_down"] == 1
+    assert [n["up"] for n in ls["nodes"]] == [n["up"] for n in rs["nodes"]]
+    # replicated keys are visible on r nodes in both worlds
+    assert sum(n["live_keys"] for n in ls["nodes"]) == \
+        sum(n["live_keys"] for n in rs["nodes"])
+
+
+def test_hedged_multiget_local_store():
+    """The hedging satellite on the in-process store: keys whose
+    primary node is down are redirected as a batch and counted."""
+    store = DeltaStore(m=4, r=2, backend="mem", pool_bytes=0)
+    keys = _fill(store)
+    down = store.replicas(keys[0])[0]
+    store.fail_node(down)
+    out = store.multiget(keys, c=4)
+    assert len(out) == len(keys)
+    assert store.stats.hedged_reads > 0
+    assert store.stats.failovers > 0
+    # node_status reflects the injected failure
+    ns = store.node_status()
+    assert ns["n_down"] == 1 and not ns["nodes"][down]["up"]
+
+
+@pytest.mark.timeout(60)
+def test_unreachable_cell_then_ttl_reprobe(tmp_path):
+    """A suspect cell is skipped for suspect_ttl seconds (no repeated
+    timeout tax), then re-probed and readmitted once it is back."""
+    spec = ClusterSpec(n_cells=2, r=2, backend="file",
+                       root=str(tmp_path / "cluster"))
+    with LocalCluster(spec, mode="subprocess") as cl:
+        store = cl.client(timeout=1.0, retries=0, backoff=0.01,
+                          suspect_ttl=0.5)
+        key = DeltaKey(0, 0, "E:0", 0)
+        store.put(key, {"x": np.arange(10)})
+        victim = store.replicas(key)[0]
+        cl.kill(victim)
+        store.clear_pool()
+        assert "x" in store.get(key)  # discovery: timeout then failover
+        assert not store._node_ok(victim)  # suspect now
+        cl.restart(victim)
+        time.sleep(0.6)  # TTL expiry readmits it
+        assert store._node_ok(victim)
+        store.clear_pool()
+        assert "x" in store.get(key)
+        store.close()
+
+
+@pytest.mark.timeout(60)
+def test_malformed_request_gets_typed_error_not_hang(one_cell):
+    """A structurally broken request body must come back as a
+    BAD_REQUEST error frame — the connection survives and the cell
+    never wedges."""
+    with socket.create_connection(("127.0.0.1", one_cell.port),
+                                  timeout=5) as s:
+        s.settimeout(5)
+        wire.send_frame(s, wire.MSG_GET, 9, b"\x01\x02\x03")  # torn key
+        reply = wire.recv_frame(s)
+        assert reply.msg_type == wire.MSG_ERR
+        code, _ = wire.unpack_err(reply.body)
+        assert code in (wire.ERR_BAD_REQUEST, wire.ERR_INTERNAL)
+        # same connection still serves good requests afterwards
+        wire.send_frame(s, wire.MSG_PING, 10)
+        reply = wire.recv_frame(s)
+        assert reply.msg_type == wire.MSG_OK
+        node, _seq = struct.unpack("<BQ", reply.body)
+        assert node == 0
+
+
+@pytest.mark.timeout(60)
+def test_remote_storage_report_through_tgi(tmp_path):
+    """TGI.storage_report carries the node_status block for remote
+    stores too — the integration the chaos tooling reads."""
+    events = generate(800, seed=2)
+    cfg = TGIConfig(n_shards=2, parts_per_shard=1, events_per_span=500,
+                    eventlist_size=64, checkpoints_per_span=2)
+    spec = ClusterSpec(n_cells=2, r=2, backend="file",
+                       root=str(tmp_path / "cluster"))
+    with LocalCluster(spec, mode="thread") as cl:
+        remote = cl.client(timeout=5.0)
+        hs = HistoricalGraphStore.build(events, cfg, store=remote)
+        rep = hs.tgi.storage_report()
+        assert rep["nodes"]["m"] == 2 and rep["nodes"]["n_down"] == 0
+        assert rep["nodes"]["backend"] == "remote"
+        assert sum(n["live_keys"] for n in rep["nodes"]["nodes"]) > 0
+        cs = hs.cache_stats()
+        assert "failovers" in cs and "hedged_reads" in cs
+        remote.close()
