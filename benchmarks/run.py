@@ -319,10 +319,11 @@ def bench_service():
     measured bytes_io of projected vs full remote reads (projection
     pushdown survives the network hop), (3) concurrent client sessions
     x concurrent queries with every cell up, (4) the same workload with
-    one replica SIGKILLed mid-bench — gate: zero failed queries
-    (timeout/retry + replica failover + hedged batches absorb the
-    crash), and (5) replica restart: change-feed catch-up records and
-    convergence (the restarted cell again holds every key it owns)."""
+    one replica SIGKILLed mid-bench — gate (asserted): zero failed
+    queries (timeout/retry + replica failover + hedged batches absorb
+    the crash), and (5) replica restart: change-feed catch-up records
+    and convergence — gate (asserted): the restarted cell again holds
+    every key it owns."""
     import tempfile
     import threading
 
@@ -424,7 +425,11 @@ def bench_service():
                 return failed[0]
 
             run_sessions("all_up")
-            failed = run_sessions("replica_killed")  # gate: must stay 0
+            failed = run_sessions("replica_killed")
+            # the resilience gate the CI smoke step runs this bench for:
+            # a SIGKILLed replica must cost ZERO failed queries
+            assert failed == 0, \
+                f"service bench: {failed} queries failed during replica kill"
 
             # --- writes the dead cell misses, then restart + catch-up ---
             extra = [DeltaKey(50 + i, i % 3, "E:1", 0)
@@ -437,10 +442,16 @@ def bench_service():
             all_keys = keys + probe + extra
             owned = sum(1 for k in all_keys if 0 in store.replicas(k))
             status = store.cell_status(0)
+            converged = status["n_keys"] == owned
             _row("service/replica_catchup", dt * 1e6,
                  f"owned_keys={owned};recovered_keys={status['n_keys']};"
-                 f"converged={status['n_keys'] == owned};"
+                 f"converged={converged};"
                  f"killed_phase_failed={failed}")
+            # second gate: the restarted replica must hold every key it
+            # owns again (feed catch-up actually converged)
+            assert converged, \
+                f"service bench: catch-up left {owned - status['n_keys']} " \
+                f"of {owned} owned keys missing on the restarted cell"
             store.close()
 
 

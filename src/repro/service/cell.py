@@ -14,10 +14,15 @@ write history in arrival order.  Because the client serializes writes
 (one fan-out at a time), arrival order IS seq order, which makes a
 cell's chunk/extent/feed files a pure function of its record set: a
 killed-and-restarted cell that replays the records it missed via
-``feed_since(last_seq)`` from its peers, in seq order, converges to
+``feed_since`` from its peers, in seq order, converges to
 byte-identical files.  Duplicate deliveries (client retries, catch-up
-racing a live write) are dropped by seq: a record is applied iff
-``seq > boot_last_seq`` and it has not been applied since boot.
+racing a live write) are dropped by seq: every applied seq — including
+those replayed from ``feed.log`` at boot — lives in an applied-seq
+set, so catch-up can refetch the *whole* peer feed and repair interior
+gaps (a transiently missed PUT below ``last_seq``), not just the tail.
+A per-key max-seq guard keeps an out-of-order repair from regressing a
+key past a newer applied write: the late record is stamped into the
+feed (it is no longer a gap) but the store mutation is skipped.
 
 The server is a plain threaded accept loop — one thread per
 connection, blocking frame reads, every reply framed under
@@ -64,9 +69,14 @@ class StorageCell:
         # disagree with the store.
         self._feed: List[wire.FeedRecord] = []
         self._flock = threading.Lock()
-        self._applied: set = set()  # seqs applied since boot (dedupe)
+        # every seq this cell has ever applied (rebuilt from feed.log at
+        # boot) — the dedupe that lets catch-up refetch from seq 0 and
+        # repair interior gaps without double-applying anything
+        self._applied: set = set()
+        # per-key max applied seq: an out-of-order gap repair must never
+        # regress a key past a newer write already applied
+        self._key_seq: Dict[Tuple, int] = {}
         self.last_seq = 0
-        self.boot_last_seq = 0
         self._load_feed()
         self._lsock: Optional[socket.socket] = None
         self._stop = threading.Event()
@@ -78,43 +88,72 @@ class StorageCell:
         return None if self.root is None else self.root / "feed.log"
 
     def _load_feed(self) -> None:
-        """Boot: rebuild ``last_seq`` and the store's per-key size
-        accounting from ``feed.log``.  The chunk/extent files already
-        hold the data (the store's file backend persists), so records
-        are NOT re-applied — only the bookkeeping is replayed."""
+        """Boot: rebuild ``last_seq``, the applied-seq set, the per-key
+        seq watermarks, and the store's size accounting from
+        ``feed.log``.  The chunk/extent files already hold the data (the
+        store's file backend persists), so records are NOT re-applied —
+        only the bookkeeping is replayed.
+
+        The feed append in ``apply`` is not atomic and cells are killed
+        with SIGKILL, so a torn last record is an expected crash
+        artifact: any record that fails to decode is treated as the torn
+        tail — the log is truncated back to the last whole record and
+        catch-up refetches whatever the lost suffix held."""
         path = self._feed_path()
         if path is None or not path.exists():
             return
         data = path.read_bytes()
         off = 0
+        good = 0  # byte offset of the last cleanly decoded record's end
         while off < len(data):
-            rec, off = wire.FeedRecord.unpack(data, off)
+            try:
+                rec, off = wire.FeedRecord.unpack(data, off)
+            except (wire.WireError, struct.error, IndexError,
+                    UnicodeDecodeError):
+                with open(path, "r+b") as f:  # torn tail: drop it
+                    f.truncate(good)
+                break
+            good = off
             self._feed.append(rec)
+            self._applied.add(rec.seq)
             self.last_seq = max(self.last_seq, rec.seq)
-            if rec.op == wire.OP_PUT:
-                self.store.key_sizes[rec.key] = (rec.raw_bytes, len(rec.blob))
-            else:
-                self.store.key_sizes.pop(rec.key, None)
-        self.boot_last_seq = self.last_seq
+            if rec.seq >= self._key_seq.get(rec.key, 0):
+                self._key_seq[rec.key] = rec.seq
+                if rec.op == wire.OP_PUT:
+                    self.store.key_sizes[rec.key] = (rec.raw_bytes,
+                                                     len(rec.blob))
+                else:
+                    self.store.key_sizes.pop(rec.key, None)
 
     def _owns(self, key) -> bool:
         return self.node_id in replica_nodes(key.tsid, key.sid,
                                              self.n_cells, self.r)
 
     def apply(self, rec: wire.FeedRecord) -> Tuple[bool, bool]:
-        """Apply one feed record (a wire PUT/DELETE or a catch-up
-        replay); returns ``(applied, existed)``.  Duplicates — client
-        retries after a lost ack, catch-up overlapping a live write —
-        are detected by seq and acked without touching the store, so a
-        record can never double-append to the chunk files."""
+        """Apply one feed record (a wire PUT/DELETE, a catch-up replay,
+        or a client gap redelivery); returns ``(applied, existed)``.
+        Duplicates — client retries after a lost ack, catch-up
+        overlapping a live write — are detected against the full
+        applied-seq set (which survives restarts via ``feed.log``) and
+        acked without touching the store, so a record can never
+        double-append to the chunk files.  A record older than the key's
+        newest applied write (an interior-gap repair arriving after the
+        writes that superseded it) is stamped into the feed — the seq is
+        no longer a gap, and peers replicating this feed dedupe it the
+        same way — but the store mutation is skipped so the key never
+        regresses to a stale version."""
         with self._flock:
-            if rec.seq <= self.boot_last_seq or rec.seq in self._applied:
+            if rec.seq in self._applied:
                 return False, False
-            if rec.op == wire.OP_PUT:
-                self.store.put_encoded(rec.key, rec.blob, rec.raw_bytes)
-                existed = True
+            if rec.seq >= self._key_seq.get(rec.key, 0):
+                self._key_seq[rec.key] = rec.seq
+                if rec.op == wire.OP_PUT:
+                    self.store.put_encoded(rec.key, rec.blob, rec.raw_bytes)
+                    existed = True
+                else:
+                    existed = self.store.delete(rec.key)
             else:
-                existed = self.store.delete(rec.key)
+                existed = False  # superseded: recorded, not applied
             self._feed.append(rec)
             self._applied.add(rec.seq)
             self.last_seq = max(self.last_seq, rec.seq)
@@ -132,11 +171,17 @@ class StorageCell:
     def catch_up(self, peers: List[Tuple[str, int]],
                  timeout: float = 5.0) -> int:
         """Converge with the cluster after a restart: pull every peer's
-        feed tail past our ``last_seq``, keep the records whose key's
-        replica chain includes this cell, and apply them in seq order.
-        Returns the number of records applied.  Unreachable peers are
-        skipped — with r-way replication any single live peer of a key
-        suffices."""
+        FULL feed (``feed_since(0)``), keep the records whose key's
+        replica chain includes this cell and whose seq is not already in
+        the applied set, and apply them in seq order.  Returns the
+        number of records applied.  Fetching from 0 rather than from
+        ``last_seq`` is what repairs *interior* gaps — a PUT this cell
+        missed while live (transient timeout) below a seq it did accept
+        would be invisible to a tail-only pull and would otherwise serve
+        silently stale reads forever; the applied-seq set makes the full
+        refetch cheap to dedupe and impossible to double-apply.
+        Unreachable peers are skipped — with r-way replication any
+        single live peer of a key suffices."""
         fetched: Dict[int, wire.FeedRecord] = {}
         for host, port in peers:
             try:
@@ -144,12 +189,12 @@ class StorageCell:
                                               timeout=timeout) as s:
                     s.settimeout(timeout)
                     wire.send_frame(s, wire.MSG_FEED_SINCE, 0,
-                                    struct.pack("<Q", self.last_seq))
+                                    struct.pack("<Q", 0))
                     reply = wire.recv_frame(s)
                 if reply.msg_type != wire.MSG_OK:
                     continue
                 for rec in wire.unpack_records(reply.body):
-                    if self._owns(rec.key):
+                    if rec.seq not in self._applied and self._owns(rec.key):
                         fetched.setdefault(rec.seq, rec)
             except (OSError, wire.WireError):
                 continue
@@ -228,8 +273,8 @@ class StorageCell:
                 except KeyMissing as e:
                     mtype, body = wire.MSG_ERR, wire.pack_err(
                         wire.ERR_KEY_MISSING, str(e.args[0]))
-                except (struct.error, IndexError, UnicodeDecodeError,
-                        AssertionError) as e:
+                except (wire.WireError, struct.error, IndexError,
+                        UnicodeDecodeError, AssertionError) as e:
                     mtype, body = wire.MSG_ERR, wire.pack_err(
                         wire.ERR_BAD_REQUEST, f"{type(e).__name__}: {e}")
                 except Exception as e:  # noqa: BLE001 — relay, don't die

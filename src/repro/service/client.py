@@ -25,8 +25,22 @@ monotonic ``seq`` and fanned out to the key's replica cells while the
 writer lock is held — writes are serialized, so every cell receives
 its records in seq order, which is what makes change-feed catch-up
 (``StorageCell.catch_up``) converge to byte-identical files.  A write
-is acknowledged when at least one replica cell accepted it; cells that
-were down catch up from their peers' feeds on restart.
+(put OR delete) succeeds only when at least one replica cell accepted
+it — otherwise it raises ``StorageNodeDown`` with the local accounting
+untouched.  A replica that missed an acknowledged write (down,
+suspect, or a transient failure) gets the record queued on a per-node
+*redelivery queue*: the queue is drained, in seq order, before that
+node serves any further read or receives any further write from this
+client, so a cell with an interior feed gap this client created can
+never serve it a stale version — and a restarting cell additionally
+repairs gaps from any writer via the full-feed ``catch_up`` pull.
+
+Attaching requires every cell to answer a PING: the write seq resumes
+from the cluster-wide high-water mark, and a cell that is unreachable
+at attach time could be the only holder of the newest seqs — stamping
+over them would be silently dropped by the cells' dedupe.  Pass
+``require_full_attach=False`` to accept that risk explicitly (e.g. a
+read-only session against a degraded cluster).
 """
 from __future__ import annotations
 
@@ -51,7 +65,8 @@ class RemoteDeltaStore(DeltaStore):
                  fmt: Optional[str] = None,
                  pool_bytes: int = DEFAULT_POOL_BYTES,
                  timeout: float = 5.0, retries: int = 2,
-                 backoff: float = 0.05, suspect_ttl: float = 2.0):
+                 backoff: float = 0.05, suspect_ttl: float = 2.0,
+                 require_full_attach: bool = True):
         super().__init__(m=len(addrs), r=r, backend="mem", fmt=fmt,
                          pool_bytes=pool_bytes)
         self.backend = "remote"
@@ -65,18 +80,31 @@ class RemoteDeltaStore(DeltaStore):
         self._conn_lock = threading.Lock()
         self._req_id = 0
         self._wlock = threading.Lock()
+        # per-node redelivery queues: (seq, msg_type, body) of replica
+        # writes that node missed, drained in seq order before the node
+        # serves any further read/write from this client (gap repair)
+        self._pending: List[List[Tuple[int, int, bytes]]] = [[] for _ in addrs]
         # resume the global write sequence from the cluster's high-water
-        # mark, so a fresh client attaching to live cells can never
-        # stamp a seq the feeds have already seen (which dedupe would
-        # silently drop)
+        # mark, so a fresh client attaching can never stamp a seq the
+        # feeds have already seen (which dedupe would silently drop).
+        # The mark is only trustworthy if EVERY cell answered — an
+        # unreachable cell could be the sole holder of the newest seqs.
         self._seq = 0
+        unreachable: List[int] = []
         for i in range(self.m):
             try:
                 _, last_seq = struct.unpack(
                     "<BQ", self._request(i, wire.MSG_PING, b"", retries=0))
                 self._seq = max(self._seq, last_seq)
             except NodeUnavailable:
+                unreachable.append(i)
                 self._mark_unavailable(i)
+        if unreachable and require_full_attach:
+            self.close()
+            raise StorageNodeDown(
+                f"cells {unreachable} unreachable at attach: the write-seq "
+                f"high-water mark cannot be resumed safely (pass "
+                f"require_full_attach=False for a degraded attach)")
 
     # ---- connection pool ----
     def _dial(self, node: int) -> socket.socket:
@@ -164,7 +192,10 @@ class RemoteDeltaStore(DeltaStore):
             f"cell {node} @ {self.addrs[node]}: {last}") from last
 
     # ---- node health (suspect set with re-probe TTL) ----
-    def _node_ok(self, i: int) -> bool:
+    def _health_ok(self, i: int) -> bool:
+        """Pure reachability check: not down, not a live suspect.  Safe
+        to call while holding ``_wlock`` (no side effects beyond TTL
+        expiry of the suspect mark)."""
         if i in self.down:
             return False
         t = self._suspects.get(i)
@@ -175,8 +206,47 @@ class RemoteDeltaStore(DeltaStore):
             return True
         return False
 
+    def _node_ok(self, i: int) -> bool:
+        """The routing gate the (inherited) read paths consult.  On top
+        of reachability, a node with queued redeliveries is *gap-known*:
+        it missed acknowledged writes, so a read routed there could
+        return a stale version with a valid crc — no failover would
+        trigger.  Drain the queue first; if the node still can't take
+        the backlog, treat it as unavailable and let the read fail over
+        to a replica that has the writes."""
+        if not self._health_ok(i):
+            return False
+        if self._pending[i]:
+            with self._wlock:
+                if self._pending[i] and not self._drain_pending(i):
+                    return False
+        return True
+
     def _mark_unavailable(self, i: int) -> None:
         self._suspects[i] = time.monotonic()
+
+    def _drain_pending(self, node: int) -> bool:
+        """Redeliver ``node``'s queued writes in seq order; True when
+        the queue is empty.  Caller holds ``_wlock`` — the drain must
+        serialize with live writes so the node keeps seeing seqs in
+        order.  A failed redelivery re-marks the node suspect and keeps
+        the rest of the queue (including on RemoteError: dropping a
+        record would silently re-open the gap; restart catch-up remains
+        the backstop for a persistently failing cell)."""
+        q = self._pending[node]
+        while q:
+            _seq, mtype, body = q[0]
+            try:
+                self._request(node, mtype, body)
+            except NodeUnavailable:
+                self._mark_unavailable(node)
+                return False
+            except wire.RemoteError:
+                return False
+            q.pop(0)
+            with self._lock:
+                self.stats.redelivered += 1
+        return True
 
     # ---- physical I/O overrides (everything above is inherited) ----
     def _read_columns(self, node: int, key: DeltaKey,
@@ -191,23 +261,39 @@ class RemoteDeltaStore(DeltaStore):
         self._pool_dir_fill(key, blob)
         return arrays, enc_read, raw_read
 
+    def _fan_out(self, key: DeltaKey, seq: int, msg_type: int,
+                 body: bytes) -> List[bytes]:
+        """Send one stamped record to every replica cell of ``key``
+        (caller holds ``_wlock``).  A reachable node first drains its
+        redelivery backlog so it keeps receiving seqs in order; a node
+        that is suspect or fails gets the record queued for redelivery
+        instead.  Returns the replies of the cells that acked — if NONE
+        did, the write failed: nothing is queued (a record the caller
+        saw fail must not materialize later) and ``StorageNodeDown`` is
+        raised."""
+        acked: List[bytes] = []
+        missed: List[int] = []
+        for node in self.replicas(key):
+            if self._health_ok(node) and self._drain_pending(node):
+                try:
+                    acked.append(self._request(node, msg_type, body))
+                    continue
+                except NodeUnavailable:
+                    self._mark_unavailable(node)
+            missed.append(node)
+        if not acked:
+            raise StorageNodeDown(f"all replica cells down for {key}")
+        for node in missed:
+            self._pending[node].append((seq, msg_type, body))
+        return acked
+
     def put_encoded(self, key: DeltaKey, blob: bytes, raw_bytes: int):
         with self._wlock:
             self._seq += 1
-            seq = self._seq
-            body = (wire.pack_key(key) + struct.pack("<QQ", seq, raw_bytes)
+            body = (wire.pack_key(key)
+                    + struct.pack("<QQ", self._seq, raw_bytes)
                     + wire.pack_blob(blob))
-            wrote = False
-            for node in self.replicas(key):
-                if not self._node_ok(node):
-                    continue
-                try:
-                    self._request(node, wire.MSG_PUT, body)
-                    wrote = True
-                except NodeUnavailable:
-                    self._mark_unavailable(node)
-            if not wrote:
-                raise StorageNodeDown(f"all replica cells down for {key}")
+            self._fan_out(key, self._seq, wire.MSG_PUT, body)
         if self.pool is not None:
             self.pool.invalidate(key)
         with self._lock:
@@ -217,18 +303,16 @@ class RemoteDeltaStore(DeltaStore):
             self.key_sizes[key] = (raw_bytes, len(blob))
 
     def delete(self, key: DeltaKey) -> bool:
+        """Like ``put_encoded``, a delete must be acked by at least one
+        replica cell — otherwise no DELETE record exists in any feed
+        (the seq would be a permanent gap and the key would stay live on
+        the cluster), so it raises ``StorageNodeDown`` with the local
+        accounting untouched instead of silently 'succeeding'."""
         with self._wlock:
             self._seq += 1
             body = wire.pack_key(key) + struct.pack("<Q", self._seq)
-            existed = False
-            for node in self.replicas(key):
-                if not self._node_ok(node):
-                    continue
-                try:
-                    reply = self._request(node, wire.MSG_DELETE, body)
-                    existed |= bool(reply[0])
-                except NodeUnavailable:
-                    self._mark_unavailable(node)
+            replies = self._fan_out(key, self._seq, wire.MSG_DELETE, body)
+            existed = any(bool(rep[0]) for rep in replies)
         if self.pool is not None:
             self.pool.invalidate(key)
         with self._lock:

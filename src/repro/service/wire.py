@@ -173,14 +173,22 @@ def recv_frame(sock: socket.socket) -> Frame:
 # ---------------------------------------------------------------------------
 
 
+def _need(buf: bytes, off: int, n: int, what: str) -> None:
+    if off + n > len(buf):
+        raise FrameError(f"truncated {what}: need {n} bytes at offset {off}, "
+                         f"have {len(buf) - off}")
+
+
 def pack_str(s: str) -> bytes:
     b = s.encode()
     return struct.pack("<H", len(b)) + b
 
 
 def unpack_str(buf: bytes, off: int) -> Tuple[str, int]:
+    _need(buf, off, 2, "string length")
     (n,) = struct.unpack_from("<H", buf, off)
     off += 2
+    _need(buf, off, n, "string body")
     return buf[off:off + n].decode(), off + n
 
 
@@ -223,8 +231,10 @@ def pack_blob(b: bytes) -> bytes:
 
 
 def unpack_blob(buf: bytes, off: int) -> Tuple[bytes, int]:
+    _need(buf, off, 4, "blob length")
     (n,) = struct.unpack_from("<I", buf, off)
     off += 4
+    _need(buf, off, n, "blob body")
     return bytes(buf[off:off + n]), off + n
 
 

@@ -107,6 +107,10 @@ class StoreStats:
     # replica because their node was known-unavailable at batch start
     # (hedged as a group, not rediscovered per key)
     hedged_reads: int = 0
+    # replica writes that failed (or were skipped on a suspect node) and
+    # were later delivered from the client's per-node redelivery queue —
+    # the live repair that closes interior feed gaps (remote store only)
+    redelivered: int = 0
     # decoded-block pool accounting — pool hits are NEVER counted as
     # physical decodes (bytes_decompressed), so FetchCost stays truthful
     pool_hits: int = 0  # columns served from the pool
@@ -119,7 +123,7 @@ class StoreStats:
         self.bytes_read = self.bytes_written = 0
         self.bytes_raw_written = self.bytes_decompressed = 0
         self.bytes_deleted = 0
-        self.failovers = self.hedged_reads = 0
+        self.failovers = self.hedged_reads = self.redelivered = 0
         self.pool_hits = self.pool_misses = self.bytes_pool_served = 0
         self.bytes_io = 0
 

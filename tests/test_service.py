@@ -86,6 +86,25 @@ def test_body_codecs_roundtrip():
     assert wire.unpack_records(wire.pack_records(recs)) == recs
 
 
+def test_truncated_body_codecs_raise_not_truncate():
+    """Every strict prefix of a packed string/blob/feed record must
+    raise a typed error — silent short-slice truncation is how a torn
+    feed tail used to masquerade as a valid record."""
+    s = wire.pack_str("hello world")
+    for cut in range(len(s)):
+        with pytest.raises(wire.FrameError):
+            wire.unpack_str(s[:cut], 0)
+    b = wire.pack_blob(b"payload bytes")
+    for cut in range(len(b)):
+        with pytest.raises(wire.FrameError):
+            wire.unpack_blob(b[:cut], 0)
+    rec = wire.FeedRecord(9, wire.OP_PUT, DeltaKey(1, 2, "E:0", 3),
+                          64, b"block bytes").pack()
+    for cut in range(len(rec)):
+        with pytest.raises((wire.WireError, struct.error)):
+            wire.FeedRecord.unpack(rec[:cut], 0)
+
+
 # ---------------------------------------------------------------------------
 # handshake + single cell over a real socket
 # ---------------------------------------------------------------------------
@@ -414,6 +433,182 @@ def test_malformed_request_gets_typed_error_not_hang(one_cell):
         assert reply.msg_type == wire.MSG_OK
         node, _seq = struct.unpack("<BQ", reply.body)
         assert node == 0
+
+
+# ---------------------------------------------------------------------------
+# gap repair: redelivery queues, full-feed catch-up, torn feed tails
+# ---------------------------------------------------------------------------
+
+
+def _encode(key, arrays):
+    return DeltaStore(m=1, r=1, backend="mem").encode_payload(key, arrays)
+
+
+@pytest.mark.timeout(60)
+def test_interior_gap_repaired_by_redelivery(tmp_path):
+    """A replica that missed an acknowledged write while transiently
+    down must NOT serve the stale previous version once it is back: the
+    client drains its redelivery queue for that node before routing a
+    read to it (the record reaches the node even though no restart
+    catch-up ever ran)."""
+    from repro.storage.kvstore import replica_nodes
+
+    cells = {}
+
+    def spawn(node, port=0):
+        c = StorageCell(node_id=node, n_cells=2, r=2, backend="file",
+                        root=str(tmp_path / f"cell{node}"), port=port)
+        c.start()  # deliberately NO peers: boot catch-up stays out of it
+        cells[node] = c
+        return c
+
+    a, b = spawn(0), spawn(1)
+    # key whose PRIMARY replica is cell 1 — reads route there first
+    key = DeltaKey(1, 0, "E:0", 0)
+    assert replica_nodes(key.tsid, key.sid, 2, 2)[0] == 1
+    store = RemoteDeltaStore([("127.0.0.1", a.port), ("127.0.0.1", b.port)],
+                             r=2, timeout=1.0, retries=0, backoff=0.01,
+                             suspect_ttl=60.0, pool_bytes=0)
+    store.put(key, {"x": np.zeros(64, dtype=np.int64)})     # seq 1: both
+    b.stop()
+    v2 = np.arange(64, dtype=np.int64)
+    store.put(key, {"x": v2})  # seq 2: acked by cell 0, queued for cell 1
+    assert store._pending[1], "missed replica write must be queued"
+    spawn(1)  # cell 1 returns (fresh port), still missing seq 2
+    store.addrs[1] = ("127.0.0.1", cells[1].port)
+    store._suspects.clear()
+    got = store.get(key)   # routed to cell 1 -> drain queue first
+    np.testing.assert_array_equal(got["x"], v2)
+    assert store.stats.redelivered >= 1
+    assert not store._pending[1]
+    assert cells[1].last_seq == 2
+    store.close()
+    for c in cells.values():
+        c.stop()
+
+
+@pytest.mark.timeout(60)
+def test_catch_up_repairs_interior_gaps(tmp_path):
+    """Restart catch-up pulls the FULL peer feed and dedupes by the
+    applied-seq set, so a seq hole *below* the cell's last_seq (a write
+    missed while live) is repaired — and a repair arriving after a
+    newer write of the same key is recorded without regressing it."""
+    key1 = DeltaKey(0, 0, "E:0", 0)
+    key2 = DeltaKey(2, 0, "E:0", 0)
+    b1, r1 = _encode(key1, {"x": np.arange(16, dtype=np.int64)})
+    b2, r2 = _encode(key2, {"x": np.arange(32, dtype=np.int64)})
+    b3, r3 = _encode(key1, {"x": np.arange(16, dtype=np.int64) * 7})
+    recs = [wire.FeedRecord(1, wire.OP_PUT, key1, r1, b1),
+            wire.FeedRecord(2, wire.OP_PUT, key2, r2, b2),
+            wire.FeedRecord(3, wire.OP_PUT, key1, r3, b3)]
+    peer = StorageCell(node_id=0, n_cells=2, r=2, backend="file",
+                       root=str(tmp_path / "peer"))
+    for rec in recs:
+        peer.apply(rec)
+    peer.start()
+    # the gapped cell saw only seq 3: seqs 1 AND 2 are interior holes
+    cell = StorageCell(node_id=1, n_cells=2, r=2, backend="file",
+                       root=str(tmp_path / "gapped"))
+    cell.apply(recs[2])
+    assert cell.last_seq == 3
+    applied = cell.catch_up([("127.0.0.1", peer.port)])
+    assert applied == 2  # both holes backfilled
+    assert sorted(cell._applied) == [1, 2, 3]
+    # the missed key materialized...
+    arrays, _, _ = serialize.loads_sized(cell.store.get_encoded(key2, None))
+    np.testing.assert_array_equal(arrays["x"], np.arange(32))
+    # ...and the late seq-1 repair did NOT regress key1 past seq 3
+    arrays, _, _ = serialize.loads_sized(cell.store.get_encoded(key1, None))
+    np.testing.assert_array_equal(arrays["x"], np.arange(16) * 7)
+    # a second catch-up is a no-op: everything dedupes
+    assert cell.catch_up([("127.0.0.1", peer.port)]) == 0
+    peer.stop()
+    cell.stop()
+
+
+@pytest.mark.timeout(60)
+def test_torn_feed_tail_truncated_then_refetched(tmp_path):
+    """SIGKILL can tear the last feed.log record.  Boot must not die
+    (restart/catch-up would be impossible) and must not load a silently
+    corrupt record (it would be served to catching-up peers): the torn
+    tail is truncated and the lost suffix comes back via catch-up."""
+    root = tmp_path / "cell"
+    key1 = DeltaKey(0, 0, "E:0", 0)
+    key2 = DeltaKey(1, 0, "E:0", 0)
+    b1, r1 = _encode(key1, {"x": np.arange(8, dtype=np.int64)})
+    b2, r2 = _encode(key2, {"x": np.arange(24, dtype=np.int64)})
+    rec1 = wire.FeedRecord(1, wire.OP_PUT, key1, r1, b1)
+    rec2 = wire.FeedRecord(2, wire.OP_PUT, key2, r2, b2)
+    cell = StorageCell(node_id=0, n_cells=1, r=1, backend="file",
+                       root=str(root))
+    cell.apply(rec1)
+    cell.stop()
+    feed = root / "feed.log"
+    whole = feed.read_bytes()
+    for torn_tail in (rec2.pack()[:11], b"\xff" * 17):
+        feed.write_bytes(whole + torn_tail)
+        reborn = StorageCell(node_id=0, n_cells=1, r=1, backend="file",
+                             root=str(root))
+        assert reborn.last_seq == 1 and len(reborn._feed) == 1
+        assert feed.read_bytes() == whole  # torn tail truncated away
+        reborn.stop()
+    # the lost record is refetched from a peer that has it
+    peer = StorageCell(node_id=0, n_cells=1, r=1, backend="file",
+                       root=str(tmp_path / "peer"))
+    peer.apply(rec1)
+    peer.apply(rec2)
+    peer.start()
+    reborn = StorageCell(node_id=0, n_cells=1, r=1, backend="file",
+                         root=str(root))
+    assert reborn.catch_up([("127.0.0.1", peer.port)]) == 1
+    assert reborn.last_seq == 2
+    arrays, _, _ = serialize.loads_sized(reborn.store.get_encoded(key2, None))
+    np.testing.assert_array_equal(arrays["x"], np.arange(24))
+    peer.stop()
+    reborn.stop()
+
+
+@pytest.mark.timeout(60)
+def test_delete_with_all_replicas_down_raises(one_cell):
+    """A delete no replica acked must raise StorageNodeDown (like put)
+    with the local accounting untouched — not silently 'succeed' while
+    the key stays live on the cluster."""
+    from repro.storage.kvstore import StorageNodeDown
+
+    store = RemoteDeltaStore([("127.0.0.1", one_cell.port)], r=1,
+                             timeout=1.0, retries=0, backoff=0.01)
+    key = DeltaKey(0, 0, "E:0", 0)
+    store.put(key, {"x": np.arange(10)})
+    one_cell.stop()
+    with pytest.raises(StorageNodeDown):
+        store.delete(key)
+    assert key in store.key_sizes  # accounting untouched by the failure
+    assert store.stats.n_deletes == 0
+    store.close()
+
+
+@pytest.mark.timeout(60)
+def test_attach_requires_every_cell_reachable(tmp_path):
+    """A fresh client must refuse to attach while any cell is down: the
+    write-seq high-water mark could live only on the dead cell, and
+    re-stamping its seqs would be silently dropped by dedupe.  An
+    explicit require_full_attach=False still allows degraded reads."""
+    from repro.storage.kvstore import StorageNodeDown
+
+    spec = ClusterSpec(n_cells=2, r=2, backend="file",
+                       root=str(tmp_path / "cluster"))
+    with LocalCluster(spec, mode="thread") as cl:
+        w = cl.client(timeout=1.0, retries=0, backoff=0.01)
+        key = DeltaKey(0, 0, "E:0", 0)
+        w.put(key, {"x": np.arange(12)})
+        w.close()
+        cl.kill(0)
+        with pytest.raises(StorageNodeDown):
+            cl.client(timeout=1.0, retries=0, backoff=0.01)
+        ro = cl.client(timeout=1.0, retries=0, backoff=0.01,
+                       require_full_attach=False)
+        assert "x" in ro.get(key)  # served by the surviving replica
+        ro.close()
 
 
 @pytest.mark.timeout(60)
