@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the temporal PageRank kernel: the identical
+damped power iteration (uniform dangling-mass redistribution, fixed
+iteration count, inactive nodes pinned to 0), vmapped over timepoints.
+Operation order matches the kernel exactly, so interpret-mode runs are
+bit-identical; native TPU lowering stays within float32 tolerance."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pagerank_ref(adj, active, damping: float = 0.85, iters: int = 20):
+    """adj: (T, N, N) symmetric dense adjacency; active: (T, N) mask.
+    Returns ranks (T, N) f32."""
+    adj = jnp.asarray(adj, jnp.float32)
+    active = jnp.asarray(active, jnp.float32)
+
+    def one(a, act):
+        act = act.reshape(1, -1)
+        deg = jnp.sum(a, axis=0, keepdims=True)
+        n = jnp.maximum(jnp.sum(act), 1.0)
+        r = act / n
+        dangling_mask = act * (deg == 0).astype(jnp.float32)
+        for _ in range(iters):
+            contrib = jnp.where(deg > 0, r / jnp.maximum(deg, 1.0), 0.0)
+            nxt = jnp.dot(contrib, a, preferred_element_type=jnp.float32)
+            dangling = jnp.sum(r * dangling_mask)
+            r = act * ((1.0 - damping) / n + damping * (nxt + dangling / n))
+        return r.reshape(-1)
+
+    return jax.vmap(one)(adj, active)

@@ -1,10 +1,10 @@
-from repro.taf import analytics, operators, replay
+from repro.taf import analytics, compile, operators, replay
 from repro.taf.plan import Plan, PlanExecutor, PlanResult
 from repro.taf.query import HistoricalGraphStore, TemporalQuery
 from repro.taf.son import SoN, SoTS, build_son, build_sots
 
 __all__ = [
     "HistoricalGraphStore", "TemporalQuery", "Plan", "PlanExecutor",
-    "PlanResult", "analytics", "operators", "replay", "SoN", "SoTS",
-    "build_son", "build_sots",
+    "PlanResult", "analytics", "compile", "operators", "replay", "SoN",
+    "SoTS", "build_son", "build_sots",
 ]

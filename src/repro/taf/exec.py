@@ -24,7 +24,31 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.taf import replay
 from repro.taf.son import SoN, build_son
+
+STATS = {
+    "operand_transfers": 0,   # host->device uploads of a padded operand
+    "operand_cache_hits": 0,  # style="kernel" runs served device-resident
+}
+
+# device-resident padded operands for style="kernel" computes, keyed
+# (operand_key(son), worker count) and weakref-guarded like the replay
+# LRU: re-running a kernel (or a different kernel) over the same operand
+# re-transfers nothing
+_OPERAND_CACHE = replay.ReplayCache(maxsize=16)
+
+# jitted shard_map programs keyed on (kernel compile identity, workers,
+# operand shapes): repeated runs skip re-trace.  Kernel factories tag
+# their closures with ``compile_key`` so equal-parameter kernels share
+# one program; untagged kernels key on object identity.
+_FN_CACHE: Dict = {}
+_FN_CACHE_MAX = 32
+
+
+def clear_device_caches() -> None:
+    _OPERAND_CACHE.clear()
+    _FN_CACHE.clear()
 
 
 def make_worker_mesh():
@@ -63,12 +87,21 @@ def sharded_node_compute(son: SoN, kernel: Callable, mesh=None,
     """
     mesh = mesh or make_worker_mesh()
     W = mesh.devices.size
-    pads = son.padded_events()
-    present = _pad_to_multiple(son.init_present.astype(np.int32), W, -1)
-    attrs = _pad_to_multiple(son.init_attrs, W, -1)
-    ev_t = _pad_to_multiple(pads["t"], W, np.iinfo(np.int64).max)
-    ev_kind = _pad_to_multiple(pads["kind"], W, -1)
-    ev_val = _pad_to_multiple(pads["val"], W, -1)
+    okey = (replay.operand_key(son), W)
+    operands = _OPERAND_CACHE.get(okey, owner=son)
+    if operands is None:
+        STATS["operand_transfers"] += 1
+        pads = son.padded_events()
+        operands = tuple(jnp.asarray(a) for a in (
+            _pad_to_multiple(son.init_present.astype(np.int32), W, -1),
+            _pad_to_multiple(son.init_attrs, W, -1),
+            _pad_to_multiple(pads["t"], W, np.iinfo(np.int64).max),
+            _pad_to_multiple(pads["kind"], W, -1),
+            _pad_to_multiple(pads["val"], W, -1),
+        ))
+        _OPERAND_CACHE.put(okey, operands, owner=son)
+    else:
+        STATS["operand_cache_hits"] += 1
 
     from jax.sharding import PartitionSpec as P
 
@@ -77,16 +110,21 @@ def sharded_node_compute(son: SoN, kernel: Callable, mesh=None,
     if shard_map is None:
         from jax.experimental.shard_map import shard_map  # jax<0.7 fallback
 
-    fn = shard_map(
-        lambda *a: kernel(*a),
-        mesh=mesh,
-        in_specs=(spec,) * 5,
-        out_specs=spec,
-    )
-    out = fn(
-        jnp.asarray(present), jnp.asarray(attrs), jnp.asarray(ev_t),
-        jnp.asarray(ev_kind), jnp.asarray(ev_val)
-    )
+    fkey = (getattr(kernel, "compile_key", None) or id(kernel),
+            tuple(int(d.id) for d in mesh.devices.flat),
+            tuple((a.shape, str(a.dtype)) for a in operands))
+    fn = _FN_CACHE.get(fkey)
+    if fn is None:
+        fn = jax.jit(shard_map(
+            lambda *a: kernel(*a),
+            mesh=mesh,
+            in_specs=(spec,) * 5,
+            out_specs=spec,
+        ))
+        if len(_FN_CACHE) >= _FN_CACHE_MAX:
+            _FN_CACHE.clear()
+        _FN_CACHE[fkey] = fn
+    out = fn(*operands)
     return np.asarray(out)[: len(son)]
 
 
@@ -102,6 +140,7 @@ def degree_at_kernel(t: int):
         deg0 = attrs[:, -1]
         return jnp.where(present == 1, deg0 + add - sub, 0).astype(jnp.int32)
 
+    kernel.compile_key = ("degree_at", int(t))
     return kernel
 
 
@@ -137,6 +176,7 @@ def degree_series_kernel(ts):
         return jnp.where((present == 1)[:, None],
                          deg0 + add - sub, 0).astype(jnp.int32)
 
+    kernel.compile_key = ("degree_series", ts)
     return kernel
 
 

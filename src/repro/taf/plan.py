@@ -272,13 +272,9 @@ class PlanExecutor:
             elif k == "select":
                 operand = ops.selection(operand, stage.pred)
                 value = operand
-            elif k == "slice":
-                value = self._timeslice_cached(operand, stage.ts)
-            elif k == "compute":
-                value = self._compute(operand, stage)
-            elif k == "evolution":
-                value = ops.evolution(operand, stage.fn, points=stage.points,
-                                      n_samples=stage.n_samples)
+            elif k in TERMINAL_KINDS:
+                value, tnotes = self._terminal(operand, stage)
+                notes = notes + tnotes
             elif k == "aggregate":
                 value = self._aggregate(value, stage.op)
             else:  # pragma: no cover
@@ -287,6 +283,24 @@ class PlanExecutor:
                           notes=notes)
 
     # ---- stage implementations ----
+
+    def _terminal(self, operand: SoN, stage) -> Tuple[Any, Tuple[str, ...]]:
+        """Run the terminal stage: whole-plan-compiled when the shape is
+        covered (repro.taf.compile, one jitted device dispatch), staged
+        otherwise.  Notes record which path ran and why."""
+        from repro.taf import compile as taf_compile  # deferred: light plans
+
+        value, cnotes = taf_compile.try_fused(
+            operand, stage, replay_cache=self._replay_cache)
+        if value is not taf_compile.MISS:
+            return value, cnotes
+        taf_compile.STATS["fallback_runs"] += 1
+        if stage.kind == "slice":
+            return self._timeslice_cached(operand, stage.ts), cnotes
+        if stage.kind == "compute":
+            return self._compute(operand, stage), cnotes
+        return ops.evolution(operand, stage.fn, points=stage.points,
+                             n_samples=stage.n_samples), cnotes
 
     def _timeslice_cached(self, son: SoN, ts) -> Any:
         """Operator 2 through the executor's LRU: a repeated slice of the
@@ -380,7 +394,7 @@ class PlanExecutor:
             ts, series = value
             series = np.asarray(series)
             if series.ndim == 2:  # (N, T) node series -> per-node reduction
-                if op not in ("max", "min", "mean"):
+                if op not in ("max", "min", "mean", "sum", "std"):
                     raise ValueError(
                         f"aggregate {op!r} needs a scalar timeseries; "
                         "got per-node series")

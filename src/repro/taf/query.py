@@ -40,6 +40,12 @@ from repro.taf.plan import (
 from repro.taf.son import SoN, SoTS
 
 
+def _compile_cache_stats() -> dict:
+    from repro.taf import compile as taf_compile  # deferred
+
+    return taf_compile.cache_stats()
+
+
 class HistoricalGraphStore:
     """Facade over DeltaStore + TGI + TAF.
 
@@ -174,6 +180,7 @@ class HistoricalGraphStore:
             # storage node was down or unreachable during reads)
             "failovers": self.store.stats.failovers,
             "hedged_reads": self.store.stats.hedged_reads,
+            "plan_compile": _compile_cache_stats(),
         }
 
     def node_1hop_history(self, nid: int, t0: int, t1: int, c: int = 1):

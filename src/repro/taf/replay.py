@@ -273,6 +273,56 @@ class EdgeReplay:
         indptr = np.searchsorted(centers, np.arange(self.n_rows + 1))
         return indptr.astype(np.int64), nbrs
 
+    def device_export(self) -> Dict[str, np.ndarray]:
+        """Device-friendly padded flip table (cached per EdgeReplay).
+
+        The variable-length per-pair event runs become dense
+        ``flip_t (n_pairs, F)`` / ``flip_s (n_pairs, F)`` arrays (F = max
+        flips per pair, pad ``flip_s = -1``, pad ``flip_t = int64 max``),
+        chronological within each row.  Pair existence at any timepoint is
+        then one searchsorted per row — the layout the whole-plan compiler
+        (repro.taf.compile) uploads once per operand and reuses for every
+        jitted dispatch.  ``base``/``pair_center``/``pair_other`` ride
+        along so a device program can rebuild adjacency without touching
+        the host table again.
+        """
+        cached = getattr(self, "_device_export", None)
+        if cached is not None:
+            return cached
+        evm = self.seq >= 0
+        p = self.pair_id[evm]
+        counts = (np.bincount(p, minlength=self.n_pairs).astype(np.int64)
+                  if self.n_pairs else np.zeros(0, np.int64))
+        F = max(int(counts.max()) if len(counts) else 0, 1)
+        flip_t = np.full((self.n_pairs, F), np.iinfo(np.int64).max, np.int64)
+        flip_s = np.full((self.n_pairs, F), -1, np.int8)
+        if len(p):
+            # table order is (pair-major, chronological): column index is
+            # the event's rank within its pair's run
+            col = np.arange(len(p)) - np.r_[0, np.cumsum(counts)][p]
+            flip_t[p, col] = self.t[evm]
+            flip_s[p, col] = self.st[evm]
+        cached = {
+            "flip_t": flip_t, "flip_s": flip_s,
+            "base": self.base.astype(np.int8),
+            "pair_center": self.pair_center.astype(np.int32),
+            "pair_other": self.pair_other.copy(),
+        }
+        self._device_export = cached
+        return cached
+
+
+def member_rows(other: np.ndarray, node_ids: np.ndarray) -> np.ndarray:
+    """Map global node ids to row indices into ``node_ids`` (-1 for ids
+    outside the member set) — the pair-table -> adjacency hop the device
+    programs need (``pair_other`` is a global id, not a row)."""
+    other = np.asarray(other, np.int64)
+    node_ids = np.asarray(node_ids, np.int64)
+    if not len(node_ids):
+        return np.full(len(other), -1, np.int32)
+    pos = np.clip(np.searchsorted(node_ids, other), 0, len(node_ids) - 1)
+    return np.where(node_ids[pos] == other, pos, -1).astype(np.int32)
+
 
 def edge_replay(sots: SoTS) -> EdgeReplay:
     """The operand's cached EdgeReplay (built on first use; SoN/SoTS

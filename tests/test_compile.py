@@ -1,0 +1,267 @@
+"""Whole-plan compilation (repro.taf.compile): randomized fused-vs-staged
+parity over adversarial operands, compile-cache no-retrace guarantees,
+fallback coverage notes, the aggregate sum/std extension, and the
+style="kernel" device-operand cache."""
+import numpy as np
+import pytest
+
+from repro.taf import TemporalQuery, compile as tc, replay
+from repro.taf.plan import PlanExecutor
+
+from tests.test_replay import random_sots
+
+
+def _both(q):
+    """Run one query fused and staged; returns (fused, staged) results."""
+    fused = q.run()
+    with tc.disabled():
+        staged = q.run()
+    return fused, staged
+
+
+def _ts(rng, t_max=40, T=20):
+    return np.sort(rng.randint(0, t_max + 1, size=T)).astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# Randomized parity: fused == staged
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_fused_slice_bit_identical_randomized(seed):
+    rng = np.random.RandomState(seed)
+    sots = random_sots(rng, N=rng.randint(3, 14))
+    ts = _ts(rng, T=rng.randint(tc.MIN_FUSE_T, 40))
+    fused, staged = _both(TemporalQuery.over(sots).timeslice(list(ts)))
+    assert any("fused slice" in n for n in fused.notes), fused.notes
+    np.testing.assert_array_equal(fused.value["present"],
+                                  staged.value["present"])
+    np.testing.assert_array_equal(fused.value["attrs"], staged.value["attrs"])
+    assert fused.value["present"].dtype == staged.value["present"].dtype
+    assert fused.value["attrs"].dtype == staged.value["attrs"].dtype
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_fused_pagerank_matches_staged_randomized(seed):
+    """Float op: identical math, f32 device vs f64 host — documented
+    tolerance (docs/api.md), not bit parity."""
+    rng = np.random.RandomState(100 + seed)
+    sots = random_sots(rng, N=rng.randint(4, 12))
+    ts = _ts(rng, T=18)
+    q = TemporalQuery.over(sots).node_compute(
+        tc.pagerank(iters=8), style="temporal", points=ts)
+    fused, staged = _both(q)
+    assert any("fused compute[pagerank]" in n for n in fused.notes)
+    np.testing.assert_allclose(fused.value[1], staged.value[1],
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_fused_components_bit_identical_randomized(seed):
+    rng = np.random.RandomState(200 + seed)
+    sots = random_sots(rng, N=rng.randint(4, 12))
+    ts = _ts(rng, T=18)
+    q = TemporalQuery.over(sots).node_compute(
+        tc.components(iters=12), style="temporal", points=ts)
+    fused, staged = _both(q)
+    assert any("fused compute[components]" in n for n in fused.notes)
+    np.testing.assert_array_equal(fused.value[1], staged.value[1])
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_fused_triangles_bit_identical_randomized(seed):
+    rng = np.random.RandomState(300 + seed)
+    sots = random_sots(rng, N=rng.randint(4, 12))
+    ts = _ts(rng, T=18)
+    q = TemporalQuery.over(sots).node_compute(
+        tc.triangles(), style="temporal", points=ts)
+    fused, staged = _both(q)
+    assert any("fused compute[triangles]" in n for n in fused.notes)
+    np.testing.assert_array_equal(fused.value[1], staged.value[1])
+
+
+@pytest.mark.parametrize("mk,exact", [
+    (lambda: tc.triangle_count(), True),
+    (lambda: tc.component_count(iters=12), True),
+    (lambda: tc.max_pagerank(iters=8), False),
+])
+def test_fused_evolution_matches_staged(mk, exact):
+    rng = np.random.RandomState(7)
+    sots = random_sots(rng, N=10)
+    ts = _ts(rng, T=18)
+    fused, staged = _both(TemporalQuery.over(sots).evolution(mk(), points=ts))
+    assert any("fused evolution" in n for n in fused.notes), fused.notes
+    got, want = np.asarray(fused.value[1]), np.asarray(staged.value[1])
+    if exact:
+        np.testing.assert_array_equal(got, want)
+    else:
+        np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)
+
+
+def test_fused_after_select_matches_staged():
+    """Select runs staged (host), the terminal stage still fuses over the
+    filtered operand."""
+    rng = np.random.RandomState(8)
+    sots = random_sots(rng, N=12)
+    ts = _ts(rng, T=18)
+    q = (TemporalQuery.over(sots)
+         .filter(lambda s: s.node_ids % 2 == 0)
+         .node_compute(tc.components(iters=12), style="temporal", points=ts))
+    fused, staged = _both(q)
+    assert any("fused compute" in n for n in fused.notes)
+    np.testing.assert_array_equal(fused.value[1], staged.value[1])
+
+
+def test_fused_aggregate_epilogue_matches_staged():
+    """Aggregate is a host epilogue over the device series: fused and
+    staged agree for every per-node reduction incl. the new sum/std."""
+    rng = np.random.RandomState(9)
+    sots = random_sots(rng, N=10)
+    ts = _ts(rng, T=18)
+    for op in ("max", "min", "mean", "sum", "std"):
+        q = (TemporalQuery.over(sots)
+             .node_compute(tc.components(iters=12), style="temporal",
+                           points=ts)
+             .aggregate(op))
+        fused, staged = _both(q)
+        np.testing.assert_array_equal(np.asarray(fused.value),
+                                      np.asarray(staged.value))
+
+
+# ---------------------------------------------------------------------------
+# Compile cache: zero re-trace on repeated shapes
+# ---------------------------------------------------------------------------
+
+
+def test_repeated_plan_shape_hits_compile_cache():
+    rng = np.random.RandomState(10)
+    sots = random_sots(rng, N=10)
+    ts = _ts(rng, T=20)
+    q = TemporalQuery.over(sots).node_compute(
+        tc.pagerank(iters=6), style="temporal", points=ts)
+    first = q.run()
+    traces0 = tc.STATS["traces"]
+    # same shape, shifted timepoint *values*: no re-trace, cache hit note
+    ts2 = np.minimum(ts + 1, sots.t1).astype(np.int64)
+    q2 = TemporalQuery.over(sots).node_compute(
+        tc.pagerank(iters=6), style="temporal", points=ts2)
+    second = q2.run()
+    assert tc.STATS["traces"] == traces0
+    assert any("cache hit" in n for n in second.notes), second.notes
+    assert any("traced" in n for n in first.notes), first.notes
+
+
+def test_repeated_fused_slice_rides_replay_lru():
+    """A fused slice lands in the executor's replay LRU under the staged
+    key: the second identical slice dispatches nothing."""
+    rng = np.random.RandomState(11)
+    sots = random_sots(rng, N=10)
+    ts = _ts(rng, T=20)
+    q = TemporalQuery.over(sots).timeslice(list(ts))
+    q.run()
+    runs0 = tc.STATS["fused_runs"]
+    second = q.run()
+    assert any("replay-LRU hit" in n for n in second.notes), second.notes
+    assert tc.STATS["fused_runs"] == runs0  # served from the LRU
+
+
+# ---------------------------------------------------------------------------
+# Fallback coverage: uncovered shapes run staged, with the reason noted
+# ---------------------------------------------------------------------------
+
+
+def test_small_T_slice_stays_staged_and_counts_replay():
+    rng = np.random.RandomState(12)
+    sots = random_sots(rng, N=8)
+    ts = [3, 9]  # T=2 < MIN_FUSE_T
+    before = dict(replay.STATS)
+    res = TemporalQuery.over(sots).timeslice(ts).run()
+    assert any("staged slice" in n and "MIN_FUSE_T" in n for n in res.notes)
+    assert replay.STATS["state_at_many"] == before["state_at_many"] + 1
+
+
+def test_plain_fn_compute_stays_staged():
+    rng = np.random.RandomState(13)
+    sots = random_sots(rng, N=8)
+
+    def mean_attr(present, attrs, son, i, t):
+        return float(attrs[0])
+
+    res = TemporalQuery.over(sots).node_compute(
+        mean_attr, style="temporal", points=[1, 2, 3]).run()
+    assert any("staged compute" in n and "not a FusedOp" in n
+               for n in res.notes), res.notes
+
+
+def test_fused_op_is_a_valid_staged_fn():
+    """The FusedOp object itself runs on the staged path when fusion is
+    off — it IS a vectorized temporal fn (what the parity tests rely on)."""
+    rng = np.random.RandomState(14)
+    sots = random_sots(rng, N=8)
+    with tc.disabled():
+        res = TemporalQuery.over(sots).node_compute(
+            tc.triangles(), style="temporal", points=[1, 5, 9]).run()
+    assert any("fusion disabled" in n for n in res.notes)
+    ts_out, series = res.value
+    assert series.shape == (8, 3)
+
+
+# ---------------------------------------------------------------------------
+# Aggregate satellite: sum/std per-node reductions
+# ---------------------------------------------------------------------------
+
+
+def test_aggregate_sum_std_per_node_series():
+    series = np.arange(12, dtype=np.float64).reshape(3, 4)
+    value = (np.arange(4), series)
+    np.testing.assert_allclose(
+        PlanExecutor._aggregate(value, "sum"), series.sum(axis=1))
+    np.testing.assert_allclose(
+        PlanExecutor._aggregate(value, "std"), series.std(axis=1))
+    with pytest.raises(ValueError):
+        PlanExecutor._aggregate(value, "peak")
+
+
+# ---------------------------------------------------------------------------
+# exec satellite: device-resident operands for style="kernel"
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_compute_memoizes_device_operands():
+    from repro.taf import exec as taf_exec
+
+    rng = np.random.RandomState(15)
+    sots = random_sots(rng, N=9)
+    ts = tuple(range(0, 12, 3))
+    before = dict(taf_exec.STATS)
+    d1 = taf_exec.sharded_degree_series(sots, ts)
+    mid = dict(taf_exec.STATS)
+    d2 = taf_exec.sharded_degree_series(sots, ts)
+    after = dict(taf_exec.STATS)
+    np.testing.assert_array_equal(d1, d2)
+    # sharded_degree_series patches init_attrs -> a fresh operand per
+    # call, so each run transfers once; re-running the SAME operand hits
+    son = sots
+    k = taf_exec.degree_at_kernel(5)
+    # bake degree column the way the helpers do
+    import dataclasses as dc
+
+    deg0 = (son.adj_indptr[1:] - son.adj_indptr[:-1]).astype(np.int32)
+    patched = dc.replace(
+        son, init_attrs=np.concatenate([son.init_attrs, deg0[:, None]], 1))
+    taf_exec.sharded_node_compute(patched, k)
+    base = taf_exec.STATS["operand_cache_hits"]
+    taf_exec.sharded_node_compute(patched, k)
+    assert taf_exec.STATS["operand_cache_hits"] == base + 1
+    assert after["operand_transfers"] >= mid["operand_transfers"] >= \
+        before["operand_transfers"]
+
+
+def test_kernel_compile_key_shares_jitted_program():
+    from repro.taf import exec as taf_exec
+
+    k1 = taf_exec.degree_series_kernel([1, 2, 3])
+    k2 = taf_exec.degree_series_kernel([1, 2, 3])
+    assert k1 is not k2 and k1.compile_key == k2.compile_key
+    assert taf_exec.degree_at_kernel(7).compile_key == ("degree_at", 7)
