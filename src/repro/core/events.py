@@ -15,6 +15,7 @@ Kinds:
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Iterable, Optional, Tuple
 
 import numpy as np
@@ -136,28 +137,35 @@ class ChunkedEventLog:
         self._flat = base if base is not None else EventLog.empty()
         self._tail: list = []
         self._tail_len = 0
+        # fold/append are internally locked so the background
+        # maintenance thread may fold outside TGI's _mvcc lock while
+        # readers capture views under it
+        self._lock = threading.Lock()
 
     def __len__(self) -> int:
-        return len(self._flat) + self._tail_len
+        with self._lock:
+            return len(self._flat) + self._tail_len
 
     def append(self, ev: EventLog) -> None:
         """O(1): queue a segment; no bytes move until the next read."""
         if not len(ev):
             return
-        self._tail.append(ev)
-        self._tail_len += len(ev)
+        with self._lock:
+            self._tail.append(ev)
+            self._tail_len += len(ev)
 
     def fold(self) -> EventLog:
         """Concatenate pending segments into the flat log (idempotent)."""
-        if self._tail:
-            logs = [self._flat] + self._tail
-            self._flat = EventLog(**{
-                c: np.concatenate([getattr(log, c) for log in logs])
-                for c in COLUMNS
-            })
-            self._tail = []
-            self._tail_len = 0
-        return self._flat
+        with self._lock:
+            if self._tail:
+                logs = [self._flat] + self._tail
+                self._flat = EventLog(**{
+                    c: np.concatenate([getattr(log, c) for log in logs])
+                    for c in COLUMNS
+                })
+                self._tail = []
+                self._tail_len = 0
+            return self._flat
 
     # readers (EventLog-compatible views used by TGI/son/pipeline)
     flat = fold
@@ -171,12 +179,14 @@ class ChunkedEventLog:
 
     def time_range(self) -> Tuple[int, int]:
         """First/last event time — segment bounds only, never folds."""
-        if len(self) == 0:
-            return (0, 0)
-        first = self._flat if len(self._flat) else self._tail[0]
-        last = self._tail[-1] if self._tail else self._flat
-        return int(first.t[0]), int(last.t[-1])
+        with self._lock:
+            if len(self._flat) + self._tail_len == 0:
+                return (0, 0)
+            first = self._flat if len(self._flat) else self._tail[0]
+            last = self._tail[-1] if self._tail else self._flat
+            return int(first.t[0]), int(last.t[-1])
 
     @property
     def n_segments(self) -> int:
-        return (1 if len(self._flat) else 0) + len(self._tail)
+        with self._lock:
+            return (1 if len(self._flat) else 0) + len(self._tail)

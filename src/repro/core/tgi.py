@@ -30,18 +30,31 @@ block pool (columns; pool bytes reported separately from physical
 decodes), and byte-grounded cost estimators (``estimate_fetch_cost``,
 ``explain_k_hop``) that the query planner uses for snapshot-vs-expand
 and pruning decisions.
+
+Concurrency (MVCC, see docs/api.md "Concurrency model"): readers pin
+the epoch they started under via ``read_guard()`` and resolve every
+lookup through an immutable :class:`ReadView`; writers and the
+background maintenance thread publish layout changes under one lock
+(``_mvcc``) with a single atomic swap + epoch bump; superseded store
+keys are epoch-tagged and GC'd only after the last reader pinned at an
+older epoch drains, so an in-flight query never sees a torn span list
+or a vanished chunk.
 """
 from __future__ import annotations
 
 import collections
+import concurrent.futures
 import contextlib
 import dataclasses
 import math
+import threading
+import time
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import delta as delta_mod
+from repro.core import faultpoints
 from repro.core import ingest as ingest_mod
 from repro.core.delta import (
     FIELDS as DELTA_FIELDS,
@@ -121,6 +134,23 @@ class FetchCost:
         return self.n_bytes_decompressed + self.n_bytes_pool
 
 
+@dataclasses.dataclass(frozen=True)
+class ReadView:
+    """One reader's frozen view of the index, captured atomically under
+    the MVCC lock when its ``read_guard()`` opened.  Every structure is
+    either immutable or an owned shallow copy: published arrays are
+    never mutated in place (writers rebind), so the view stays
+    bit-stable for the guard's whole lifetime no matter what ingest or
+    background compaction publishes meanwhile."""
+    epoch: int
+    spans: Tuple[SpanIndex, ...]
+    span_by_tsid: Dict[int, SpanIndex]
+    vc: Optional[VersionChains]
+    events: EventLog  # folded flat log as of the capture
+    pending: EventLog  # streaming buffer (rebound, never mutated)
+    n_nodes: int
+
+
 class TGI:
     """Build with ``TGI.build(events, cfg, store)``; query with
     get_snapshot / get_node_history / get_k_hop / get_node_1hop_history."""
@@ -139,8 +169,18 @@ class TGI:
         self._events = ChunkedEventLog()
         self._pending = EventLog.empty()  # streaming ingest buffer
         self._final_state = GraphState.empty(0, cfg.n_attrs)
+        # MVCC: _mvcc guards every published structure (spans,
+        # _span_by_tsid, vc, _events, _pending, n_nodes, read_epoch, the
+        # snapshot LRU, pins, deferred GC); _ingest_lock serializes
+        # writers (update/append/flush and the compaction publish step);
+        # _maint_lock admits one maintenance pass at a time.  Lock order:
+        # _maint_lock -> _ingest_lock -> _mvcc.
+        self._mvcc = threading.RLock()
+        self._ingest_lock = threading.RLock()
+        self._maint_lock = threading.Lock()
+        self._pinned: Dict[int, int] = {}  # epoch -> open read guards
+        self._tls = threading.local()  # per-thread view + cost accounting
         self.last_cost = FetchCost()
-        self._cost_accum: Optional[FetchCost] = None
         # reconstructed-snapshot LRU: key -> (GraphState, logical FetchCost)
         self._snap_cache: "collections.OrderedDict" = collections.OrderedDict()
         # bumped by every cache invalidation (ingest, compaction, manual):
@@ -148,10 +188,99 @@ class TGI:
         # operand can never outlive the index state it was fetched from
         self.read_epoch = 0
         self._mean_degree_cache: Optional[Tuple[int, float]] = None
+        self.maintenance_stats = {"passes": 0, "failed_passes": 0,
+                                  "gc_deferred_keys": 0}
+
+    # ------------------------------------------------------------------
+    # MVCC read guards (epoch pinning)
+    # ------------------------------------------------------------------
+
+    def _capture_view_locked(self) -> ReadView:
+        # caller holds _mvcc; fold() is internally locked (the
+        # maintenance thread folds outside _mvcc) and amortized O(1)
+        # per capture
+        return ReadView(
+            epoch=self.read_epoch,
+            spans=tuple(self.spans),
+            span_by_tsid=dict(self._span_by_tsid),
+            vc=self.vc.snapshot() if self.vc is not None else None,
+            events=self._events.fold(),
+            pending=self._pending,
+            n_nodes=self.n_nodes,
+        )
+
+    @contextlib.contextmanager
+    def read_guard(self) -> Iterator[ReadView]:
+        """Pin the current epoch and yield its :class:`ReadView`.  Every
+        retrieval issued inside resolves against the view, so a
+        multi-call read (a batched fetch, a 1-hop history, a plan) is
+        consistent to one instant even while ingest appends and
+        background compaction swaps the layout.  Nested guards on the
+        same thread reuse the outer view (one pin, one epoch).  Store
+        keys superseded while any guard pins an older epoch are parked
+        in the deferred-GC queue and deleted only after the last such
+        guard exits."""
+        tls = self._tls
+        view = getattr(tls, "view", None)
+        if view is not None:
+            yield view
+            return
+        with self._mvcc:
+            view = self._capture_view_locked()
+            self._pinned[view.epoch] = self._pinned.get(view.epoch, 0) + 1
+        tls.view = view
+        try:
+            yield view
+        finally:
+            tls.view = None
+            with self._mvcc:
+                n = self._pinned.get(view.epoch, 1) - 1
+                if n <= 0:
+                    self._pinned.pop(view.epoch, None)
+                else:
+                    self._pinned[view.epoch] = n
+            self._gc_drain()
+
+    def _tls_view(self) -> Optional[ReadView]:
+        return getattr(self._tls, "view", None)
+
+    def pinned_epochs(self) -> List[int]:
+        with self._mvcc:
+            return sorted(self._pinned)
+
+    def _gc_drain(self) -> Tuple[int, int]:
+        """Delete deferred keys whose tag epoch is no longer protected by
+        any pinned reader.  Returns (keys deleted, bytes deleted)."""
+        with self._mvcc:
+            floor = min(self._pinned) if self._pinned else None
+        return self.store.gc_drain(min_pinned_epoch=floor)
 
     # ------------------------------------------------------------------
     # Query-planner hooks (used by repro.taf.plan / repro.taf.query)
     # ------------------------------------------------------------------
+
+    @property
+    def last_cost(self) -> FetchCost:
+        """Fetch cost of this *thread's* most recent retrieval — thread-
+        local so concurrent queries (and the background maintenance
+        pass) never clobber each other's accounting."""
+        lc = getattr(self._tls, "last_cost", None)
+        if lc is None:
+            lc = FetchCost()
+            self._tls.last_cost = lc
+        return lc
+
+    @last_cost.setter
+    def last_cost(self, value: FetchCost) -> None:
+        self._tls.last_cost = value
+
+    @property
+    def _cost_accum(self) -> Optional[FetchCost]:
+        return getattr(self._tls, "cost_accum", None)
+
+    @_cost_accum.setter
+    def _cost_accum(self, value: Optional[FetchCost]) -> None:
+        self._tls.cost_accum = value
 
     def _record_cost(self, n=1, b=0, card=0, raw=0, pool=0, pool_hits=0):
         self.last_cost.add(n, b, card, raw, pool, pool_hits)
@@ -162,7 +291,8 @@ class TGI:
     def cost_scope(self) -> Iterator[FetchCost]:
         """Accumulate fetch cost across every retrieval issued inside the
         scope — one FetchCost per compiled query plan, even when the plan
-        runs several get_* calls (each of which resets ``last_cost``)."""
+        runs several get_* calls (each of which resets ``last_cost``).
+        Thread-local: a scope only sees its own thread's retrievals."""
         prev = self._cost_accum
         acc = FetchCost()
         self._cost_accum = acc
@@ -179,15 +309,17 @@ class TGI:
         """Partition-pruning pushdown: the micro-partitions that cover
         ``node_ids`` in the timespan containing t.  A selection over a
         known node set fetches only these pids instead of all n_parts."""
-        si = self._span_index(t)
-        pid, _, found = si.smap.lookup(np.asarray(node_ids, np.int32))
-        return sorted(set(int(p) for p in pid[found]))
+        with self.read_guard() as view:
+            si = self._span_index(t, view)
+            pid, _, found = si.smap.lookup(np.asarray(node_ids, np.int32))
+            return sorted(set(int(p) for p in pid[found]))
 
     def has_cached_snapshot(self, t: int, projection=None, c: int = 1) -> bool:
         """Non-destructive snapshot-LRU probe (planner hook): a warm
         *full* snapshot at t makes an unpruned fetch cheaper than a cold
         pruned one — the executor asks before committing to pruning."""
-        return self._snap_key(int(t), None, projection, c) in self._snap_cache
+        with self._mvcc:
+            return self._snap_key(int(t), None, projection, c) in self._snap_cache
 
     def _span_fetch_keys(self, t: int, pids: Optional[Sequence[int]] = None,
                          ) -> Tuple[List[DeltaKey], List[DeltaKey]]:
@@ -195,24 +327,25 @@ class TGI:
         ``(hierarchy path keys, eventlist keys)`` for the covering span,
         leaf, and partition subset — the cost model's key enumeration
         (shares the exact logic of ``get_snapshot``'s fetch)."""
-        if not self.spans:
-            return [], []
-        si = self._span_index(t)
-        leaf = self._leaf_for(si, t)
-        plist = list(range(self.cfg.n_parts)) if pids is None else list(pids)
-        hier = [
-            k for did in self._hierarchy_path(si, leaf)
-            for k in self._delta_keys(si.span.tsid, did, plist)
-        ]
-        t_ck = si.checkpoint_ts[leaf]
-        sids = sorted({self._sid_of_pid(int(p)) for p in plist})
-        ev_keys = []
-        bs = self._ev_buckets(si, t_ck, t)
-        if bs:  # the real fetch reads the contiguous [min, max] range
-            for b in range(min(bs), max(bs) + 1):
-                for sid in sids:
-                    ev_keys.append(DeltaKey(si.span.tsid, sid, f"E:{b}", 0))
-        return hier, ev_keys
+        with self.read_guard() as view:
+            if not view.spans:
+                return [], []
+            si = self._span_index(t, view)
+            leaf = self._leaf_for(si, t)
+            plist = list(range(self.cfg.n_parts)) if pids is None else list(pids)
+            hier = [
+                k for did in self._hierarchy_path(si, leaf)
+                for k in self._delta_keys(si.span.tsid, did, plist)
+            ]
+            t_ck = si.checkpoint_ts[leaf]
+            sids = sorted({self._sid_of_pid(int(p)) for p in plist})
+            ev_keys = []
+            bs = self._ev_buckets(si, t_ck, t, view)
+            if bs:  # the real fetch reads the contiguous [min, max] range
+                for b in range(min(bs), max(bs) + 1):
+                    for sid in sids:
+                        ev_keys.append(DeltaKey(si.span.tsid, sid, f"E:{b}", 0))
+            return hier, ev_keys
 
     def estimate_fetch_cost(self, t: int,
                             pids: Optional[Sequence[int]] = None,
@@ -224,6 +357,10 @@ class TGI:
         ``physical_raw_bytes`` dimension is what cost-based plan
         selection compares: it is the ``FetchCost.n_bytes_decompressed``
         the fetch would actually pay, given what the pool already holds."""
+        with self.read_guard():
+            return self._estimate_fetch_cost_guarded(t, pids)
+
+    def _estimate_fetch_cost_guarded(self, t, pids):
         hier, ev_keys = self._span_fetch_keys(t, pids)
         out = {"enc_bytes": 0.0, "raw_bytes": 0.0, "physical_raw_bytes": 0.0,
                "hier_raw_bytes": 0.0, "ev_raw_bytes": 0.0,
@@ -241,15 +378,18 @@ class TGI:
 
     def _mean_degree(self) -> float:
         """Mean degree of the final state (cached per read_epoch) — the
-        k-hop cost model's frontier-growth rate."""
-        cached = self._mean_degree_cache
-        if cached is not None and cached[0] == self.read_epoch:
-            return cached[1]
-        g = self._final_state
-        n_alive = int((g.present == 1).sum())
-        dbar = (2.0 * len(g.edge_key)) / max(n_alive, 1)
-        self._mean_degree_cache = (self.read_epoch, dbar)
-        return dbar
+        k-hop cost model's frontier-growth rate.  Probe, compute, and
+        store all happen under the MVCC lock so the cached value can
+        never pair a bumped epoch with a stale degree."""
+        with self._mvcc:
+            cached = self._mean_degree_cache
+            if cached is not None and cached[0] == self.read_epoch:
+                return cached[1]
+            g = self._final_state
+            n_alive = int((g.present == 1).sum())
+            dbar = (2.0 * len(g.edge_key)) / max(n_alive, 1)
+            self._mean_degree_cache = (self.read_epoch, dbar)
+            return dbar
 
     def explain_k_hop(self, nid: int, t: int, k: int) -> Dict[str, float]:
         """The cost model behind ``get_k_hop(method="auto")``.
@@ -266,6 +406,10 @@ class TGI:
         estimates are the raw bytes the method would physically decode,
         given current pool residency.  Ties fall back to the paper's
         ``k <= 2 -> expand`` heuristic."""
+        with self.read_guard() as view:
+            return self._explain_k_hop_guarded(view, t, k)
+
+    def _explain_k_hop_guarded(self, view: ReadView, t: int, k: int):
         full = self.estimate_fetch_cost(t)
         n_parts, n_shards = self.cfg.n_parts, self.cfg.n_shards
         dbar = self._mean_degree()
@@ -274,7 +418,7 @@ class TGI:
         for _ in range(k):
             fr *= max(dbar, 1e-9)
             m += fr
-        m = min(m, float(max(self.n_nodes, 1)))
+        m = min(m, float(max(view.n_nodes, 1)))
         # expected distinct partitions/shards hit by m uniform nodes
         part_frac = 1.0 - (1.0 - 1.0 / max(n_parts, 1)) ** m
         shard_frac = 1.0 - (1.0 - 1.0 / max(n_shards, 1)) ** m
@@ -307,47 +451,75 @@ class TGI:
         tgi._build_from(events, GraphState.empty(events.n_nodes, cfg.n_attrs))
         return tgi
 
-    def _build_from(self, events: EventLog, state: GraphState):
-        self.spans = []
-        self._span_by_tsid = {}
-        self._next_tsid = 0
-        self._events = ChunkedEventLog()
-        self._pending = EventLog.empty()
-        self._final_state = state
-        self.n_nodes = max(events.n_nodes, len(state.present))
-        z = np.empty(0, np.int32)
-        self.vc = VersionChains.build(EventLog.empty(), z, z, 0)
-        self._ingest_spans(events)
-        self.vc.consolidate()  # a bulk build lands as one base CSR
-        self.invalidate_caches()
+    def _alloc_tsid(self) -> int:
+        """Allocate a fresh timespan id — the one writer/maintenance
+        counter races on, so it hands out ids under the MVCC lock."""
+        with self._mvcc:
+            tsid = self._next_tsid
+            self._next_tsid += 1
+            return tsid
 
-    def _ingest_spans(self, new_events: EventLog) -> None:
+    def _build_from(self, events: EventLog, state: GraphState):
+        with self._ingest_lock:
+            with self._mvcc:
+                self.spans = []
+                self._span_by_tsid = {}
+                self._next_tsid = 0
+                self._events = ChunkedEventLog()
+                self._pending = EventLog.empty()
+                self._final_state = state
+                self.n_nodes = max(events.n_nodes, len(state.present))
+                z = np.empty(0, np.int32)
+                self.vc = VersionChains.build(EventLog.empty(), z, z, 0)
+            self._ingest_spans(events)
+            with self._mvcc:
+                self.vc.consolidate()  # a bulk build lands as one base CSR
+                self.invalidate_caches()
+
+    def _ingest_spans(self, new_events: EventLog,
+                      pending_after: Optional[EventLog] = None) -> None:
         """Seal append-only events into spans via the shared SpanBuilder
         (one write path for build/update/flush) and extend the version
-        chains incrementally — O(batch), not O(total history)."""
+        chains incrementally — O(batch), not O(total history).
+
+        Store writes happen first (new tsids: invisible to readers until
+        published); the layout then publishes in one short ``_mvcc``
+        critical section — span list, tsid map, event log, version
+        chains, epoch bump, and (when sealing from the streaming buffer)
+        the trimmed ``_pending`` all swap atomically, so a concurrent
+        ``read_guard()`` sees each event exactly once: either still
+        buffered or sealed, never both, never neither."""
+        assert self._ingest_lock._is_owned()  # writers are serialized
         base = len(self._events)
         state = self._final_state
         builder = ingest_mod.SpanBuilder(self.cfg, self.store)
         spans = split_timespans(new_events, self.cfg.events_per_span)
         span_of = np.empty(len(new_events), np.int32)
         bucket_of = np.empty(len(new_events), np.int32)
+        new_sis: List[SpanIndex] = []
         for sp in spans:
-            sp2 = TimeSpan(self._next_tsid, sp.t_start, sp.t_end,
+            sp2 = TimeSpan(self._alloc_tsid(), sp.t_start, sp.t_end,
                            base + sp.ev_lo, base + sp.ev_hi)
-            self._next_tsid += 1
             ev_span = new_events.take(slice(sp.ev_lo, sp.ev_hi))
             si, b_of = builder.build_span(sp2, ev_span, state)
             span_of[sp.ev_lo:sp.ev_hi] = sp2.tsid
             bucket_of[sp.ev_lo:sp.ev_hi] = b_of
-            self.spans.append(si)
-            self._span_by_tsid[sp2.tsid] = si
-        # O(1) segment append — the flat view folds lazily on next read
-        self._events.append(new_events)
-        self.n_nodes = max(self.n_nodes, new_events.n_nodes, len(state.present))
-        if len(new_events):
-            self.vc.append(new_events, span_of, bucket_of, self.n_nodes)
-            # snapshots strictly before the new events are untouched
-            self.invalidate_caches(t_from=int(new_events.t[0]))
+            new_sis.append(si)
+        with self._mvcc:
+            self.spans = self.spans + new_sis  # rebind: views keep the old list
+            m = dict(self._span_by_tsid)
+            m.update({si.span.tsid: si for si in new_sis})
+            self._span_by_tsid = m
+            # O(1) segment append — the flat view folds lazily on next read
+            self._events.append(new_events)
+            self.n_nodes = max(self.n_nodes, new_events.n_nodes,
+                               len(state.present))
+            if pending_after is not None:
+                self._pending = pending_after
+            if len(new_events):
+                self.vc.append(new_events, span_of, bucket_of, self.n_nodes)
+                # snapshots strictly before the new events are untouched
+                self.invalidate_caches(t_from=int(new_events.t[0]))
 
     def update(self, new_events: EventLog):
         """Batch update (paper: 'accepts updates in batches of timespan
@@ -357,11 +529,13 @@ class TGI:
         — and the version chains extend incrementally instead of being
         re-derived from the full log."""
         assert len(new_events)
-        self.flush()  # seal any streaming buffer first: global order
-        # time_range() reads segment bounds only — no fold on the ingest path
-        t_last = self._events.time_range()[1] if len(self._events) else -(2**62)
-        assert new_events.t[0] >= t_last, "updates must be append-only"
-        self._ingest_spans(new_events)
+        with self._ingest_lock:
+            self.flush()  # seal any streaming buffer first: global order
+            # time_range() reads segment bounds only — no fold on ingest
+            t_last = (self._events.time_range()[1] if len(self._events)
+                      else -(2**62))
+            assert new_events.t[0] >= t_last, "updates must be append-only"
+            self._ingest_spans(new_events)
 
     # ------------------------------------------------------------------
     # Streaming ingest (buffered append + span sealing + flush)
@@ -376,18 +550,21 @@ class TGI:
         remainder into a final (possibly short) span."""
         if not len(new_events):
             return
-        t_tail = self._pending.t[-1] if len(self._pending) else (
-            self._events.time_range()[1] if len(self._events) else None)
-        assert t_tail is None or new_events.t[0] >= t_tail, \
-            "appends must be append-only"
-        self._pending = self._pending.concat(new_events, sort=False)
-        # buffered events shadow cached snapshots at t >= their start
-        self.invalidate_caches(t_from=int(new_events.t[0]))
-        self._seal_ready(force=False)
+        with self._ingest_lock:
+            t_tail = self._pending.t[-1] if len(self._pending) else (
+                self._events.time_range()[1] if len(self._events) else None)
+            assert t_tail is None or new_events.t[0] >= t_tail, \
+                "appends must be append-only"
+            with self._mvcc:
+                self._pending = self._pending.concat(new_events, sort=False)
+                # buffered events shadow cached snapshots at t >= their start
+                self.invalidate_caches(t_from=int(new_events.t[0]))
+            self._seal_ready(force=False)
 
     def flush(self) -> None:
         """Seal every buffered event into spans."""
-        self._seal_ready(force=True)
+        with self._ingest_lock:
+            self._seal_ready(force=True)
 
     def _seal_ready(self, force: bool) -> None:
         epb = self.cfg.events_per_span
@@ -412,23 +589,28 @@ class TGI:
             if hi < n:  # span boundaries never split a timestamp
                 t_edge = int(self._pending.t[hi - 1])
                 hi = int(np.searchsorted(self._pending.t, t_edge, side="right"))
-            self._ingest_spans(self._pending.take(slice(0, hi)))
-            self._pending = self._pending.take(slice(hi, n))
+            # the sealed spans and the trimmed buffer publish in ONE
+            # atomic step: no reader view can see the head events both
+            # sealed and still pending
+            self._ingest_spans(self._pending.take(slice(0, hi)),
+                               pending_after=self._pending.take(slice(hi, n)))
 
-    def _pending_floor(self) -> Optional[int]:
+    def _pending_floor(self, view: Optional[ReadView] = None) -> Optional[int]:
         """First buffered (unsealed) timestamp, or None when fully sealed.
         Reads at t >= this floor are open-span reads."""
-        return int(self._pending.t[0]) if len(self._pending) else None
+        pend = view.pending if view is not None else self._pending
+        return int(pend.t[0]) if len(pend) else None
 
     def _overlay_pending(self, g: GraphState, t: int, si: SpanIndex,
-                         pids: Optional[Sequence[int]]) -> GraphState:
+                         pids: Optional[Sequence[int]],
+                         view: Optional[ReadView] = None) -> GraphState:
         """Open-span read: apply the buffered events with t' <= t on top
         of the sealed-index state.  With a pid subset, only events with an
         endpoint in the subset are applied (mirroring the sealed eventlist
         filter); events touching nodes the sealed SlotMap has never seen
         (brand-new nodes, not yet in any partition) are kept
         conservatively so histories and k-hop expansion stay complete."""
-        pend = self._pending.up_to(t)
+        pend = (view.pending if view is not None else self._pending).up_to(t)
         if not len(pend):
             return g
         if pids is not None:
@@ -447,90 +629,195 @@ class TGI:
     # Compaction (micro-span merging + store GC)
     # ------------------------------------------------------------------
 
-    def compact(self, min_run: int = 2) -> "ingest_mod.CompactionStats":
+    def compact(self, min_run: int = 2, wait: bool = True):
         """Merge runs of adjacent micro-spans (spans shorter than
         ``events_per_span``, as accreted by small update/append batches)
-        into full-size spans: re-derives the merged spans' SlotMaps,
-        eventlist buckets, and hierarchy through the shared SpanBuilder,
-        rewrites them under fresh tsids, deletes the superseded store
-        keys (GC — ``storage_report`` shrinks), and re-derives the
-        version chains against the new layout (which also consolidates
-        any appended segments).  Snapshot-cache invalidation is scoped to
-        the affected spans' time ranges; cached snapshots outside them
-        survive.  A run is only rewritten when it actually reduces the
-        span count (``min_run`` adjacent micro-spans merging into fewer
-        full spans)."""
-        self.flush()
-        self._events.fold()  # chunked log: segments collapse at compaction
-        cfg = self.cfg
-        stats = ingest_mod.CompactionStats(spans_before=len(self.spans))
-        sizes = [s.span.ev_hi - s.span.ev_lo for s in self.spans]
+        into full-size spans, on a background maintenance thread.
+
+        The pass pins a read epoch, shadow-builds the merged spans'
+        SlotMaps, eventlist buckets, and hierarchy through the shared
+        SpanBuilder under fresh tsids (invisible to readers until
+        published), then publishes the new layout in one atomic swap +
+        epoch bump; superseded store keys are epoch-tagged in the
+        deferred-GC queue and deleted only after the last reader pinned
+        at an older epoch drains — queries and ingest run concurrently
+        throughout and never see a torn layout or a vanished chunk.
+
+        With ``wait=True`` (default) blocks for the pass and returns its
+        :class:`CompactionStats` (re-raising any maintenance failure);
+        with ``wait=False`` returns a ``concurrent.futures.Future``
+        resolving to the stats.  One pass runs at a time.  A run is only
+        rewritten when it actually reduces the span count (``min_run``
+        adjacent micro-spans merging into fewer full spans)."""
+        fut: "concurrent.futures.Future" = concurrent.futures.Future()
+
+        def _run():
+            try:
+                fut.set_result(self._compact_pass(min_run))
+            except BaseException as e:  # surfaced via fut.result()
+                with self._mvcc:
+                    self.maintenance_stats["failed_passes"] += 1
+                fut.set_exception(e)
+
+        threading.Thread(target=_run, name="tgi-maintenance",
+                         daemon=True).start()
+        return fut.result() if wait else fut
+
+    def _compact_runs(self, spans: Sequence[SpanIndex],
+                      min_run: int) -> List[Tuple[int, int]]:
+        sizes = [s.span.ev_hi - s.span.ev_lo for s in spans]
         runs: List[Tuple[int, int]] = []
         i = 0
-        while i < len(self.spans):
-            if sizes[i] >= cfg.events_per_span:
+        while i < len(spans):
+            if sizes[i] >= self.cfg.events_per_span:
                 i += 1
                 continue
             j = i
-            while j < len(self.spans) and sizes[j] < cfg.events_per_span:
+            while j < len(spans) and sizes[j] < self.cfg.events_per_span:
                 j += 1
             total = sum(sizes[i:j])
             if (j - i >= min_run
-                    and j - i > math.ceil(total / cfg.events_per_span)):
+                    and j - i > math.ceil(total / self.cfg.events_per_span)):
                 runs.append((i, j))
             i = j
-        if not runs:
+        return runs
+
+    def _discard_shadow(self, shadow: Sequence[SpanIndex]) -> None:
+        """Delete never-published shadow spans' store keys (crash before
+        the swap): no reader can reach their fresh tsids, so a direct
+        delete is safe and a retried pass starts clean."""
+        for si in shadow:
+            for sid in range(self.cfg.n_shards):
+                for k in self.store.keys_for_placement(si.span.tsid, sid):
+                    self.store.delete(k)
+
+    def _compact_pass(self, min_run: int) -> "ingest_mod.CompactionStats":
+        with self._maint_lock:
+            self.flush()
+            cfg = self.cfg
+            bytes_w0 = self.store.stats.bytes_written
+            builder = ingest_mod.SpanBuilder(cfg, self.store)
+            shadow: List[SpanIndex] = []
+            # pin the pass's own epoch: the shadow build (including its
+            # seed-state get_snapshot calls, which nest under this
+            # guard) sees one frozen layout even while ingest publishes
+            with self.read_guard() as view:
+                spans0 = view.spans
+                stats = ingest_mod.CompactionStats(spans_before=len(spans0))
+                runs = self._compact_runs(spans0, min_run)
+                if not runs:
+                    stats.spans_after = len(spans0)
+                    stats.cost = FetchCost()
+                    # still drain: a pass retried after a post-swap crash
+                    # finds no runs but must finish the interrupted GC
+                    d, b = self._gc_drain()
+                    stats.keys_deleted += d
+                    stats.bytes_deleted += b
+                    with self._mvcc:
+                        self.maintenance_stats["passes"] += 1
+                    return stats
+                built: List[Tuple[int, int, List[SpanIndex]]] = []
+                try:
+                    with self.cost_scope() as acc:
+                        for (i, j) in runs:
+                            faultpoints.fire("compact.shadow_build")
+                            first, last = spans0[i], spans0[j - 1]
+                            ev_lo, ev_hi = first.span.ev_lo, last.span.ev_hi
+                            ev_run = view.events.take(slice(ev_lo, ev_hi))
+                            # starting state = reconstructed state just
+                            # before the run (earlier spans untouched)
+                            if i == 0:
+                                state = GraphState.empty(0, cfg.n_attrs)
+                            else:
+                                state = self.get_snapshot(
+                                    spans0[i - 1].span.t_end)
+                            replacement = []
+                            for sp in split_timespans(ev_run,
+                                                      cfg.events_per_span):
+                                sp2 = TimeSpan(self._alloc_tsid(),
+                                               sp.t_start, sp.t_end,
+                                               ev_lo + sp.ev_lo,
+                                               ev_lo + sp.ev_hi)
+                                t_b = time.perf_counter()
+                                si, _ = builder.build_span(
+                                    sp2,
+                                    ev_run.take(slice(sp.ev_lo, sp.ev_hi)),
+                                    state)
+                                replacement.append(si)
+                                shadow.append(si)
+                                # throttle: the shadow build is CPU-bound
+                                # and invisible to readers, so its latency
+                                # is free — cap the pass at a ~50% duty
+                                # cycle (sleep as long as each span build
+                                # took) so foreground queries keep the
+                                # GIL at least half the time instead of
+                                # stalling behind a whole run rewrite
+                                time.sleep(
+                                    min(time.perf_counter() - t_b, 0.02))
+                            built.append((i, j, replacement))
+                            stats.events_rewritten += ev_hi - ev_lo
+                            stats.runs_merged += 1
+                    faultpoints.fire("compact.pre_swap")
+                except BaseException:
+                    self._discard_shadow(shadow)
+                    raise
+            # guard released: the pass's own pin must not defer the GC it
+            # is about to queue.  Enumerate superseded keys before the
+            # swap (the old chunks are immutable until deleted).
+            replaced = {spans0[x].span.tsid
+                        for (i, j, _) in built for x in range(i, j)}
+            head = {spans0[i].span.tsid: rep for (i, j, rep) in built}
+            gc_keys = [
+                k for tsid in sorted(replaced)
+                for sid in range(cfg.n_shards)
+                for k in self.store.keys_for_placement(tsid, sid)
+            ]
+            with self._ingest_lock:
+                # _ingest_lock freezes the span list and the log (ingest
+                # publishes only under it), so the heavy part of the
+                # publish — splice + version-chain re-derivation over the
+                # whole log — runs BEFORE touching _mvcc.  Readers only
+                # ever wait on the O(1) reference swap below, never on
+                # the O(n) rebuild.
+                #
+                # splice by tsid into the CURRENT span list: spans sealed
+                # by concurrent ingest since the view was pinned stay in
+                # place (the log is append-only, so they sort after every
+                # rewritten run)
+                new_spans: List[SpanIndex] = []
+                for s in self.spans:
+                    tsid = s.span.tsid
+                    if tsid in head:
+                        new_spans.extend(head[tsid])
+                    elif tsid not in replaced:
+                        new_spans.append(s)
+                new_map = {s.span.tsid: s for s in new_spans}
+                span_of, bucket_of = ingest_mod.span_bucket_arrays(
+                    new_spans)
+                new_vc = VersionChains.build(self._events.fold(),
+                                             span_of, bucket_of,
+                                             self.n_nodes)
+                affected = [(spans0[i].span.t_start,
+                             spans0[j - 1].span.t_end)
+                            for (i, j, _) in built]
+                with self._mvcc:
+                    self.spans = new_spans
+                    self._span_by_tsid = new_map
+                    self.vc = new_vc
+                    self.invalidate_caches(t_ranges=affected)
+                    # epoch-tagged deferral: deletable once no reader
+                    # pins an epoch older than the published layout's
+                    self.store.delete_deferred(gc_keys, self.read_epoch)
+                    self.maintenance_stats["passes"] += 1
+                    self.maintenance_stats["gc_deferred_keys"] += len(gc_keys)
+            faultpoints.fire("compact.post_swap")
+            d, b = self._gc_drain()
+            stats.keys_deleted += d
+            stats.bytes_deleted += b
             stats.spans_after = len(self.spans)
-            stats.cost = FetchCost()
+            stats.bytes_written = self.store.stats.bytes_written - bytes_w0
+            stats.cost = acc
             return stats
-        bytes_w0 = self.store.stats.bytes_written
-        bytes_d0 = self.store.stats.bytes_deleted
-        builder = ingest_mod.SpanBuilder(cfg, self.store)
-        with self.cost_scope() as acc:
-            new_layout = list(self.spans)
-            affected: List[Tuple[int, int]] = []
-            # reversed: splice positions of earlier runs stay valid
-            for (i, j) in reversed(runs):
-                first, last = self.spans[i], self.spans[j - 1]
-                ev_lo, ev_hi = first.span.ev_lo, last.span.ev_hi
-                affected.append((first.span.t_start, last.span.t_end))
-                ev_run = self._events.take(slice(ev_lo, ev_hi))
-                # starting state = reconstructed state just before the run
-                # (spans before it are untouched by this pass)
-                if i == 0:
-                    state = GraphState.empty(0, cfg.n_attrs)
-                else:
-                    state = self.get_snapshot(self.spans[i - 1].span.t_end)
-                replacement = []
-                for sp in split_timespans(ev_run, cfg.events_per_span):
-                    sp2 = TimeSpan(self._next_tsid, sp.t_start, sp.t_end,
-                                   ev_lo + sp.ev_lo, ev_lo + sp.ev_hi)
-                    self._next_tsid += 1
-                    si, _ = builder.build_span(
-                        sp2, ev_run.take(slice(sp.ev_lo, sp.ev_hi)), state)
-                    replacement.append(si)
-                for old in self.spans[i:j]:  # GC superseded store keys
-                    for sid in range(cfg.n_shards):
-                        for k in self.store.keys_for_placement(
-                                old.span.tsid, sid):
-                            if self.store.delete(k):
-                                stats.keys_deleted += 1
-                stats.events_rewritten += ev_hi - ev_lo
-                stats.runs_merged += 1
-                new_layout[i:j] = replacement
-            self.spans = new_layout
-            self._span_by_tsid = {s.span.tsid: s for s in self.spans}
-            # re-derive version chains against the new layout (vectorized
-            # bounds arithmetic; the log itself is unchanged)
-            span_of, bucket_of = ingest_mod.span_bucket_arrays(self.spans)
-            self.vc = VersionChains.build(self._events.fold(), span_of,
-                                          bucket_of, self.n_nodes)
-            self.invalidate_caches(t_ranges=affected)
-        stats.spans_after = len(self.spans)
-        stats.bytes_deleted = self.store.stats.bytes_deleted - bytes_d0
-        stats.bytes_written = self.store.stats.bytes_written - bytes_w0
-        stats.cost = acc
-        return stats
 
     def _bucket_of_old(self, old_spans) -> np.ndarray:
         # shim over the vectorized helper (was a per-event Python loop)
@@ -551,25 +838,28 @@ class TGI:
             for p in pids
         ]
 
-    def _ev_buckets(self, si: SpanIndex, t_ck: int, t_hi: int) -> List[int]:
+    def _ev_buckets(self, si: SpanIndex, t_ck: int, t_hi: int,
+                    view: Optional[ReadView] = None) -> List[int]:
         """Micro-eventlist buckets of ``si`` whose events intersect
         (t_ck, t_hi] — shared by the real fetch (``_span_events_until``)
         and the cost model (``_span_fetch_keys``)."""
+        ev_t = (view.events if view is not None else self._events).t
         return [
             b for b, (lo, hi) in enumerate(si.bucket_bounds)
-            if hi > lo and self._events.t[lo] <= t_hi
-            and self._events.t[hi - 1] > t_ck
+            if hi > lo and ev_t[lo] <= t_hi and ev_t[hi - 1] > t_ck
         ]
 
     # ------------------------------------------------------------------
     # Retrieval
     # ------------------------------------------------------------------
 
-    def _span_index(self, t: int) -> SpanIndex:
-        for si in reversed(self.spans):
+    def _span_index(self, t: int,
+                    view: Optional[ReadView] = None) -> SpanIndex:
+        spans = view.spans if view is not None else self.spans
+        for si in reversed(spans):
             if t >= si.span.t_start:
                 return si
-        return self.spans[0]
+        return spans[0]
 
     def _hierarchy_path(self, si: SpanIndex, leaf: int) -> List[str]:
         """did names root->leaf for a given leaf index."""
@@ -672,10 +962,11 @@ class TGI:
         ) if any(ct <= t for ct in si.checkpoint_ts) else 0
 
     def _span_events_until(self, si: SpanIndex, t_ck: int, t_hi: int, c: int,
-                           pids: Optional[Sequence[int]]) -> EventLog:
+                           pids: Optional[Sequence[int]],
+                           view: Optional[ReadView] = None) -> EventLog:
         """Eventlists of the span covering (t_ck, t_hi], pid-filtered —
         fetched ONCE and re-filtered per timepoint by the batched path."""
-        ev_buckets = self._ev_buckets(si, t_ck, t_hi)
+        ev_buckets = self._ev_buckets(si, t_ck, t_hi, view)
         if not ev_buckets:
             return EventLog.empty()
         sids = None
@@ -725,12 +1016,19 @@ class TGI:
             int(c),
         )
 
-    def _snap_cache_get(self, key) -> Optional[GraphState]:
-        hit = self._snap_cache.get(key)
-        if hit is None:
-            return None
-        self._snap_cache.move_to_end(key)
-        g, cost = hit
+    def _snap_cache_get(self, key,
+                        epoch: Optional[int] = None) -> Optional[GraphState]:
+        with self._mvcc:
+            if epoch is not None and epoch != self.read_epoch:
+                # pinned behind a published epoch: the shared LRU may
+                # already hold newer-epoch entries under the same key —
+                # bypass it and rebuild from the pinned view instead
+                return None
+            hit = self._snap_cache.get(key)
+            if hit is None:
+                return None
+            self._snap_cache.move_to_end(key)
+            g, cost = hit
         # replay the logical fetch cost: the LRU changes wall time, not
         # the planner's accounting (cost invariants stay deterministic).
         # The replay preserves the fill-time physical-vs-pool split, so
@@ -741,11 +1039,15 @@ class TGI:
                           cost.n_pool_hits)
         return g.copy()
 
-    def _snap_cache_put(self, key, g: GraphState, cost: FetchCost) -> None:
-        self._snap_cache[key] = (g.copy(), cost.copy())
-        self._snap_cache.move_to_end(key)
-        while len(self._snap_cache) > self.SNAP_CACHE_MAX:
-            self._snap_cache.popitem(last=False)
+    def _snap_cache_put(self, key, g: GraphState, cost: FetchCost,
+                        epoch: Optional[int] = None) -> None:
+        with self._mvcc:
+            if epoch is not None and epoch != self.read_epoch:
+                return  # built from an older pinned view: never published
+            self._snap_cache[key] = (g.copy(), cost.copy())
+            self._snap_cache.move_to_end(key)
+            while len(self._snap_cache) > self.SNAP_CACHE_MAX:
+                self._snap_cache.popitem(last=False)
 
     def invalidate_caches(self, t_from: Optional[int] = None,
                           t_ranges: Optional[Sequence[Tuple[int, int]]] = None,
@@ -761,21 +1063,28 @@ class TGI:
         leaves the block pool alone: stored blocks are immutable per
         tsid, and the write paths invalidate per key through
         ``DeltaStore.put``/``delete``.  Every call bumps ``read_epoch``
-        (the plan-layer fetch cache keys on it)."""
-        self.read_epoch += 1
-        if t_from is None and t_ranges is None:
-            self._snap_cache.clear()
-            if drop_pool:
-                self.store.clear_pool()
-            return
-        stale = [
-            k for k in self._snap_cache
-            if (t_from is not None and k[0] >= t_from)
-            or (t_ranges is not None
-                and any(lo <= k[0] <= hi for lo, hi in t_ranges))
-        ]
-        for k in stale:
-            del self._snap_cache[k]
+        (the plan-layer fetch cache keys on it).
+
+        The epoch bump, the snapshot-LRU drop, the pool clear, and the
+        ``_mean_degree`` cache reset are one atomic step under the MVCC
+        lock: no concurrent reader can observe the new epoch paired with
+        stale cache contents."""
+        with self._mvcc:
+            self.read_epoch += 1
+            self._mean_degree_cache = None
+            if t_from is None and t_ranges is None:
+                self._snap_cache.clear()
+                if drop_pool:
+                    self.store.clear_pool()
+                return
+            stale = [
+                k for k in self._snap_cache
+                if (t_from is not None and k[0] >= t_from)
+                or (t_ranges is not None
+                    and any(lo <= k[0] <= hi for lo, hi in t_ranges))
+            ]
+            for k in stale:
+                del self._snap_cache[k]
 
     def get_snapshot(self, t: int, c: int = 1, pids: Optional[Sequence[int]] = None,
                      use_kernel: bool = False,
@@ -790,35 +1099,37 @@ class TGI:
         history (mid-stream ``append``) overlay the ingest buffer's live
         events and bypass the LRU."""
         self.last_cost = FetchCost()
-        p0 = self._pending_floor()
-        open_read = p0 is not None and t >= p0
-        key = self._snap_key(t, pids, projection, c)
-        if not open_read:
-            hit = self._snap_cache_get(key)
-            if hit is not None:
-                return hit
-        with self.cost_scope() as acc:
-            si = self._span_index(t)
-            leaf = self._leaf_for(si, t)
-            path = self._hierarchy_path(si, leaf)
-            deltas = [self._fetch_delta(si.span.tsid, did, pids, si, c, projection)
-                      for did in path]
-            state = overlay_fold(deltas, use_kernel=use_kernel)
-            t_ck = si.checkpoint_ts[leaf]
-            ev = self._span_events_until(si, t_ck, t, c, pids)
-            if len(ev):
-                state = overlay_fold(
-                    [state, events_to_delta(ev, si.smap, self.cfg.n_attrs)],
-                    use_kernel=use_kernel,
-                )
-            if pids is not None:
-                state = self._restrict_pids(state, si, pids)
-            g = delta_to_graph(state, si.smap)
-            if open_read:
-                g = self._overlay_pending(g, t, si, pids)
-        if not open_read:
-            self._snap_cache_put(key, g, acc)
-        return g
+        with self.read_guard() as view:
+            p0 = self._pending_floor(view)
+            open_read = p0 is not None and t >= p0
+            key = self._snap_key(t, pids, projection, c)
+            if not open_read:
+                hit = self._snap_cache_get(key, epoch=view.epoch)
+                if hit is not None:
+                    return hit
+            with self.cost_scope() as acc:
+                si = self._span_index(t, view)
+                leaf = self._leaf_for(si, t)
+                path = self._hierarchy_path(si, leaf)
+                deltas = [self._fetch_delta(si.span.tsid, did, pids, si, c,
+                                            projection)
+                          for did in path]
+                state = overlay_fold(deltas, use_kernel=use_kernel)
+                t_ck = si.checkpoint_ts[leaf]
+                ev = self._span_events_until(si, t_ck, t, c, pids, view)
+                if len(ev):
+                    state = overlay_fold(
+                        [state, events_to_delta(ev, si.smap, self.cfg.n_attrs)],
+                        use_kernel=use_kernel,
+                    )
+                if pids is not None:
+                    state = self._restrict_pids(state, si, pids)
+                g = delta_to_graph(state, si.smap)
+                if open_read:
+                    g = self._overlay_pending(g, t, si, pids, view)
+            if not open_read:
+                self._snap_cache_put(key, g, acc, epoch=view.epoch)
+            return g
 
     def get_snapshots(self, ts: Sequence[int], c: int = 1,
                       pids: Optional[Sequence[int]] = None,
@@ -836,44 +1147,48 @@ class TGI:
         ts_list = [int(t) for t in np.asarray(ts, np.int64).ravel()]
         out: List[Optional[GraphState]] = [None] * len(ts_list)
         self.last_cost = FetchCost()
-        p0 = self._pending_floor()
-        groups: Dict[Tuple[int, int], List[int]] = {}
-        for j, t in enumerate(ts_list):
-            if p0 is None or t < p0:  # open reads bypass the LRU
-                hit = self._snap_cache_get(self._snap_key(t, pids, projection, c))
-                if hit is not None:
-                    out[j] = hit
-                    continue
-            si = self._span_index(t)
-            groups.setdefault((si.span.tsid, self._leaf_for(si, t)), []).append(j)
-        for (tsid, leaf), members in groups.items():
-            si = self._span_by_tsid[tsid]
-            t_ck = si.checkpoint_ts[leaf]
-            t_hi = max(ts_list[j] for j in members)
-            path = self._hierarchy_path(si, leaf)
-            path_deltas = [
-                self._fetch_delta(tsid, did, pids, si, c, projection)
-                for did in path
-            ]
-            ev = self._span_events_until(si, t_ck, t_hi, c, pids)
-            ev_deltas = []
-            for j in members:
-                ev_j = ev.take(np.nonzero(ev.t <= ts_list[j])[0])
-                ev_deltas.append(
-                    events_to_delta(ev_j, si.smap, self.cfg.n_attrs)
-                    if len(ev_j) else None
-                )
-            states = self._fold_group(path_deltas, ev_deltas, use_kernel)
-            for j, state in zip(members, states):
-                if pids is not None:
-                    state = self._restrict_pids(state, si, pids)
-                g = delta_to_graph(state, si.smap)
-                if p0 is not None and ts_list[j] >= p0:
-                    g = self._overlay_pending(g, ts_list[j], si, pids)
-                out[j] = g
-            # NOT inserted into the snapshot LRU: the group's fetch cost
-            # is shared across members, so a per-t entry would over-
-            # report the logical cost on later single-t cache hits
+        with self.read_guard() as view:
+            p0 = self._pending_floor(view)
+            groups: Dict[Tuple[int, int], List[int]] = {}
+            for j, t in enumerate(ts_list):
+                if p0 is None or t < p0:  # open reads bypass the LRU
+                    hit = self._snap_cache_get(
+                        self._snap_key(t, pids, projection, c),
+                        epoch=view.epoch)
+                    if hit is not None:
+                        out[j] = hit
+                        continue
+                si = self._span_index(t, view)
+                groups.setdefault((si.span.tsid, self._leaf_for(si, t)),
+                                  []).append(j)
+            for (tsid, leaf), members in groups.items():
+                si = view.span_by_tsid[tsid]
+                t_ck = si.checkpoint_ts[leaf]
+                t_hi = max(ts_list[j] for j in members)
+                path = self._hierarchy_path(si, leaf)
+                path_deltas = [
+                    self._fetch_delta(tsid, did, pids, si, c, projection)
+                    for did in path
+                ]
+                ev = self._span_events_until(si, t_ck, t_hi, c, pids, view)
+                ev_deltas = []
+                for j in members:
+                    ev_j = ev.take(np.nonzero(ev.t <= ts_list[j])[0])
+                    ev_deltas.append(
+                        events_to_delta(ev_j, si.smap, self.cfg.n_attrs)
+                        if len(ev_j) else None
+                    )
+                states = self._fold_group(path_deltas, ev_deltas, use_kernel)
+                for j, state in zip(members, states):
+                    if pids is not None:
+                        state = self._restrict_pids(state, si, pids)
+                    g = delta_to_graph(state, si.smap)
+                    if p0 is not None and ts_list[j] >= p0:
+                        g = self._overlay_pending(g, ts_list[j], si, pids, view)
+                    out[j] = g
+                # NOT inserted into the snapshot LRU: the group's fetch cost
+                # is shared across members, so a per-t entry would over-
+                # report the logical cost on later single-t cache hits
         return out  # type: ignore[return-value]
 
     def _fold_group(self, path_deltas: List[Delta],
@@ -923,41 +1238,44 @@ class TGI:
         Buffered (unsealed) events in the window ride along from memory —
         they are not yet referenced by the version chains."""
         self.last_cost = FetchCost()
-        si = self._span_index(t0)
-        pid, slot, found = si.smap.lookup(np.asarray([nid]))
-        p0 = self._pending_floor()
-        pend_has_nid = False
-        if p0 is not None and t0 >= p0:
-            pend0 = self._pending.up_to(t0)
-            pend_has_nid = bool(((pend0.src == nid) | (pend0.dst == nid)).any())
-        init = None
-        if found[0] or pend_has_nid:
-            # a node only the buffer knows has no sealed partition yet —
-            # fall back to the unrestricted overlay read
-            snap = self.get_snapshot(
-                t0, c=c, pids=[int(pid[0])] if found[0] else None)
-            if nid < len(snap.present) and snap.present[nid]:
-                init = {
-                    "present": 1,
-                    "attrs": snap.attrs[nid].copy(),
-                    "neighbors": self._neighbors_of(snap, nid),
-                }
-        ts, tsids, buckets = self.vc.get(nid, t0, t1)
-        ev = EventLog.empty()
-        for tsid in np.unique(tsids):
-            si2 = self._span_by_tsid[int(tsid)]
-            bks = np.unique(buckets[tsids == tsid])
-            # events touching nid are replicated to nid's shard: read it alone
-            pid2, _, found2 = si2.smap.lookup(np.asarray([nid]))
-            sids = [self._sid_of_pid(int(pid2[0]))] if found2[0] else None
-            got = self._fetch_eventlists(si2, int(bks.min()), int(bks.max()) + 1, c,
-                                         sids=sids)
-            ev = ev.concat(got, sort=False)
-        if p0 is not None and t1 >= p0:
-            ev = ev.concat(self._pending.slice_time(t0, t1), sort=False)
-        ev = ev.take(np.argsort(ev.t, kind="stable"))
-        sel = ((ev.src == nid) | (ev.dst == nid)) & (ev.t > t0) & (ev.t <= t1)
-        return init, ev.take(np.nonzero(sel)[0])
+        with self.read_guard() as view:
+            si = self._span_index(t0, view)
+            pid, slot, found = si.smap.lookup(np.asarray([nid]))
+            p0 = self._pending_floor(view)
+            pend_has_nid = False
+            if p0 is not None and t0 >= p0:
+                pend0 = view.pending.up_to(t0)
+                pend_has_nid = bool(
+                    ((pend0.src == nid) | (pend0.dst == nid)).any())
+            init = None
+            if found[0] or pend_has_nid:
+                # a node only the buffer knows has no sealed partition
+                # yet — fall back to the unrestricted overlay read
+                snap = self.get_snapshot(
+                    t0, c=c, pids=[int(pid[0])] if found[0] else None)
+                if nid < len(snap.present) and snap.present[nid]:
+                    init = {
+                        "present": 1,
+                        "attrs": snap.attrs[nid].copy(),
+                        "neighbors": self._neighbors_of(snap, nid),
+                    }
+            ts, tsids, buckets = view.vc.get(nid, t0, t1)
+            ev = EventLog.empty()
+            for tsid in np.unique(tsids):
+                si2 = view.span_by_tsid[int(tsid)]
+                bks = np.unique(buckets[tsids == tsid])
+                # events touching nid replicate to nid's shard: read it alone
+                pid2, _, found2 = si2.smap.lookup(np.asarray([nid]))
+                sids = [self._sid_of_pid(int(pid2[0]))] if found2[0] else None
+                got = self._fetch_eventlists(si2, int(bks.min()),
+                                             int(bks.max()) + 1, c, sids=sids)
+                ev = ev.concat(got, sort=False)
+            if p0 is not None and t1 >= p0:
+                ev = ev.concat(view.pending.slice_time(t0, t1), sort=False)
+            ev = ev.take(np.argsort(ev.t, kind="stable"))
+            sel = (((ev.src == nid) | (ev.dst == nid))
+                   & (ev.t > t0) & (ev.t <= t1))
+            return init, ev.take(np.nonzero(sel)[0])
 
     def _neighbors_of(self, g: GraphState, nid: int) -> np.ndarray:
         src, dst, _ = g.edges()
@@ -971,39 +1289,44 @@ class TGI:
         sizes discounted by decoded-block-pool residency (see
         ``explain_k_hop``) — instead of the paper's fixed k<=2 rule
         (which remains the tie-break)."""
-        if method == "auto":
-            method = self.explain_k_hop(nid, t, k)["method"]
-        if method == "snapshot":
-            g = self.get_snapshot(t, c=c)
-            return self._filter_k_hop(g, nid, k)
-        # expand: fetch the node's partition, then neighbors' partitions
-        self.last_cost = FetchCost()
-        si = self._span_index(t)
-        frontier = np.asarray([nid], np.int32)
-        fetched_pids: set = set()
-        g_acc: Optional[GraphState] = None
-        nodes_seen = set([int(nid)])
-        for _ in range(k + 1):
-            pid, _, found = si.smap.lookup(frontier)
-            need = sorted(set(int(p) for p in pid[found]) - fetched_pids)
-            if need:
-                g_new = self.get_snapshot(t, c=c, pids=need)
-                fetched_pids |= set(need)
-                g_acc = g_new if g_acc is None else _merge_states(g_acc, g_new)
-            if g_acc is None:
-                break
-            nxt = []
-            src, dst, _ = g_acc.edges()
-            for n in frontier:
-                nxt.append(dst[src == n])
-                nxt.append(src[dst == n])
-            nxt = np.unique(np.concatenate(nxt)) if nxt else np.empty(0, np.int32)
-            frontier = np.asarray([x for x in nxt if int(x) not in nodes_seen], np.int32)
-            nodes_seen |= set(int(x) for x in nxt)
-            if not len(frontier):
-                break
-        return self._filter_k_hop(g_acc if g_acc is not None else
-                                  GraphState.empty(self.n_nodes, self.cfg.n_attrs), nid, k)
+        with self.read_guard() as view:
+            if method == "auto":
+                method = self.explain_k_hop(nid, t, k)["method"]
+            if method == "snapshot":
+                g = self.get_snapshot(t, c=c)
+                return self._filter_k_hop(g, nid, k)
+            # expand: fetch the node's partition, then neighbors' ones
+            self.last_cost = FetchCost()
+            si = self._span_index(t, view)
+            frontier = np.asarray([nid], np.int32)
+            fetched_pids: set = set()
+            g_acc: Optional[GraphState] = None
+            nodes_seen = set([int(nid)])
+            for _ in range(k + 1):
+                pid, _, found = si.smap.lookup(frontier)
+                need = sorted(set(int(p) for p in pid[found]) - fetched_pids)
+                if need:
+                    g_new = self.get_snapshot(t, c=c, pids=need)
+                    fetched_pids |= set(need)
+                    g_acc = (g_new if g_acc is None
+                             else _merge_states(g_acc, g_new))
+                if g_acc is None:
+                    break
+                nxt = []
+                src, dst, _ = g_acc.edges()
+                for n in frontier:
+                    nxt.append(dst[src == n])
+                    nxt.append(src[dst == n])
+                nxt = (np.unique(np.concatenate(nxt)) if nxt
+                       else np.empty(0, np.int32))
+                frontier = np.asarray(
+                    [x for x in nxt if int(x) not in nodes_seen], np.int32)
+                nodes_seen |= set(int(x) for x in nxt)
+                if not len(frontier):
+                    break
+            return self._filter_k_hop(
+                g_acc if g_acc is not None
+                else GraphState.empty(view.n_nodes, self.cfg.n_attrs), nid, k)
 
     def _filter_k_hop(self, g: GraphState, nid: int, k: int) -> GraphState:
         keep = {int(nid)}
@@ -1030,32 +1353,37 @@ class TGI:
         return out
 
     def get_node_1hop_history(self, nid: int, t0: int, t1: int, c: int = 1):
-        """Algorithm 5: initial 1-hop state + per-neighbor change events."""
-        init, ev = self.get_node_history(nid, t0, t1, c=c)
-        hood = self.get_k_hop(nid, t0, 1, c=c)
-        neigh_ids = hood.node_ids()
-        neigh_events = {}
-        for m in neigh_ids:
-            if int(m) == int(nid):
-                continue
-            _, ev_m = self.get_node_history(int(m), t0, t1, c=c)
-            neigh_events[int(m)] = ev_m
-        return {"center_init": init, "center_events": ev,
-                "hood": hood, "neighbor_events": neigh_events}
+        """Algorithm 5: initial 1-hop state + per-neighbor change events.
+        The whole multi-call retrieval runs under one read guard, so the
+        center history, the hood, and every neighbor history resolve
+        against the same pinned epoch."""
+        with self.read_guard():
+            init, ev = self.get_node_history(nid, t0, t1, c=c)
+            hood = self.get_k_hop(nid, t0, 1, c=c)
+            neigh_ids = hood.node_ids()
+            neigh_events = {}
+            for m in neigh_ids:
+                if int(m) == int(nid):
+                    continue
+                _, ev_m = self.get_node_history(int(m), t0, t1, c=c)
+                neigh_events[int(m)] = ev_m
+            return {"center_init": init, "center_events": ev,
+                    "hood": hood, "neighbor_events": neigh_events}
 
     # ---- stats ----
     def time_range(self) -> Tuple[int, int]:
         """Ingested time range, including still-buffered (pending) events."""
-        if len(self._pending):
-            t0 = (self._events.time_range()[0] if len(self._events)
-                  else int(self._pending.t[0]))
-            return int(t0), int(self._pending.t[-1])
-        return self._events.time_range()
+        with self._mvcc:
+            if len(self._pending):
+                t0 = (self._events.time_range()[0] if len(self._events)
+                      else int(self._pending.t[0]))
+                return int(t0), int(self._pending.t[-1])
+            return self._events.time_range()
 
     def index_size_bytes(self) -> int:
         """Live encoded bytes on the store (x replication) — shrinks when
         compaction GCs superseded spans."""
-        return self.store.live_bytes()
+        return self.store.report_snapshot()["live_bytes"]
 
     COMPONENT_NAMES = {"E": "eventlists", "S": "hierarchy", "X": "aux_replicas"}
 
@@ -1066,8 +1394,15 @@ class TGI:
         the auxiliary 1-hop replicas (``X:*``), and anything else stored
         under this index's DeltaStore.  ``totals`` adds the aggregate and
         the compression ratio (encoded/raw); sizes are per logical key —
-        multiply by ``replication`` for on-disk bytes."""
-        by_comp = self.store.size_report()
+        multiply by ``replication`` for on-disk bytes.
+
+        Internally consistent mid-compaction: the component breakdown,
+        the totals, and the per-node status all derive from ONE key-size
+        snapshot taken under the store lock (``report_snapshot``), so a
+        report sampled while the maintenance thread publishes never
+        mixes pre- and post-GC views of the store."""
+        snap = self.store.report_snapshot()
+        by_comp = snap["size_report"]
         components: Dict[str, Dict] = {}
         raw_total = enc_total = count_total = 0
         for comp, row in sorted(by_comp.items()):
@@ -1090,7 +1425,8 @@ class TGI:
             # whether the store is the in-process DeltaStore or a
             # RemoteDeltaStore over storage cells, so chaos tests assert
             # cluster health through one report
-            "nodes": self.store.node_status(),
+            "nodes": snap["node_status"],
+            "gc": {"pending_keys": snap["gc_pending_keys"]},
         }
 
 

@@ -115,6 +115,15 @@ class VersionChains:
         self.t, self.tsid, self.bucket = t, ts, bk
         self.segments = []
 
+    def snapshot(self) -> "VersionChains":
+        """O(1) structural snapshot for MVCC read views: shares the base
+        arrays (rebound — never mutated in place — by ``consolidate``)
+        and copies the segment *list*, so a reader holding the snapshot
+        keeps a stable chain while the live object consolidates or grows
+        under the index's MVCC lock."""
+        return VersionChains(self.indptr, self.t, self.tsid, self.bucket,
+                             list(self.segments))
+
     def get(self, nid: int, t0=None, t1=None):
         """References for node nid with t in (t0, t1] (paper Alg. 2 l.2-3)."""
         parts = [_csr_slice((self.indptr, self.t, self.tsid, self.bucket),

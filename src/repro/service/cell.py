@@ -43,6 +43,7 @@ import threading
 from pathlib import Path
 from typing import Dict, List, Optional, Tuple
 
+from repro.core import faultpoints
 from repro.service import wire
 from repro.storage.kvstore import (DeltaStore, KeyMissing, replica_nodes)
 
@@ -82,6 +83,12 @@ class StorageCell:
         self._stop = threading.Event()
         self._threads: List[threading.Thread] = []
         self._conns: set = set()
+        # background store maintenance (chunk vacuum): one pass at a
+        # time, triggered by MSG_MAINT; the cell keeps serving while it
+        # runs (vacuum holds the store lock per chunk only)
+        self._maint_lock = threading.Lock()
+        self._maint_thread: Optional[threading.Thread] = None
+        self.last_vacuum: Optional[Dict] = None
 
     # ---- feed persistence ----
     def _feed_path(self) -> Optional[Path]:
@@ -142,6 +149,10 @@ class StorageCell:
         no longer a gap, and peers replicating this feed dedupe it the
         same way — but the store mutation is skipped so the key never
         regresses to a stale version."""
+        # crash point for the service fault suite: REPRO_FAULTPOINTS=
+        # "cell.apply=N:kill" SIGKILLs this cell on its Nth applied
+        # record — mid write storm, before the mutation lands
+        faultpoints.fire("cell.apply")
         with self._flock:
             if rec.seq in self._applied:
                 return False, False
@@ -166,6 +177,29 @@ class StorageCell:
     def feed_since(self, seq: int) -> List[wire.FeedRecord]:
         with self._flock:
             return [r for r in self._feed if r.seq > seq]
+
+    # ---- background maintenance ----
+    def maintain(self) -> bool:
+        """Kick a background vacuum of the store's chunk files (reclaim
+        tombstoned/superseded records).  Returns whether a new pass was
+        started (False: one is already running).  The cell never refuses
+        traffic during the pass — ``DeltaStore.vacuum`` holds the store
+        lock per chunk and readers retry across rewrites."""
+        with self._maint_lock:
+            if self._maint_thread is not None and self._maint_thread.is_alive():
+                return False
+            t = threading.Thread(target=self._maint_pass,
+                                 name=f"cell{self.node_id}-maint",
+                                 daemon=True)
+            self._maint_thread = t
+            t.start()
+            return True
+
+    def _maint_pass(self) -> None:
+        try:
+            self.last_vacuum = self.store.vacuum()
+        except Exception:  # noqa: BLE001 — maintenance must not kill serving
+            self.last_vacuum = None
 
     # ---- replica catch-up ----
     def catch_up(self, peers: List[Tuple[str, int]],
@@ -348,6 +382,11 @@ class StorageCell:
                           "bytes_read": s.bytes_read,
                           "bytes_written": s.bytes_written,
                           "bytes_io": s.bytes_io},
+                "maint": {
+                    "running": (self._maint_thread is not None
+                                and self._maint_thread.is_alive()),
+                    "last_vacuum": self.last_vacuum,
+                },
             }
             return wire.MSG_OK, json.dumps(status).encode()
         if msg_type == wire.MSG_KEYS:
@@ -355,6 +394,11 @@ class StorageCell:
             keys = self.store.keys_for_placement(tsid, sid)
             return wire.MSG_OK, (struct.pack("<I", len(keys))
                                  + b"".join(wire.pack_key(k) for k in keys))
+        if msg_type == wire.MSG_MAINT:
+            # fire-and-forget: the pass runs on a background thread so
+            # the cell answers (and keeps serving) immediately
+            started = self.maintain()
+            return wire.MSG_OK, struct.pack("<B", started)
         raise AssertionError(f"unknown message type {msg_type}")
 
 

@@ -455,3 +455,21 @@ class RemoteDeltaStore(DeltaStore):
         the bench asserts server-measured ``bytes_io`` through this."""
         import json
         return json.loads(self._request(node, wire.MSG_STATUS, b""))
+
+    def maintain(self, node: int) -> bool:
+        """Ask one cell to run a background vacuum pass (MSG_MAINT).
+        The cell acks immediately and keeps serving while the pass runs;
+        returns whether a new pass was started (False: already running).
+        Progress/results surface in ``cell_status(node)["maint"]``."""
+        reply = self._request(node, wire.MSG_MAINT, b"")
+        (started,) = struct.unpack_from("<B", reply, 0)
+        return bool(started)
+
+    def report_snapshot(self) -> Dict:
+        """One-copy storage accounting (see the base class), with the
+        node section swapped for the *probed* cluster health — remote
+        liveness is a cell property, not derivable from the client's
+        write-accounting mirror."""
+        snap = super().report_snapshot()
+        snap["node_status"] = self.node_status()
+        return snap

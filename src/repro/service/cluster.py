@@ -26,7 +26,7 @@ import subprocess
 import sys
 import time
 from pathlib import Path
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.service.cell import StorageCell
 from repro.service.client import RemoteDeltaStore
@@ -40,6 +40,11 @@ class ClusterSpec:
     root: Optional[str] = None  # required for the file backend
     fmt: Optional[str] = None
     host: str = "127.0.0.1"
+    # per-node environment overrides for subprocess cells (e.g. arm a
+    # fault point in ONE cell: {1: {"REPRO_FAULTPOINTS": "cell.apply=
+    # 5:kill"}}); merged over the inherited environment at spawn AND
+    # respawn, so a restarted cell comes back with the same overrides
+    cell_env: Optional[Dict[int, Dict[str, str]]] = None
 
     def cell_root(self, node: int) -> Optional[str]:
         if self.backend == "mem":
@@ -136,6 +141,8 @@ class LocalCluster:
         env["PYTHONPATH"] = os.pathsep.join(
             [src] + [p for p in env.get("PYTHONPATH", "").split(os.pathsep)
                      if p])
+        if spec.cell_env and node in spec.cell_env:
+            env.update(spec.cell_env[node])
         cmd = [sys.executable, "-m", "repro.service.cell",
                "--node-id", str(node), "--n-cells", str(spec.n_cells),
                "--replication", str(spec.r), "--backend", spec.backend,

@@ -43,7 +43,8 @@ HEADER = struct.Struct("<2sBBIII")  # magic, version, type, req_id, len, crc
 MAX_FRAME = 1 << 28  # 256 MiB: far above any block, far below a bomb
 
 (MSG_HELLO, MSG_OK, MSG_ERR, MSG_PING, MSG_GET, MSG_MULTIGET, MSG_PUT,
- MSG_DELETE, MSG_FEED_SINCE, MSG_STATUS, MSG_KEYS) = range(1, 12)
+ MSG_DELETE, MSG_FEED_SINCE, MSG_STATUS, MSG_KEYS,
+ MSG_MAINT) = range(1, 13)
 
 # ERR body codes (pack_str'd): the client maps these back to the local
 # store's exception types so failure semantics match the local backend

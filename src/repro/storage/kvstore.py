@@ -44,6 +44,7 @@ from typing import Dict, Iterable, List, NamedTuple, Optional, Tuple
 
 import numpy as np
 
+from repro.core import faultpoints
 from repro.storage import serialize
 from repro.storage.serialize import BlockCorruption  # re-export  # noqa: F401
 
@@ -168,12 +169,22 @@ class BlockPool:
         self._cols: "collections.OrderedDict" = collections.OrderedDict()
         self._dirs: Dict[DeltaKey, List[serialize.ColumnMeta]] = {}
         self._by_key: Dict[DeltaKey, set] = defaultdict(set)
+        # per-key write-version counter, monotonic for the pool's
+        # lifetime (never reset, even on delete — a re-put must not
+        # collide with a token captured before the delete).  Writers bump
+        # it AFTER mutating the backend and BEFORE invalidating; readers
+        # capture it BEFORE their physical read and pass it to ``put``/
+        # ``dir_put``, which reject the fill on mismatch.  That closes
+        # the read/invalidate race: a fill computed from pre-write bytes
+        # can never land after the writer's invalidation.
+        self._wver: Dict[DeltaKey, int] = {}
         self.bytes_cached = 0
         self.hits = 0
         self.misses = 0
         self.evictions = 0
         self.inserts = 0
         self.invalidations = 0
+        self.stale_rejects = 0
 
     def get(self, key: DeltaKey, col: str) -> Optional[np.ndarray]:
         with self._lock:
@@ -191,7 +202,20 @@ class BlockPool:
         with self._lock:
             return (key, col) in self._cols
 
-    def put(self, key: DeltaKey, col: str, arr: np.ndarray) -> None:
+    def write_version(self, key: DeltaKey) -> int:
+        """Current write version of ``key`` — capture BEFORE a physical
+        read, hand back to ``put``/``dir_put`` as ``ver=``."""
+        with self._lock:
+            return self._wver.get(key, 0)
+
+    def bump_version(self, key: DeltaKey) -> None:
+        """Writer-side: record that the backend bytes of ``key`` changed.
+        Must happen after the backend mutation and before ``invalidate``."""
+        with self._lock:
+            self._wver[key] = self._wver.get(key, 0) + 1
+
+    def put(self, key: DeltaKey, col: str, arr: np.ndarray,
+            ver: Optional[int] = None) -> None:
         nb = int(arr.nbytes)
         if nb > self.budget:
             return  # larger than the whole pool: not cacheable
@@ -202,6 +226,9 @@ class BlockPool:
         arr = np.array(arr, copy=True)
         arr.flags.writeable = False
         with self._lock:
+            if ver is not None and ver != self._wver.get(key, 0):
+                self.stale_rejects += 1  # decoded from superseded bytes
+                return
             k = (key, col)
             old = self._cols.pop(k, None)
             if old is not None:
@@ -225,8 +252,12 @@ class BlockPool:
         with self._lock:
             return self._dirs.get(key)
 
-    def dir_put(self, key: DeltaKey, entries: List[serialize.ColumnMeta]) -> None:
+    def dir_put(self, key: DeltaKey, entries: List[serialize.ColumnMeta],
+                ver: Optional[int] = None) -> None:
         with self._lock:
+            if ver is not None and ver != self._wver.get(key, 0):
+                self.stale_rejects += 1  # directory of superseded bytes
+                return
             self._dirs[key] = entries
             self._by_key.setdefault(key, set())
 
@@ -264,6 +295,7 @@ class BlockPool:
                 "inserts": self.inserts,
                 "evictions": self.evictions,
                 "invalidations": self.invalidations,
+                "stale_rejects": self.stale_rejects,
             }
 
 
@@ -293,6 +325,18 @@ class DeltaStore:
         # storage-accounting source for TGI.storage_report()
         self.key_sizes: Dict[DeltaKey, Tuple[int, int]] = {}
         self._lock = threading.Lock()
+        # epoch-tagged deferred GC: (publish_epoch, [keys]) batches from
+        # MVCC maintenance, deletable only once every reader pinned below
+        # publish_epoch has drained (TGI drives gc_drain on guard exit)
+        self._gc_queue: List[Tuple[int, List[DeltaKey]]] = []
+        # file-backend vacuum: generation counter bumped on every chunk
+        # rewrite; lock-free readers holding a pre-rewrite extent table
+        # retry once when they fail and the generation moved
+        self._vacuum_gen = 0
+        self._vacuum_lock = threading.Lock()
+        # per-read pool-version token (set by ``get`` around its physical
+        # read so the dir-fill deep in the read path can version-check)
+        self._rd_tls = threading.local()
         # file backend: per-(node, placement) extent tables, lazily
         # loaded from the .tgx sidecars (or one legacy chunk scan)
         self._ext_cache: Dict[Tuple[int, Tuple[int, int]],
@@ -334,10 +378,16 @@ class DeltaStore:
         shape): for each of the ``m`` nodes, whether it is up and the
         live keys / encoded bytes it hosts (replicas counted on every
         node holding them, from the write-time ``key_sizes``)."""
-        keys_per = [0] * self.m
-        bytes_per = [0] * self.m
         with self._lock:
             items = list(self.key_sizes.items())
+        return self._node_status_from(items)
+
+    def _node_status_from(self, items) -> Dict:
+        """``node_status`` computed from one caller-supplied snapshot of
+        ``key_sizes.items()`` (so ``report_snapshot`` can derive every
+        section from a single point-in-time copy)."""
+        keys_per = [0] * self.m
+        bytes_per = [0] * self.m
         for key, (_, enc) in items:
             for n in self.replicas(key):
                 keys_per[n] += 1
@@ -479,6 +529,11 @@ class DeltaStore:
         if not wrote:
             raise StorageNodeDown(f"all replicas down for {key}")
         if self.pool is not None:  # a rewrite must never serve stale blocks
+            # bump-then-invalidate: the bump fences out in-flight readers
+            # (their captured version no longer matches, so their decoded
+            # pre-write blocks can't re-fill the pool after this
+            # invalidation), the invalidation drops what's already cached
+            self.pool.bump_version(key)
             self.pool.invalidate(key)
         with self._lock:
             self.stats.writes += 1
@@ -544,6 +599,7 @@ class DeltaStore:
                     self._ext_record(node, key.placement, rec_key,
                                      0, _TOMBSTONE)
         if self.pool is not None:  # GC'd blocks must never be served
+            self.pool.bump_version(key)  # fence in-flight reader re-fills
             self.pool.invalidate(key)
         with self._lock:
             sizes = self.key_sizes.pop(key, None)
@@ -553,15 +609,82 @@ class DeltaStore:
             self.stats.bytes_deleted += sizes[1] * self.r
         return True
 
+    # ---- epoch-deferred GC (MVCC maintenance) ----
+
+    def delete_deferred(self, keys: Iterable[DeltaKey], epoch: int) -> int:
+        """Queue superseded keys for GC, tagged with the epoch at which
+        they stopped being reachable (the maintenance pass's post-publish
+        ``read_epoch``).  They stay readable until ``gc_drain`` proves no
+        pinned reader can still reach them."""
+        keys = list(keys)
+        if not keys:
+            return 0
+        with self._lock:
+            self._gc_queue.append((int(epoch), keys))
+        return len(keys)
+
+    def gc_pending(self) -> int:
+        """Keys queued for GC but not yet reclaimed (pinned readers, or
+        no drain since the last publish)."""
+        with self._lock:
+            return sum(len(ks) for _, ks in self._gc_queue)
+
+    def gc_drain(self, min_pinned_epoch: Optional[int] = None,
+                 ) -> Tuple[int, int]:
+        """Reclaim every queued batch whose tag epoch is safe: a batch
+        tagged E was superseded by the publish that bumped the epoch *to*
+        E, so a reader pinned at E or later only sees the replacement
+        layout — the batch is deletable once ``min_pinned_epoch >= E``
+        (or nothing is pinned at all).  Batches are epoch-ordered (the
+        queue is append-only under a monotonic epoch), so the drain stops
+        at the first unsafe batch.  Returns ``(keys_deleted,
+        encoded_bytes_deleted)``.  A crash mid-batch (``compact.mid_gc``
+        fault point) re-queues the undeleted remainder, so a retried
+        drain converges instead of leaking."""
+        deleted, freed = 0, 0
+        while True:
+            with self._lock:
+                if not self._gc_queue:
+                    break
+                epoch, keys = self._gc_queue[0]
+                if min_pinned_epoch is not None and min_pinned_epoch < epoch:
+                    break  # a pinned reader may still reach this batch
+                self._gc_queue.pop(0)
+            idx = 0
+            try:
+                for idx, k in enumerate(keys):
+                    faultpoints.fire("compact.mid_gc")
+                    with self._lock:
+                        sz = self.key_sizes.get(k)
+                    if self.delete(k):
+                        deleted += 1
+                        freed += (sz[1] * self.r) if sz else 0
+            except BaseException:
+                with self._lock:  # keys[idx] was not deleted: keep it
+                    self._gc_queue.insert(0, (epoch, keys[idx:]))
+                raise
+        return deleted, freed
+
     def live_bytes(self) -> int:
         """Encoded bytes currently live on the store (x replication) —
         unlike ``stats.bytes_written`` this shrinks after GC."""
         with self._lock:
             return sum(enc for _, enc in self.key_sizes.values()) * self.r
 
+    def _dir_ver(self, key: DeltaKey) -> Optional[int]:
+        """The pool write-version ``get`` captured before this thread's
+        in-flight physical read of ``key`` (None when the read did not
+        come through ``get`` — then the fill is unchecked, matching the
+        callers that never race a writer)."""
+        cur = getattr(self._rd_tls, "cur", None)
+        if cur is not None and cur[0] == key:
+            return cur[1]
+        return None
+
     def _pool_dir_fill(self, key: DeltaKey, blob: bytes) -> None:
         if self.pool is not None and self.pool.dir_get(key) is None:
-            self.pool.dir_put(key, serialize.walk(blob))
+            self.pool.dir_put(key, serialize.walk(blob),
+                              ver=self._dir_ver(key))
 
     def _read_columns(self, node: int, key: DeltaKey,
                       fields: Optional[Tuple[str, ...]],
@@ -584,6 +707,25 @@ class DeltaStore:
     def _read_columns_seek(self, node: int, key: DeltaKey,
                            fields: Optional[Tuple[str, ...]],
                            ) -> Tuple[Dict[str, np.ndarray], int, int]:
+        """Range-seek read with one vacuum retry: readers are lock-free
+        against ``vacuum()``'s chunk rewrites, so a reader holding a
+        pre-rewrite extent table can seek into relocated bytes — every
+        such landing fails loudly (crc32 mismatch -> BlockCorruption,
+        short read -> truncated directory, dropped extent -> KeyMissing).
+        If the vacuum generation moved during the read, retry once
+        against the refreshed extents; a failure with an unmoved
+        generation is a real error and propagates."""
+        gen0 = self._vacuum_gen
+        try:
+            return self._read_columns_seek_raw(node, key, fields)
+        except (KeyMissing, BlockCorruption, ValueError, OSError):
+            if self._vacuum_gen == gen0:
+                raise
+            return self._read_columns_seek_raw(node, key, fields)
+
+    def _read_columns_seek_raw(self, node: int, key: DeltaKey,
+                               fields: Optional[Tuple[str, ...]],
+                               ) -> Tuple[Dict[str, np.ndarray], int, int]:
         """Range-seek read: extent lookup -> directory prefix pread ->
         one pread per requested column.  Unrequested columns cost zero
         file bytes (``stats.bytes_io`` counts exactly what was read)."""
@@ -620,7 +762,7 @@ class DeltaStore:
             if entries is None:
                 raise BlockCorruption(f"truncated TGI2 directory for {key}")
             if self.pool is not None and self.pool.dir_get(key) is None:
-                self.pool.dir_put(key, entries)
+                self.pool.dir_put(key, entries, ver=self._dir_ver(key))
             want = None if fields is None else set(fields)
             arrays: Dict[str, np.ndarray] = {}
             enc_read, raw_read = 8, 0
@@ -686,50 +828,60 @@ class DeltaStore:
                     return dict(pooled)
                 need = tuple(missing)
         last_err: Exception = KeyMissing(key)
-        for j, node in enumerate(self.replicas(key)):
-            if not self._node_ok(node):
+        # version token captured BEFORE the physical read: if a writer
+        # rewrites/deletes this key while we read, the pool rejects our
+        # (now stale) fill instead of resurrecting superseded blocks
+        tok = self.pool.write_version(key) if self.pool is not None else None
+        self._rd_tls.cur = (key, tok)
+        try:
+            for j, node in enumerate(self.replicas(key)):
+                if not self._node_ok(node):
+                    with self._lock:
+                        self.stats.failovers += j > 0 or self.r == 1
+                    continue
+                try:
+                    arrays, enc_read, raw_read = self._read_columns(
+                        node, key, need)
+                except KeyMissing as e:
+                    last_err = e
+                    continue
+                except BlockCorruption as e:
+                    # a corrupt replica is as dead as a down one: fail over
+                    # to the next copy (the error surfaces only when every
+                    # replica is corrupt or missing)
+                    last_err = e
+                    with self._lock:
+                        self.stats.failovers += 1
+                    continue
+                except NodeUnavailable as e:
+                    # an unreachable cell (remote backend): mark it suspect
+                    # so the rest of the batch hedges, and fail over
+                    last_err = e
+                    self._mark_unavailable(node)
+                    with self._lock:
+                        self.stats.failovers += 1
+                    continue
                 with self._lock:
-                    self.stats.failovers += j > 0 or self.r == 1
-                continue
-            try:
-                arrays, enc_read, raw_read = self._read_columns(node, key, need)
-            except KeyMissing as e:
-                last_err = e
-                continue
-            except BlockCorruption as e:
-                # a corrupt replica is as dead as a down one: fail over
-                # to the next copy (the error surfaces only when every
-                # replica is corrupt or missing)
-                last_err = e
-                with self._lock:
-                    self.stats.failovers += 1
-                continue
-            except NodeUnavailable as e:
-                # an unreachable cell (remote backend): mark it suspect
-                # so the rest of the batch hedges, and fail over
-                last_err = e
-                self._mark_unavailable(node)
-                with self._lock:
-                    self.stats.failovers += 1
-                continue
-            with self._lock:
-                self.stats.reads += 1
-                self.stats.bytes_read += enc_read
-                self.stats.bytes_decompressed += raw_read
+                    self.stats.reads += 1
+                    self.stats.bytes_read += enc_read
+                    self.stats.bytes_decompressed += raw_read
+                    if self.pool is not None:
+                        self.stats.pool_hits += len(pooled)
+                        self.stats.pool_misses += len(arrays)
+                        self.stats.bytes_pool_served += pool_raw
+                    if j > 0:
+                        self.stats.failovers += 1
                 if self.pool is not None:
-                    self.stats.pool_hits += len(pooled)
-                    self.stats.pool_misses += len(arrays)
-                    self.stats.bytes_pool_served += pool_raw
-                if j > 0:
-                    self.stats.failovers += 1
-            if self.pool is not None:
-                for n, a in arrays.items():
-                    self.pool.put(key, n, a)
-            if sizes is not None:
-                sizes[key] = ReadSizes(enc_read, raw_read, pool_raw, len(pooled))
-            if pooled:
-                arrays = {**pooled, **arrays}
-            return arrays
+                    for n, a in arrays.items():
+                        self.pool.put(key, n, a, ver=tok)
+                if sizes is not None:
+                    sizes[key] = ReadSizes(enc_read, raw_read, pool_raw,
+                                           len(pooled))
+                if pooled:
+                    arrays = {**pooled, **arrays}
+                return arrays
+        finally:
+            self._rd_tls.cur = None
         if isinstance(last_err, (KeyMissing, BlockCorruption)):
             raise last_err
         raise StorageNodeDown(f"no live replica for {key}")
@@ -874,6 +1026,20 @@ class DeltaStore:
                            want: Optional[set],
                            ) -> Tuple[List[serialize.ColumnMeta],
                                       Dict[str, bytes], int]:
+        """Range-seek twin of ``_read_encoded`` with the same one-shot
+        vacuum retry as ``_read_columns_seek``."""
+        gen0 = self._vacuum_gen
+        try:
+            return self._read_encoded_seek_raw(node, key, want)
+        except (KeyMissing, BlockCorruption, ValueError, OSError):
+            if self._vacuum_gen == gen0:
+                raise
+            return self._read_encoded_seek_raw(node, key, want)
+
+    def _read_encoded_seek_raw(self, node: int, key: DeltaKey,
+                               want: Optional[set],
+                               ) -> Tuple[List[serialize.ColumnMeta],
+                                          Dict[str, bytes], int]:
         """Range-seek twin of ``_read_encoded``: extent lookup ->
         directory prefix pread -> one pread per wanted column.
         Unrequested columns cost zero file bytes."""
@@ -933,9 +1099,13 @@ class DeltaStore:
         for on-disk bytes).  Components are the did prefixes: ``E``
         eventlists, ``S`` hierarchy deltas, ``X`` aux replicas, and the
         literal did for anything else (checkpoint blocks, manifests)."""
-        out: Dict[str, Dict[str, int]] = {}
         with self._lock:
             items = list(self.key_sizes.items())
+        return self._size_report_from(items)
+
+    @staticmethod
+    def _size_report_from(items) -> Dict[str, Dict[str, int]]:
+        out: Dict[str, Dict[str, int]] = {}
         for key, (raw, enc) in items:
             comp = key.did.split(":", 1)[0]
             row = out.setdefault(comp, {"raw": 0, "encoded": 0, "count": 0})
@@ -943,6 +1113,23 @@ class DeltaStore:
             row["encoded"] += enc
             row["count"] += 1
         return out
+
+    def report_snapshot(self) -> Dict:
+        """Every storage-accounting section — per-component sizes, per-
+        node live data, total live bytes, GC backlog — derived from ONE
+        point-in-time copy of the write accounting taken under the store
+        lock.  ``TGI.storage_report`` builds on this so a report taken
+        mid-compaction is internally consistent: its sections can never
+        mix pre- and post-publish states of ``key_sizes``."""
+        with self._lock:
+            items = list(self.key_sizes.items())
+            gc_pending = sum(len(ks) for _, ks in self._gc_queue)
+        return {
+            "size_report": self._size_report_from(items),
+            "node_status": self._node_status_from(items),
+            "live_bytes": sum(enc for _, (_, enc) in items) * self.r,
+            "gc_pending_keys": gc_pending,
+        }
 
     def keys_for_placement(self, tsid: int, sid: int) -> List[DeltaKey]:
         """Enumerate stored micro-delta keys under one placement chunk."""
@@ -975,3 +1162,85 @@ class DeltaStore:
                 off += blen
                 ks.add(DeltaKey(tsid, sid, did, int(pid)))
         return sorted(ks)
+
+    def vacuum(self) -> Dict[str, int]:
+        """File-backend chunk compaction: rewrite each chunk with only
+        its live (non-tombstoned, non-superseded) records, dropping the
+        garbage that append-only puts and tombstone deletes accumulate.
+        This is the maintenance a StorageCell runs in the background on a
+        MAINT request — it must not refuse traffic, so each chunk is
+        rewritten under ONE hold of the store lock (writers queue behind
+        it briefly); lock-free readers that raced the rename retry once
+        via the vacuum-generation check in the seek readers.  The rewrite
+        goes through a temp file + ``os.replace`` so a crash mid-vacuum
+        (``cell.vacuum`` fault point) leaves every chunk either fully old
+        or fully new — both readable.  Returns rewrite counters."""
+        out = {"chunks_scanned": 0, "chunks_rewritten": 0,
+               "chunks_removed": 0, "bytes_before": 0, "bytes_after": 0}
+        if self.backend != "file":
+            return out
+        with self._vacuum_lock:  # one vacuum at a time
+            for node in range(self.m):
+                ndir = self.root / f"node{node}"
+                for cpath in sorted(ndir.glob("ts*_s*.tgi")):
+                    stem = cpath.stem  # ts{tsid}_s{sid}
+                    try:
+                        tsid_s, sid_s = stem[2:].split("_s")
+                        placement = (int(tsid_s), int(sid_s))
+                    except ValueError:
+                        continue
+                    faultpoints.fire("cell.vacuum")
+                    self._extents(node, placement)  # ensure table loaded
+                    with self._lock:
+                        out["chunks_scanned"] += 1
+                        cache = self._ext_cache.get((node, placement), {})
+                        try:
+                            data = cpath.read_bytes()
+                        except OSError:
+                            continue
+                        out["bytes_before"] += len(data)
+                        epath = self._extent_path(node, placement)
+                        if not cache:  # fully dead: drop chunk + sidecar
+                            cpath.unlink(missing_ok=True)
+                            epath.unlink(missing_ok=True)
+                            self._ext_cache.pop((node, placement), None)
+                            self._vacuum_gen += 1
+                            out["chunks_removed"] += 1
+                            continue
+                        parts: List[bytes] = []
+                        new_cache: Dict[bytes, Tuple[int, int]] = {}
+                        pos = 0
+                        for rec_key, (boff, blen) in sorted(
+                                cache.items(), key=lambda kv: kv[1][0]):
+                            blob = data[boff:boff + blen]
+                            if len(blob) != blen:
+                                continue  # torn extent: drop the record
+                            rec = (len(rec_key).to_bytes(4, "little")
+                                   + rec_key
+                                   + blen.to_bytes(8, "little") + blob)
+                            new_cache[rec_key] = (
+                                pos + 4 + len(rec_key) + 8, blen)
+                            parts.append(rec)
+                            pos += len(rec)
+                        new_data = b"".join(parts)
+                        if len(new_data) == len(data):
+                            out["bytes_after"] += len(new_data)
+                            continue  # nothing dead: leave untouched
+                        tmp_c = cpath.parent / (cpath.name + ".tmp")
+                        tmp_c.write_bytes(new_data)
+                        ext_parts = []
+                        for rec_key, (boff, blen) in new_cache.items():
+                            ext_parts.append(
+                                len(rec_key).to_bytes(4, "little") + rec_key
+                                + boff.to_bytes(8, "little")
+                                + blen.to_bytes(8, "little"))
+                        tmp_e = epath.parent / (epath.name + ".tmp")
+                        tmp_e.write_bytes(b"".join(ext_parts))
+                        os.replace(tmp_c, cpath)
+                        os.replace(tmp_e, epath)
+                        self._ext_cache[(node, placement)] = new_cache
+                        self._vacuum_gen += 1
+                        out["chunks_rewritten"] += 1
+                        out["bytes_after"] += len(new_data)
+                        self.stats.bytes_io += len(data) + len(new_data)
+        return out

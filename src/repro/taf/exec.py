@@ -67,7 +67,8 @@ def parallel_fetch(tgi, t0: int, t1: int, c: int = 1) -> SoN:
         "parallel_fetch is deprecated; use HistoricalGraphStore.nodes()",
         DeprecationWarning, stacklevel=2,
     )
-    return build_son(tgi, t0, t1, c=max(c, tgi.cfg.n_shards))
+    with tgi.read_guard():  # snapshot + replay from one pinned epoch
+        return build_son(tgi, t0, t1, c=max(c, tgi.cfg.n_shards))
 
 
 def _pad_to_multiple(x: np.ndarray, mult: int, fill):

@@ -42,6 +42,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 import weakref
 from typing import Any, Callable, Optional, Tuple
 
@@ -247,13 +248,18 @@ class PlanExecutor:
     # against id() recycling.  Logical FetchCost is replayed on hits.
     FETCH_CACHE_MAX = 8
     _fetch_cache: "collections.OrderedDict" = collections.OrderedDict()
+    # the cache is class-level and executors run on arbitrary query
+    # threads: every probe/insert holds this lock (entries are immutable
+    # once inserted, so readers only need the dict ops protected)
+    _fetch_lock = threading.Lock()
 
     def __init__(self, tgi=None):
         self.tgi = tgi
 
     @classmethod
     def clear_fetch_cache(cls) -> None:
-        cls._fetch_cache.clear()
+        with cls._fetch_lock:
+            cls._fetch_cache.clear()
 
     def run(self, plan: Plan) -> PlanResult:
         plan.validate()
@@ -322,6 +328,16 @@ class PlanExecutor:
     def _fetch(self, stage: Fetch) -> Tuple[SoN, FetchCost, Tuple[str, ...]]:
         if self.tgi is None:
             raise ValueError("Fetch stage requires a TGI-backed executor")
+        # one read guard around source selection + cache probe + build:
+        # every read (cost estimate, snapshot, event replay) sees the
+        # same pinned epoch, and the cache key carries that epoch — a
+        # concurrent maintenance publish can neither tear the operand
+        # nor serve it to a reader of a different epoch
+        with self.tgi.read_guard() as _view:
+            return self._fetch_guarded(stage, _view)
+
+    def _fetch_guarded(self, stage: Fetch, view,
+                       ) -> Tuple[SoN, FetchCost, Tuple[str, ...]]:
         node_ids = None
         pids = None
         notes = []
@@ -349,15 +365,21 @@ class PlanExecutor:
                         "fetch: pruned->full (warm snapshot LRU beats a "
                         f"mostly-cold pruned read of "
                         f"~{int(est['physical_raw_bytes'])}B)")
-        ck = (id(self.tgi), self.tgi.read_epoch, stage.t0, stage.t1,
+        notes.append(f"fetch: pinned read epoch {view.epoch}")
+        ck = (id(self.tgi), view.epoch, stage.t0, stage.t1,
               stage.subgraph, stage.node_ids, stage.projection, stage.c,
               None if pids is None else tuple(pids))
-        hit = self._fetch_cache.get(ck)
-        if hit is not None and hit[0]() is self.tgi:
-            self._fetch_cache.move_to_end(ck)
+        with self._fetch_lock:
+            hit = self._fetch_cache.get(ck)
+            if hit is not None and hit[0]() is self.tgi:
+                self._fetch_cache.move_to_end(ck)
+                hit_operand, hit_cost = hit[1], hit[2].copy()
+            else:
+                hit = None
+        if hit is not None:
             notes.append("fetch: shared across plans (fetch-cache hit, "
                          "logical cost replayed)")
-            return hit[1], hit[2].copy(), tuple(notes)
+            return hit_operand, hit_cost, tuple(notes)
         build = build_sots if stage.subgraph else build_son
         with self.tgi.cost_scope() as acc:
             operand = build(self.tgi, stage.t0, stage.t1, node_ids=node_ids,
@@ -367,9 +389,11 @@ class PlanExecutor:
             # universe is the t0 snapshot, so drop requested ids that are
             # not alive at t0 (build_son materializes them regardless)
             operand = operand.subset(np.nonzero(operand.init_present == 1)[0])
-        self._fetch_cache[ck] = (weakref.ref(self.tgi), operand, acc.copy())
-        while len(self._fetch_cache) > self.FETCH_CACHE_MAX:
-            self._fetch_cache.popitem(last=False)
+        with self._fetch_lock:
+            self._fetch_cache[ck] = (weakref.ref(self.tgi), operand,
+                                     acc.copy())
+            while len(self._fetch_cache) > self.FETCH_CACHE_MAX:
+                self._fetch_cache.popitem(last=False)
         return operand, acc, tuple(notes)
 
     def _compute(self, son: SoN, stage: Compute) -> Any:

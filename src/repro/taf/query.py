@@ -103,15 +103,26 @@ class HistoricalGraphStore:
         """Seal every buffered (appended) event into spans."""
         self.tgi.flush()
 
-    def compact(self, min_run: int = 2):
+    def compact(self, min_run: int = 2, wait: bool = True):
         """Merge runs of adjacent micro-spans accreted by small
-        update/append batches and GC the superseded store keys.  Returns
-        ``CompactionStats``; the fetch cost of compaction's own reads
-        lands on ``last_cost`` (its write/delete I/O is in the stats'
-        byte counters)."""
-        stats = self.tgi.compact(min_run=min_run)
-        self.last_cost = stats.cost
-        return stats
+        update/append batches and GC the superseded store keys.  Runs on
+        the background maintenance thread; queries and ingest keep
+        serving concurrently (readers pin their epoch, the new layout
+        lands in one atomic publish).  With ``wait=True`` (default)
+        blocks and returns ``CompactionStats`` — the fetch cost of
+        compaction's own reads lands on ``last_cost`` (its write/delete
+        I/O is in the stats' byte counters); with ``wait=False`` returns
+        a ``concurrent.futures.Future`` of the stats immediately."""
+        out = self.tgi.compact(min_run=min_run, wait=wait)
+        if wait:
+            self.last_cost = out.cost
+        return out
+
+    def read_guard(self):
+        """Pin the current read epoch for a block of multiple reads (see
+        ``TGI.read_guard``): every query inside observes one immutable
+        layout, regardless of concurrent ingest or compaction."""
+        return self.tgi.read_guard()
 
     def time_range(self) -> Tuple[int, int]:
         return self.tgi.time_range()
@@ -181,6 +192,11 @@ class HistoricalGraphStore:
             "failovers": self.store.stats.failovers,
             "hedged_reads": self.store.stats.hedged_reads,
             "plan_compile": _compile_cache_stats(),
+            # MVCC observability: the published epoch, who's pinned
+            # below it, and how many superseded keys await GC
+            "read_epoch": self.tgi.read_epoch,
+            "pinned_epochs": self.tgi.pinned_epochs(),
+            "gc_pending_keys": self.store.gc_pending(),
         }
 
     def node_1hop_history(self, nid: int, t0: int, t1: int, c: int = 1):

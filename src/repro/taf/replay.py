@@ -31,6 +31,7 @@ tests use it to assert a multi-timepoint plan issues exactly one replay.
 """
 from __future__ import annotations
 
+import threading
 import weakref
 from collections import OrderedDict
 from typing import Dict, List, Optional, Tuple
@@ -395,38 +396,47 @@ class ReplayCache:
     ``id()`` can be recycled after gc, so every entry also carries a
     weakref to its owning operand; a hit is only served when the owner
     is literally the same live object (a dead or recycled owner entry
-    is evicted on lookup)."""
+    is evicted on lookup).
+
+    Instances are shared class-level by the executor and hit from
+    arbitrary query threads, so every dict operation holds an internal
+    lock (values are treated as immutable once inserted)."""
 
     def __init__(self, maxsize: int = 32):
         self.maxsize = maxsize
         # key -> (owner weakref | None, value)
         self._d: "OrderedDict[Tuple, Tuple]" = OrderedDict()
+        self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
 
     def get(self, key, owner=None) -> Optional[object]:
-        entry = self._d.get(key)
-        if entry is None:
-            self.misses += 1
-            return None
-        wr, val = entry
-        if wr is not None and wr() is not owner:
-            del self._d[key]  # stale: owner died / address recycled
-            self.misses += 1
-            return None
-        self._d.move_to_end(key)
-        self.hits += 1
-        return val
+        with self._lock:
+            entry = self._d.get(key)
+            if entry is None:
+                self.misses += 1
+                return None
+            wr, val = entry
+            if wr is not None and wr() is not owner:
+                del self._d[key]  # stale: owner died / address recycled
+                self.misses += 1
+                return None
+            self._d.move_to_end(key)
+            self.hits += 1
+            return val
 
     def put(self, key, value, owner=None) -> None:
         wr = weakref.ref(owner) if owner is not None else None
-        self._d[key] = (wr, value)
-        self._d.move_to_end(key)
-        while len(self._d) > self.maxsize:
-            self._d.popitem(last=False)
+        with self._lock:
+            self._d[key] = (wr, value)
+            self._d.move_to_end(key)
+            while len(self._d) > self.maxsize:
+                self._d.popitem(last=False)
 
     def clear(self) -> None:
-        self._d.clear()
+        with self._lock:
+            self._d.clear()
 
     def __len__(self) -> int:
-        return len(self._d)
+        with self._lock:
+            return len(self._d)

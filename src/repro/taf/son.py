@@ -189,24 +189,29 @@ def build_son(tgi, t0: int, t1: int, node_ids: Optional[np.ndarray] = None,
     subset known to cover ``node_ids`` (pruned fetch) and the optional
     payload fields actually needed (attribute projection).  ``snap`` lets
     a caller that already fetched the t0 snapshot (build_sots) reuse it.
+
+    The whole build runs under one ``tgi.read_guard()``: the t0 snapshot
+    and the (t0, t1] event replay come from the same pinned epoch, so a
+    concurrent ingest or background compaction can't tear the operand.
     """
-    if snap is None:
-        snap = tgi.get_snapshot(t0, c=c, pids=pids, projection=projection)
-    if node_ids is None:
-        node_ids = snap.node_ids()
-    node_ids = np.unique(np.asarray(node_ids, np.int32))
-    ev = tgi._events
-    sel = (ev.t > t0) & (ev.t <= t1)
-    ev = ev.take(np.nonzero(sel)[0])
-    indptr, t, kind, key, val, other = _per_node_events(ev, node_ids)
-    snap.grow(int(node_ids.max()) + 1 if len(node_ids) else 0)
-    return SoN(
-        node_ids=node_ids, t0=t0, t1=t1,
-        init_present=snap.present[node_ids],
-        init_attrs=snap.attrs[node_ids],
-        ev_indptr=indptr, ev_t=t, ev_kind=kind, ev_key=key, ev_val=val,
-        ev_other=other,
-    )
+    with tgi.read_guard() as view:
+        if snap is None:
+            snap = tgi.get_snapshot(t0, c=c, pids=pids, projection=projection)
+        if node_ids is None:
+            node_ids = snap.node_ids()
+        node_ids = np.unique(np.asarray(node_ids, np.int32))
+        ev = view.events
+        sel = (ev.t > t0) & (ev.t <= t1)
+        ev = ev.take(np.nonzero(sel)[0])
+        indptr, t, kind, key, val, other = _per_node_events(ev, node_ids)
+        snap.grow(int(node_ids.max()) + 1 if len(node_ids) else 0)
+        return SoN(
+            node_ids=node_ids, t0=t0, t1=t1,
+            init_present=snap.present[node_ids],
+            init_attrs=snap.attrs[node_ids],
+            ev_indptr=indptr, ev_t=t, ev_kind=kind, ev_key=key, ev_val=val,
+            ev_other=other,
+        )
 
 
 def build_sots(tgi, t0: int, t1: int, node_ids: Optional[np.ndarray] = None,
@@ -219,11 +224,14 @@ def build_sots(tgi, t0: int, t1: int, node_ids: Optional[np.ndarray] = None,
     nodes carries their complete initial adjacency.
     """
     assert k == 1, "k-hop SoTS composes 1-hop stars (paper §5.1)"
-    snap = tgi.get_snapshot(t0, c=c, pids=pids, projection=projection)
-    if node_ids is None:
-        node_ids = snap.node_ids()
-    son = build_son(tgi, t0, t1, node_ids, c=c, pids=pids, projection=projection,
-                    snap=snap)
+    # one guard around snapshot + SoN build: nested guards reuse the
+    # outer pinned epoch, so the adjacency and the event runs agree
+    with tgi.read_guard():
+        snap = tgi.get_snapshot(t0, c=c, pids=pids, projection=projection)
+        if node_ids is None:
+            node_ids = snap.node_ids()
+        son = build_son(tgi, t0, t1, node_ids, c=c, pids=pids,
+                        projection=projection, snap=snap)
     src, dst, val = snap.edges()
     # adjacency restricted to son.node_ids as center
     both_src = np.concatenate([src, dst])

@@ -1,0 +1,473 @@
+"""MVCC concurrency stress + fault-injection suite (the proof for
+snapshot-isolated background maintenance).
+
+Three families:
+
+* seeded reader/ingester/compactor schedules — every read taken under a
+  ``read_guard()`` must be bit-identical to a single-threaded oracle
+  replay of the *view's own* event log (torn reads have nowhere to
+  hide: presence, attrs, edges, and histories are all compared),
+  while ingest appends and compaction swaps the layout concurrently;
+* GC safety — superseded chunks stay readable while any guard pins an
+  older epoch, are reclaimed when the last pin drains, and
+  ``storage_report()`` stays internally consistent mid-compaction;
+* fault injection — a maintenance pass killed at shadow-build,
+  pre-swap, post-swap, or mid-GC leaves the store readable and a
+  retried pass converges (``repro.core.faultpoints``).
+
+``REPRO_SEED_OFFSET`` shifts every schedule's seed so CI can run the
+same suite under genuinely distinct interleavings (the ``stress`` job
+runs 3 offsets).
+"""
+import os
+import threading
+import time
+import traceback
+
+import numpy as np
+import pytest
+
+from repro.core import faultpoints
+from repro.core.snapshot import GraphState
+from repro.core.tgi import TGI, TGIConfig
+from repro.data.temporal_graph_gen import generate, naive_state_at
+from repro.storage.kvstore import DeltaStore
+
+SEED_OFFSET = int(os.environ.get("REPRO_SEED_OFFSET", "0"))
+SCHEDULE_SEEDS = [11, 23, 37, 41, 53, 67, 79, 97]
+
+N_EVENTS = 2400
+N_INITIAL = 1200
+CFG = dict(n_shards=2, parts_per_shard=2, events_per_span=300,
+           eventlist_size=64, checkpoints_per_span=2)
+
+
+def _states_equal(a: GraphState, b: GraphState, msg=""):
+    n = max(len(a.present), len(b.present))
+    a.grow(n)
+    b.grow(n)
+    assert (a.present == b.present).all(), f"presence mismatch {msg}"
+    on = a.present == 1
+    assert (a.attrs[on] == b.attrs[on]).all(), f"attr mismatch {msg}"
+    assert len(a.edge_key) == len(b.edge_key), f"edge count {msg}"
+    assert (a.edge_key == b.edge_key).all(), f"edge keys {msg}"
+    assert (a.edge_val == b.edge_val).all(), f"edge attrs {msg}"
+
+
+def _mk(seed: int, store=None):
+    """A TGI seeded with an initial bulk build; the remaining events are
+    returned for the ingester to stream in as micro-span updates."""
+    events = generate(N_EVENTS, seed=seed)
+    init = events.take(slice(0, N_INITIAL))
+    rest = events.take(slice(N_INITIAL, N_EVENTS))
+    cfg = TGIConfig(**CFG)
+    tgi = TGI.build(init, cfg,
+                    store if store is not None
+                    else DeltaStore(m=2, r=1, backend="mem"))
+    return tgi, events, rest, cfg
+
+
+def _view_log(view):
+    """The full event log of one pinned view (sealed + streaming
+    buffer) — the oracle's input: what ``get_snapshot`` must replay."""
+    if len(view.pending):
+        return view.events.concat(view.pending)
+    return view.events
+
+
+def _check_snapshot_at(tgi, view, t):
+    """One pinned read vs the single-threaded oracle at this epoch."""
+    got = tgi.get_snapshot(t)
+    want = naive_state_at(_view_log(view), t, tgi.cfg.n_attrs)
+    _states_equal(got, want, f"epoch={view.epoch} t={t}")
+
+
+def _check_history_at(tgi, view, nid, t0, t1):
+    """Node history vs a direct filter of the view's own log."""
+    full = _view_log(view)
+    sel = (((full.src == nid) | (full.dst == nid))
+           & (full.t > t0) & (full.t <= t1))
+    want = full.take(np.nonzero(sel)[0])
+    _, got = tgi.get_node_history(int(nid), int(t0), int(t1))
+    assert len(got) == len(want), (
+        f"history count nid={nid} epoch={view.epoch}")
+    for col in ("t", "kind", "src", "dst", "key", "val"):
+        assert (getattr(got, col) == getattr(want, col)).all(), (
+            f"history {col} nid={nid} epoch={view.epoch}")
+
+
+def _reader_loop(tgi, stop, errors, seed):
+    rng = np.random.default_rng(seed)
+    try:
+        while not stop.is_set():
+            with tgi.read_guard() as view:
+                full = _view_log(view)
+                if not len(full):
+                    continue
+                t0, t1 = full.time_range()
+                t = int(rng.integers(t0, t1 + 1))
+                _check_snapshot_at(tgi, view, t)
+                if rng.random() < 0.3:
+                    nid = int(rng.integers(0, max(view.n_nodes, 1)))
+                    _check_history_at(tgi, view, nid, t0, t)
+    except Exception:  # noqa: BLE001 — surfaced via the errors list
+        errors.append(traceback.format_exc())
+        stop.set()
+
+
+def _ingest_loop(tgi, rest, errors, seed, stop):
+    rng = np.random.default_rng(seed)
+    try:
+        lo = 0
+        while lo < len(rest) and not stop.is_set():
+            hi = min(lo + int(rng.integers(60, 140)), len(rest))
+            tgi.update(rest.take(slice(lo, hi)))
+            lo = hi
+            if rng.random() < 0.5:
+                time.sleep(float(rng.random()) * 0.002)
+    except Exception:  # noqa: BLE001
+        errors.append(traceback.format_exc())
+        stop.set()
+
+
+def _compact_loop(tgi, stop, errors, seed):
+    rng = np.random.default_rng(seed)
+    try:
+        while not stop.is_set():
+            tgi.compact(min_run=2)
+            time.sleep(float(rng.random()) * 0.005)
+    except Exception:  # noqa: BLE001
+        errors.append(traceback.format_exc())
+        stop.set()
+
+
+# ---------------------------------------------------------------------------
+# Seeded reader/ingester/compactor schedules
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.timeout(180)
+@pytest.mark.parametrize("seed", SCHEDULE_SEEDS)
+def test_stress_schedule(seed):
+    """Readers, an ingester, and a compactor race freely; every pinned
+    read must be bit-identical to the oracle at its epoch."""
+    seed = seed + SEED_OFFSET
+    tgi, events, rest, cfg = _mk(seed)
+    errors: list = []
+    stop = threading.Event()
+    readers = [
+        threading.Thread(target=_reader_loop,
+                         args=(tgi, stop, errors, seed * 100 + i),
+                         name=f"reader-{i}", daemon=True)
+        for i in range(3)
+    ]
+    ingester = threading.Thread(target=_ingest_loop,
+                                args=(tgi, rest, errors, seed * 7, stop),
+                                name="ingester", daemon=True)
+    compactor = threading.Thread(target=_compact_loop,
+                                 args=(tgi, stop, errors, seed * 13),
+                                 name="compactor", daemon=True)
+    for t in readers + [ingester, compactor]:
+        t.start()
+    ingester.join(timeout=120)
+    time.sleep(0.05)  # let readers observe the final state at least once
+    stop.set()
+    for t in readers + [compactor]:
+        t.join(timeout=30)
+    assert not ingester.is_alive(), "ingester wedged"
+    assert not errors, "torn/incorrect reads:\n" + "\n".join(errors)
+    # quiesced: the final state matches a clean single-threaded replay
+    tgi.flush()
+    t0, t1 = events.time_range()
+    for frac in (0.2, 0.55, 0.9, 1.0):
+        t = int(t0 + frac * (t1 - t0))
+        _states_equal(tgi.get_snapshot(t),
+                      naive_state_at(events, t, cfg.n_attrs), f"final t={t}")
+    assert tgi.maintenance_stats["passes"] >= 1
+    assert tgi.maintenance_stats["failed_passes"] == 0
+    # nothing pinned anymore: the deferred-GC queue must drain fully
+    tgi.compact(min_run=2)
+    assert tgi.pinned_epochs() == []
+    assert tgi.store.gc_pending() == 0
+
+
+# ---------------------------------------------------------------------------
+# GC safety under pinned epochs
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.timeout(60)
+def test_gc_deferred_while_epoch_pinned():
+    """A compaction completing inside an open read guard must park the
+    superseded keys instead of deleting them: the pinned reader re-reads
+    its epoch bit-identically afterwards, and the queue drains only when
+    the guard exits."""
+    tgi, events, rest, cfg = _mk(5 + SEED_OFFSET)
+    for lo in range(0, len(rest), 100):
+        tgi.update(rest.take(slice(lo, lo + 100)))
+    t0, t1 = events.time_range()
+    t = int(t0 + 0.7 * (t1 - t0))
+    with tgi.read_guard() as view:
+        before = tgi.get_snapshot(t)
+        stats = tgi.compact(min_run=2)  # maintenance thread, we stay pinned
+        assert stats.runs_merged >= 1
+        # superseded keys are queued, not gone — our pin protects them
+        assert tgi.store.gc_pending() > 0
+        assert tgi.pinned_epochs() == [view.epoch]
+        # the pinned epoch re-reads bit-identically THROUGH the swap
+        after = tgi.get_snapshot(t)
+        _states_equal(before, after, "pinned re-read across publish")
+        _states_equal(after, naive_state_at(_view_log(view), t, cfg.n_attrs),
+                      "pinned read vs oracle")
+    # guard exit = last pin drained = the queue empties
+    assert tgi.store.gc_pending() == 0
+    assert tgi.pinned_epochs() == []
+    # and the published layout serves the same truth
+    _states_equal(tgi.get_snapshot(t), naive_state_at(events, t, cfg.n_attrs))
+
+
+@pytest.mark.timeout(60)
+def test_gc_never_reclaims_reachable_keys_under_guard_churn():
+    """Guards opening/closing while compaction publishes: at no instant
+    may a key a pinned reader can still reach be deleted — proven by the
+    readers themselves (any reclaimed-but-reachable chunk would fail
+    their bit-identity check with KeyMissing or wrong bytes)."""
+    tgi, events, rest, cfg = _mk(29 + SEED_OFFSET)
+    errors: list = []
+    stop = threading.Event()
+    readers = [
+        threading.Thread(target=_reader_loop,
+                         args=(tgi, stop, errors, 1000 + i), daemon=True)
+        for i in range(4)
+    ]
+    for t in readers:
+        t.start()
+    try:
+        for lo in range(0, len(rest), 80):
+            tgi.update(rest.take(slice(lo, lo + 80)))
+            if lo % 240 == 0:
+                tgi.compact(min_run=2)
+    finally:
+        time.sleep(0.05)
+        stop.set()
+        for t in readers:
+            t.join(timeout=30)
+    assert not errors, "GC broke a pinned reader:\n" + "\n".join(errors)
+    tgi.compact(min_run=2)
+    assert tgi.store.gc_pending() == 0
+
+
+@pytest.mark.timeout(90)
+def test_storage_report_internally_consistent_mid_compaction():
+    """``storage_report()`` sampled while the maintenance thread
+    publishes must never mix pre- and post-GC accounting: components,
+    totals, and per-node placement all derive from one key-size copy."""
+    tgi, events, rest, cfg = _mk(71 + SEED_OFFSET)
+    errors: list = []
+    stop = threading.Event()
+
+    def sampler():
+        try:
+            while not stop.is_set():
+                rep = tgi.storage_report()
+                comp_raw = sum(r["raw"] for r in rep["components"].values())
+                comp_enc = sum(r["encoded"]
+                               for r in rep["components"].values())
+                comp_cnt = sum(r["count"] for r in rep["components"].values())
+                assert rep["totals"]["raw"] == comp_raw
+                assert rep["totals"]["encoded"] == comp_enc
+                assert rep["totals"]["count"] == comp_cnt
+                # every key is placed on exactly r nodes, from the SAME
+                # key-size copy the totals were computed from
+                node_bytes = sum(n["live_bytes"]
+                                 for n in rep["nodes"]["nodes"])
+                node_keys = sum(n["live_keys"] for n in rep["nodes"]["nodes"])
+                assert node_bytes == comp_enc * rep["replication"]
+                assert node_keys == comp_cnt * rep["replication"]
+                assert rep["gc"]["pending_keys"] >= 0
+        except Exception:  # noqa: BLE001
+            errors.append(traceback.format_exc())
+            stop.set()
+
+    s = threading.Thread(target=sampler, daemon=True)
+    s.start()
+    try:
+        for lo in range(0, len(rest), 60):
+            tgi.update(rest.take(slice(lo, lo + 60)))
+            if lo % 180 == 0:
+                tgi.compact(min_run=2)
+    finally:
+        stop.set()
+        s.join(timeout=30)
+    assert not errors, "inconsistent storage_report:\n" + "\n".join(errors)
+
+
+# ---------------------------------------------------------------------------
+# Satellite fix regression: epoch bump + cache invalidation atomicity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.timeout(60)
+def test_epoch_bump_and_cache_invalidation_atomic():
+    """A concurrent observer must never see a bumped ``read_epoch``
+    paired with stale cache contents: the epoch, the snapshot LRU purge,
+    and the mean-degree refresh all commit under one ``_mvcc`` hold."""
+    tgi, events, rest, cfg = _mk(3 + SEED_OFFSET)
+    errors: list = []
+    stop = threading.Event()
+
+    def observer():
+        try:
+            while not stop.is_set():
+                with tgi._mvcc:
+                    epoch = tgi.read_epoch
+                    md = tgi._mean_degree_cache
+                    assert tgi.read_epoch == epoch  # lock held: stable
+                    # the mean-degree cache is either freshly invalidated
+                    # or tagged with the CURRENT epoch — a stale tag
+                    # alongside a bumped epoch is the torn state the fix
+                    # removed
+                    assert md is None or md[0] == epoch, (
+                        f"stale _mean_degree_cache tag {md[0]} at "
+                        f"epoch {epoch}")
+                # outside the lock: populate the caches so invalidation
+                # has something to race against
+                tgi._mean_degree()
+        except Exception:  # noqa: BLE001
+            errors.append(traceback.format_exc())
+            stop.set()
+
+    obs = [threading.Thread(target=observer, daemon=True) for _ in range(2)]
+    for o in obs:
+        o.start()
+    try:
+        for lo in range(0, len(rest), 50):
+            tgi.update(rest.take(slice(lo, lo + 50)))
+            if lo % 200 == 0:
+                tgi.compact(min_run=2)
+    finally:
+        stop.set()
+        for o in obs:
+            o.join(timeout=30)
+    assert not errors, "torn epoch/cache state:\n" + "\n".join(errors)
+    # snapshot-LRU entries inserted under an older epoch must never be
+    # served after the bump: a fresh read reflects the new events
+    tgi.flush()
+    t0, t1 = events.time_range()
+    _states_equal(tgi.get_snapshot(t1),
+                  naive_state_at(events, t1, cfg.n_attrs), "post-churn read")
+
+
+# ---------------------------------------------------------------------------
+# Fault injection: killed maintenance passes
+# ---------------------------------------------------------------------------
+
+CRASH_POINTS = ["compact.shadow_build", "compact.pre_swap",
+                "compact.post_swap", "compact.mid_gc"]
+
+
+def _assert_readable(tgi, events, cfg, msg):
+    t0, t1 = events.time_range()
+    for frac in (0.3, 0.8):
+        t = int(t0 + frac * (t1 - t0))
+        _states_equal(tgi.get_snapshot(t),
+                      naive_state_at(events, t, cfg.n_attrs), f"{msg} t={t}")
+
+
+@pytest.mark.timeout(120)
+@pytest.mark.parametrize("point", CRASH_POINTS)
+def test_killed_maintenance_pass_is_safe_and_retry_converges(point):
+    """Crash the maintenance pass at each phase: the store stays fully
+    readable (no torn layout, no vanished chunk), and a retried pass
+    converges to the compacted layout with an empty GC queue."""
+    tgi, events, rest, cfg = _mk(47 + SEED_OFFSET)
+    for lo in range(0, len(rest), 100):
+        tgi.update(rest.take(slice(lo, lo + 100)))
+    spans_before = len(tgi.spans)
+    with faultpoints.scoped(point):
+        with pytest.raises(faultpoints.FaultError):
+            tgi.compact(min_run=2)
+    assert tgi.maintenance_stats["failed_passes"] == 1
+    # whatever phase died, every epoch-visible chunk is still readable
+    _assert_readable(tgi, events, cfg, f"after {point} crash")
+    # the fired point disarmed itself: the retry runs clean and converges
+    stats = tgi.compact(min_run=2)
+    assert tgi.maintenance_stats["failed_passes"] == 1  # no new failure
+    _assert_readable(tgi, events, cfg, f"after {point} retry")
+    assert len(tgi.spans) < spans_before  # the merge actually landed
+    assert tgi.store.gc_pending() == 0  # including the interrupted GC
+    if point in ("compact.shadow_build", "compact.pre_swap"):
+        # pre-publish crash: the retry performed the whole merge itself
+        assert stats.runs_merged >= 1
+
+
+@pytest.mark.timeout(60)
+def test_pre_publish_crash_leaves_no_shadow_garbage():
+    """A pass killed before the swap must delete its never-published
+    shadow chunks — retrying forever must not leak storage."""
+    tgi, events, rest, cfg = _mk(59 + SEED_OFFSET)
+    for lo in range(0, len(rest), 100):
+        tgi.update(rest.take(slice(lo, lo + 100)))
+    tgi.flush()
+    live_before = tgi.index_size_bytes()
+    for _ in range(3):
+        with faultpoints.scoped("compact.pre_swap"):
+            with pytest.raises(faultpoints.FaultError):
+                tgi.compact(min_run=2)
+        assert tgi.index_size_bytes() == live_before, "shadow chunks leaked"
+    stats = tgi.compact(min_run=2)
+    assert stats.runs_merged >= 1
+    assert tgi.index_size_bytes() < live_before  # GC finally shrank it
+
+
+@pytest.mark.timeout(60)
+def test_mid_gc_crash_requeues_remainder():
+    """A drain killed mid-batch re-queues the undeleted keys; the next
+    drain reclaims exactly the remainder (no leak, no double-free)."""
+    tgi, events, rest, cfg = _mk(83 + SEED_OFFSET)
+    for lo in range(0, len(rest), 100):
+        tgi.update(rest.take(slice(lo, lo + 100)))
+    # crash on the 3rd GC'd key: some deleted, the rest re-queued
+    with faultpoints.scoped("compact.mid_gc", hits=3):
+        with pytest.raises(faultpoints.FaultError):
+            tgi.compact(min_run=2)
+    pending = tgi.store.gc_pending()
+    assert pending > 0
+    deleted, _ = tgi.store.gc_drain()
+    assert deleted == pending
+    assert tgi.store.gc_pending() == 0
+    _assert_readable(tgi, events, cfg, "after mid-GC crash + drain")
+
+
+@pytest.mark.timeout(60)
+def test_faultpoint_env_parsing_and_scoping():
+    """The arming surfaces behave as documented: env parsing, countdown
+    + self-disarm, and context-local arming invisible to other threads."""
+    assert faultpoints._parse_env("a.b=3:kill, c.d=1") == {
+        "a.b": [3, "kill"], "c.d": [1, "raise"]}
+    with pytest.raises(ValueError):
+        faultpoints._parse_env("a=1:explode")
+    # countdown: fires N-1 times silently, acts on the Nth, then disarms
+    faultpoints.arm("t.count", hits=3)
+    faultpoints.fire("t.count")
+    faultpoints.fire("t.count")
+    with pytest.raises(faultpoints.FaultError):
+        faultpoints.fire("t.count")
+    faultpoints.fire("t.count")  # disarmed: clean
+    # local(): the arming thread trips it, a worker thread does not
+    hit_in_worker = []
+
+    def worker():
+        try:
+            faultpoints.fire("t.local")
+        except faultpoints.FaultError:
+            hit_in_worker.append(True)
+
+    with faultpoints.local("t.local"):
+        t = threading.Thread(target=worker)
+        t.start()
+        t.join()
+        assert not hit_in_worker, "ContextVar arming leaked across threads"
+        with pytest.raises(faultpoints.FaultError):
+            faultpoints.fire("t.local")
+    faultpoints.reset()

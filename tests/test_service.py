@@ -630,3 +630,111 @@ def test_remote_storage_report_through_tgi(tmp_path):
         cs = hs.cache_stats()
         assert "failovers" in cs and "hedged_reads" in cs
         remote.close()
+
+
+@pytest.mark.timeout(240)
+def test_sigkill_during_compaction_failover_and_catch_up(tmp_path):
+    """The MVCC maintenance chaos case: a storage cell SIGKILLs itself
+    mid-compaction (armed via ``REPRO_FAULTPOINTS=cell.apply=N:kill``
+    in its subprocess environment) while the client's maintenance
+    thread is in the middle of the shadow-build write storm.  The pass
+    must still converge through the surviving replicas, reads stay
+    bit-identical, and a clean restart catch-up repairs the dead
+    cell's copies so they can serve alone."""
+    events = generate(2400, seed=13)
+    cfg = TGIConfig(n_shards=2, parts_per_shard=2, events_per_span=300,
+                    eventlist_size=64, checkpoints_per_span=2)
+    spec = ClusterSpec(n_cells=3, r=2, backend="file",
+                       root=str(tmp_path / "cluster"))
+    with LocalCluster(spec, mode="subprocess") as cl:
+        store = cl.client(timeout=2.0, retries=1, backoff=0.02,
+                          suspect_ttl=30.0)
+        init = events.take(slice(0, 1200))
+        rest = events.take(slice(1200, 2400))
+        hs = HistoricalGraphStore.build(init, cfg, store=store)
+        for lo in range(0, len(rest), 100):
+            hs.tgi.update(rest.take(slice(lo, lo + 100)))
+        hs.tgi.flush()
+        # re-arm cell 1 with the kill switch: it is fully caught up, so
+        # boot catch-up applies nothing — the 5th record it applies will
+        # be a compaction write, and acting on it means SIGKILL
+        cl.kill(1)
+        cl.spec.cell_env = {1: {"REPRO_FAULTPOINTS": "cell.apply=5:kill"}}
+        cl.restart(1)
+        store.clear_pool()
+        store._suspects.clear()
+        stats = hs.compact(min_run=2)
+        assert stats.runs_merged >= 1
+        # the cell really died by its own hand, mid write storm
+        proc = cl._procs[1]
+        assert proc is not None
+        for _ in range(100):
+            if proc.poll() is not None:
+                break
+            time.sleep(0.1)
+        assert proc.poll() == -9
+        # the pass converged anyway: superseded chunks reclaimed (the
+        # deferred-GC deletes were acked by surviving replicas)...
+        assert store.gc_pending() == 0
+        # ...and every read is bit-identical through the failover path
+        t0, t1 = events.time_range()
+        store.clear_pool()
+
+        def probe(msg):
+            for frac in (0.3, 0.9):
+                t = int(t0 + frac * (t1 - t0))
+                got = hs.tgi.get_snapshot(t)
+                want = naive_state_at(events, t, cfg.n_attrs)
+                n = max(len(got.present), len(want.present))
+                got.grow(n)
+                want.grow(n)
+                assert (got.present == want.present).all(), msg
+                assert (got.edge_key == want.edge_key).all(), msg
+                assert (got.edge_val == want.edge_val).all(), msg
+
+        probe("reads during dead-cell window")
+        # clean restart (no fault env): feed catch-up repairs everything
+        # cell 1 missed while dead
+        cl.spec.cell_env = None
+        cl.restart(1)
+        # force the repaired copies to serve alone: kill the OTHER
+        # replica, so every {1,2}-chained key must come from cell 1
+        cl.kill(2)
+        store.clear_pool()
+        store._suspects.clear()
+        probe("reads served by the repaired cell")
+        store.close()
+
+
+@pytest.mark.timeout(90)
+def test_maint_vacuum_over_wire(tmp_path):
+    """MSG_MAINT: a cell acks immediately, vacuums on a background
+    thread, keeps serving mid-pass, and surfaces the rewrite counters
+    in its status block."""
+    spec = ClusterSpec(n_cells=2, r=2, backend="file",
+                       root=str(tmp_path / "cluster"))
+    with LocalCluster(spec, mode="thread") as cl:
+        store = cl.client(timeout=5.0)
+        keys = _fill(store)
+        for k in keys[::3]:  # tombstones = vacuumable garbage
+            store.delete(k)
+        assert store.maintain(0) is True
+        deadline = time.monotonic() + 30
+        while time.monotonic() < deadline:
+            maint = store.cell_status(0)["maint"]
+            # serving while (possibly) vacuuming: reads must not block
+            store.clear_pool()
+            assert "t" in store.get(keys[1])
+            if not maint["running"] and maint["last_vacuum"] is not None:
+                break
+            time.sleep(0.05)
+        lv = store.cell_status(0)["maint"]["last_vacuum"]
+        assert lv is not None and lv["chunks_scanned"] >= 1
+        assert lv["bytes_after"] <= lv["bytes_before"]
+        # everything live is still readable after the rewrite
+        store.clear_pool()
+        for k in keys:
+            if k in keys[::3]:
+                continue
+            assert "t" in store.get(k)
+        store.close()
