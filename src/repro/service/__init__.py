@@ -7,8 +7,9 @@ stage, and the decoded-block pool run unchanged on top of it.  An
 append-only change feed per cell (``feed_since``) drives replica
 catch-up after a crash.  ``LocalCluster`` spins up N cells x r
 replicas in threads or subprocesses for tests, benches, and docs."""
-from repro.service.cell import StorageCell
+from repro.service.cell import FeedTruncated, StorageCell
 from repro.service.client import RemoteDeltaStore
 from repro.service.cluster import ClusterSpec, LocalCluster
 
-__all__ = ["StorageCell", "RemoteDeltaStore", "ClusterSpec", "LocalCluster"]
+__all__ = ["StorageCell", "RemoteDeltaStore", "ClusterSpec", "LocalCluster",
+           "FeedTruncated"]

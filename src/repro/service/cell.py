@@ -9,37 +9,72 @@ only the projected columns' file bytes).
 Writes are change-feed records: the client stamps every ``put``/
 ``delete`` with a globally monotonic ``seq`` and fans it out to the
 key's replica cells.  Each cell appends applied records to an
-append-only ``feed.log`` (and an in-memory tail) — the cell's entire
-write history in arrival order.  Because the client serializes writes
-(one fan-out at a time), arrival order IS seq order, which makes a
-cell's chunk/extent/feed files a pure function of its record set: a
+append-only ``feed.log`` (and an in-memory tail) — the cell's write
+history in arrival order.  Because the client serializes writes (one
+fan-out at a time), arrival order IS seq order, which makes a cell's
+chunk/extent/feed files a pure function of its record set: a
 killed-and-restarted cell that replays the records it missed via
 ``feed_since`` from its peers, in seq order, converges to
 byte-identical files.  Duplicate deliveries (client retries, catch-up
 racing a live write) are dropped by seq: every applied seq — including
 those replayed from ``feed.log`` at boot — lives in an applied-seq
-set, so catch-up can refetch the *whole* peer feed and repair interior
-gaps (a transiently missed PUT below ``last_seq``), not just the tail.
+set, so catch-up can refetch the peer feed and repair interior gaps
+(a transiently missed PUT below ``last_seq``), not just the tail.
 A per-key max-seq guard keeps an out-of-order repair from regressing a
 key past a newer applied write: the late record is stamped into the
 feed (it is no longer a gap) but the store mutation is skipped.
 
-The server is a plain threaded accept loop — one thread per
-connection, blocking frame reads, every reply framed under
-``wire.PROTO_VERSION`` (a mismatched client gets ERR "VERSION" and the
-connection closed).  Run one per process via ``python -m
-repro.service.cell`` (prints ``CELL READY node=<i> port=<p>`` for the
-cluster harness) or in-process via ``LocalCluster(mode="thread")``.
+**Feed compaction (replica-ack watermark).**  The feed no longer grows
+without bound: the writer client piggybacks an *ack watermark* on
+PUT/DELETE/PING bodies — the highest seq it can prove every cell has
+applied (min over nodes of observed ``last_seq``, clamped below any
+queued redelivery).  Once at least ``feed_keep`` in-memory records sit
+at or below the watermark (or a forced MAINT pass asks), the cell
+checkpoints: it writes ``feed.base`` (floor + per-key size/seq
+accounting, sorted for byte determinism), rewrites ``feed.log`` with
+only the records above the floor, and drops the truncated seqs from
+the applied set — ``seq <= feed_floor`` itself now certifies
+"applied".  The base is written *before* the log is rewritten, so a
+crash between the two leaves stale records the boot path skips by
+floor.  Catch-up stays correct: the floor only advances past records
+every replica acked, so a disk-surviving restart already holds
+everything at or below any peer's floor that it owns.  A *fresh* cell
+(wiped disk) facing a truncated peer bootstraps by full-state transfer
+— ``MSG_PLACEMENTS`` + ``MSG_STATE_PULL`` copy a live replica's chunk
+and extent files verbatim (they are pure functions of the record set,
+preserving byte-identical convergence) plus the per-key accounting,
+then a normal feed pull stamps the records above the floor.  A fresh
+*mem* cell cannot be rebuilt this way and fails with the typed
+``FeedTruncated``.
+
+**Pipelined serving.**  The per-connection read loop no longer
+executes requests inline: frames are dispatched to a small cell-wide
+worker pool (``workers``) under a per-connection in-flight cap
+(``inflight_cap``, enforced by semaphore — a flooding client blocks in
+its own read loop, which is TCP backpressure, not memory growth), and
+replies are written under a per-connection send lock in completion
+order — the ``req_id`` is the demux key, not arrival order.  HELLO and
+PING are answered *inline on the read loop*, so a slow GET can never
+head-of-line-block a health probe even with every worker busy.
+MULTIGET replies stream one ``MSG_CHUNK`` frame per found key followed
+by ``MSG_END``, so the client decodes early keys while the cell is
+still reading later ones.
+
+Run one cell per process via ``python -m repro.service.cell`` (prints
+``CELL READY node=<i> port=<p>`` for the cluster harness) or
+in-process via ``LocalCluster(mode="thread")``.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import signal
 import socket
 import struct
 import sys
 import threading
+from concurrent.futures import ThreadPoolExecutor
 from pathlib import Path
 from typing import Dict, List, Optional, Tuple
 
@@ -47,42 +82,57 @@ from repro.core import faultpoints
 from repro.service import wire
 from repro.storage.kvstore import (DeltaStore, KeyMissing, replica_nodes)
 
+class FeedTruncated(wire.WireError):
+    """Needed feed history predates a peer's truncation floor and no
+    full-state transfer can cover it (mem backend, or no file-backed
+    replica reachable)."""
+
 
 class StorageCell:
     def __init__(self, node_id: int, n_cells: int, r: int,
                  backend: str = "file", root: Optional[str] = None,
                  fmt: Optional[str] = None, host: str = "127.0.0.1",
-                 port: int = 0):
+                 port: int = 0, workers: int = 4, inflight_cap: int = 32,
+                 feed_keep: int = 256):
         assert backend in ("mem", "file")
         self.node_id = node_id
         self.n_cells = n_cells
         self.r = r
         self.host = host
         self.port = port  # 0 -> ephemeral; real port known after start()
+        self.workers = max(1, workers)
+        self.inflight_cap = max(1, inflight_cap)
+        self.feed_keep = max(1, feed_keep)
         self.root = Path(root) if root is not None else None
         if backend == "file":
             assert root is not None
             self.root.mkdir(parents=True, exist_ok=True)
         self.store = DeltaStore(m=1, r=1, backend=backend, root=root,
                                 fmt=fmt, pool_bytes=0, seek=True)
-        # change feed: full in-memory tail + append-only feed.log (file
-        # backend).  _flock serializes apply+append so the log can never
-        # disagree with the store.
+        # change feed: in-memory tail above the truncation floor plus an
+        # append-only feed.log (file backend).  _flock serializes
+        # apply+append so the log can never disagree with the store.
         self._feed: List[wire.FeedRecord] = []
         self._flock = threading.Lock()
-        # every seq this cell has ever applied (rebuilt from feed.log at
-        # boot) — the dedupe that lets catch-up refetch from seq 0 and
-        # repair interior gaps without double-applying anything
+        # every seq this cell has applied ABOVE the floor (rebuilt from
+        # feed.log at boot) — together with ``seq <= feed_floor`` this is
+        # the dedupe that lets catch-up refetch the peer feed and repair
+        # interior gaps without double-applying anything
         self._applied: set = set()
         # per-key max applied seq: an out-of-order gap repair must never
         # regress a key past a newer write already applied
         self._key_seq: Dict[Tuple, int] = {}
         self.last_seq = 0
+        # replica-ack watermark state
+        self.feed_floor = 0   # highest truncated seq (0: nothing truncated)
+        self.ack_water = 0    # highest client-proven cluster-wide ack seen
+        self.truncations = 0  # completed feed truncation passes
         self._load_feed()
         self._lsock: Optional[socket.socket] = None
         self._stop = threading.Event()
         self._threads: List[threading.Thread] = []
         self._conns: set = set()
+        self._pool: Optional[ThreadPoolExecutor] = None
         # background store maintenance (chunk vacuum): one pass at a
         # time, triggered by MSG_MAINT; the cell keeps serving while it
         # runs (vacuum holds the store lock per chunk only)
@@ -94,18 +144,84 @@ class StorageCell:
     def _feed_path(self) -> Optional[Path]:
         return None if self.root is None else self.root / "feed.log"
 
+    def _base_path(self) -> Optional[Path]:
+        return None if self.root is None else self.root / "feed.base"
+
+    def _load_base(self) -> None:
+        """Load the truncation checkpoint (floor + per-key accounting)
+        if one exists.  Everything at or below the floor is certified
+        applied; ``feed.log`` replay then layers the surviving tail on
+        top."""
+        path = self._base_path()
+        if path is None or not path.exists():
+            return
+        buf = path.read_bytes()
+        try:
+            (floor,) = struct.unpack_from("<Q", buf, 0)
+            (n,) = struct.unpack_from("<I", buf, 8)
+            off = 12
+            sizes = []
+            for _ in range(n):
+                key, off = wire.unpack_key(buf, off)
+                raw, enc = struct.unpack_from("<QQ", buf, off)
+                off += 16
+                sizes.append((key, raw, enc))
+            (n,) = struct.unpack_from("<I", buf, off)
+            off += 4
+            seqs = []
+            for _ in range(n):
+                key, off = wire.unpack_key(buf, off)
+                (seq,) = struct.unpack_from("<Q", buf, off)
+                off += 8
+                seqs.append((key, seq))
+        except (wire.WireError, struct.error, IndexError, UnicodeDecodeError):
+            return  # torn checkpoint: fall back to whatever the log holds
+        self.feed_floor = floor
+        self.ack_water = max(self.ack_water, floor)
+        self.last_seq = max(self.last_seq, floor)
+        for key, raw, enc in sizes:
+            self.store.key_sizes[key] = (raw, enc)
+        for key, seq in seqs:
+            self._key_seq[key] = seq
+            self.last_seq = max(self.last_seq, seq)
+
+    def _save_base_locked(self) -> None:
+        """Checkpoint the current accounting under the current floor.
+        Keys are emitted in sorted order so the file bytes are a pure
+        function of the state (the byte-identity property extends to the
+        checkpoint).  Written tmp-then-rename, and always BEFORE the log
+        rewrite, so a crash between the two only leaves stale log
+        records the boot path drops by floor."""
+        path = self._base_path()
+        if path is None:
+            return
+        out = [struct.pack("<QI", self.feed_floor, len(self.store.key_sizes))]
+        for key in sorted(self.store.key_sizes,
+                          key=lambda k: (k.tsid, k.sid, k.pid, k.did)):
+            raw, enc = self.store.key_sizes[key]
+            out.append(wire.pack_key(key) + struct.pack("<QQ", raw, enc))
+        out.append(struct.pack("<I", len(self._key_seq)))
+        for key in sorted(self._key_seq,
+                          key=lambda k: (k.tsid, k.sid, k.pid, k.did)):
+            out.append(wire.pack_key(key)
+                       + struct.pack("<Q", self._key_seq[key]))
+        tmp = path.with_suffix(".base.tmp")
+        tmp.write_bytes(b"".join(out))
+        os.replace(tmp, path)
+
     def _load_feed(self) -> None:
         """Boot: rebuild ``last_seq``, the applied-seq set, the per-key
         seq watermarks, and the store's size accounting from
-        ``feed.log``.  The chunk/extent files already hold the data (the
-        store's file backend persists), so records are NOT re-applied —
-        only the bookkeeping is replayed.
+        ``feed.base`` + ``feed.log``.  The chunk/extent files already
+        hold the data (the store's file backend persists), so records
+        are NOT re-applied — only the bookkeeping is replayed.
 
         The feed append in ``apply`` is not atomic and cells are killed
         with SIGKILL, so a torn last record is an expected crash
         artifact: any record that fails to decode is treated as the torn
         tail — the log is truncated back to the last whole record and
         catch-up refetches whatever the lost suffix held."""
+        self._load_base()
         path = self._feed_path()
         if path is None or not path.exists():
             return
@@ -121,10 +237,14 @@ class StorageCell:
                     f.truncate(good)
                 break
             good = off
+            if rec.seq <= self.feed_floor:
+                # checkpoint written but crash hit before the log
+                # rewrite: the record is already certified by the floor
+                continue
             self._feed.append(rec)
             self._applied.add(rec.seq)
             self.last_seq = max(self.last_seq, rec.seq)
-            if rec.seq >= self._key_seq.get(rec.key, 0):
+            if rec.seq > self._key_seq.get(rec.key, 0):
                 self._key_seq[rec.key] = rec.seq
                 if rec.op == wire.OP_PUT:
                     self.store.key_sizes[rec.key] = (rec.raw_bytes,
@@ -140,23 +260,24 @@ class StorageCell:
         """Apply one feed record (a wire PUT/DELETE, a catch-up replay,
         or a client gap redelivery); returns ``(applied, existed)``.
         Duplicates — client retries after a lost ack, catch-up
-        overlapping a live write — are detected against the full
-        applied-seq set (which survives restarts via ``feed.log``) and
-        acked without touching the store, so a record can never
-        double-append to the chunk files.  A record older than the key's
-        newest applied write (an interior-gap repair arriving after the
-        writes that superseded it) is stamped into the feed — the seq is
-        no longer a gap, and peers replicating this feed dedupe it the
-        same way — but the store mutation is skipped so the key never
-        regresses to a stale version."""
+        overlapping a live write — are detected against the applied-seq
+        set plus the truncation floor (both survive restarts via
+        ``feed.base``/``feed.log``) and acked without touching the
+        store, so a record can never double-append to the chunk files.
+        A record at or below the key's newest applied write (an
+        interior-gap repair arriving late, or a feed replay of a record
+        whose effect arrived via full-state transfer) is stamped into
+        the feed — the seq is no longer a gap, and peers replicating
+        this feed dedupe it the same way — but the store mutation is
+        skipped so the key never regresses or double-applies."""
         # crash point for the service fault suite: REPRO_FAULTPOINTS=
         # "cell.apply=N:kill" SIGKILLs this cell on its Nth applied
         # record — mid write storm, before the mutation lands
         faultpoints.fire("cell.apply")
         with self._flock:
-            if rec.seq in self._applied:
+            if rec.seq <= self.feed_floor or rec.seq in self._applied:
                 return False, False
-            if rec.seq >= self._key_seq.get(rec.key, 0):
+            if rec.seq > self._key_seq.get(rec.key, 0):
                 self._key_seq[rec.key] = rec.seq
                 if rec.op == wire.OP_PUT:
                     self.store.put_encoded(rec.key, rec.blob, rec.raw_bytes)
@@ -177,6 +298,49 @@ class StorageCell:
     def feed_since(self, seq: int) -> List[wire.FeedRecord]:
         with self._flock:
             return [r for r in self._feed if r.seq > seq]
+
+    def feed_bytes(self) -> int:
+        path = self._feed_path()
+        if path is not None and path.exists():
+            return path.stat().st_size
+        with self._flock:
+            return sum(49 + len(r.key.did) + len(r.blob) for r in self._feed)
+
+    # ---- replica-ack watermark / feed truncation ----
+    def note_ack(self, water: int) -> None:
+        """Record a client-piggybacked ack watermark (every cell has
+        applied everything it owns at or below ``water``) and truncate
+        the feed if enough backlog has fallen below it."""
+        with self._flock:
+            if water > self.ack_water:
+                self.ack_water = water
+            self._maybe_truncate_locked(force=False)
+
+    def truncate_feed(self, force: bool = True) -> bool:
+        with self._flock:
+            return self._maybe_truncate_locked(force=force)
+
+    def _maybe_truncate_locked(self, force: bool) -> bool:
+        floor = self.ack_water
+        if floor <= self.feed_floor:
+            return False
+        below = sum(1 for r in self._feed if r.seq <= floor)
+        if below < (1 if force else self.feed_keep):
+            return False
+        self.feed_floor = floor
+        keep = [r for r in self._feed if r.seq > floor]
+        self._save_base_locked()  # checkpoint BEFORE the log shrinks
+        path = self._feed_path()
+        if path is not None:
+            tmp = path.with_suffix(".log.tmp")
+            with open(tmp, "wb") as f:
+                for r in keep:
+                    f.write(r.pack())
+            os.replace(tmp, path)
+        self._feed = keep
+        self._applied = {s for s in self._applied if s > floor}
+        self.truncations += 1
+        return True
 
     # ---- background maintenance ----
     def maintain(self) -> bool:
@@ -202,36 +366,132 @@ class StorageCell:
             self.last_vacuum = None
 
     # ---- replica catch-up ----
-    def catch_up(self, peers: List[Tuple[str, int]],
-                 timeout: float = 5.0) -> int:
-        """Converge with the cluster after a restart: pull every peer's
-        FULL feed (``feed_since(0)``), keep the records whose key's
-        replica chain includes this cell and whose seq is not already in
-        the applied set, and apply them in seq order.  Returns the
-        number of records applied.  Fetching from 0 rather than from
-        ``last_seq`` is what repairs *interior* gaps — a PUT this cell
-        missed while live (transient timeout) below a seq it did accept
-        would be invisible to a tail-only pull and would otherwise serve
-        silently stale reads forever; the applied-seq set makes the full
-        refetch cheap to dedupe and impossible to double-apply.
-        Unreachable peers are skipped — with r-way replication any
-        single live peer of a key suffices."""
-        fetched: Dict[int, wire.FeedRecord] = {}
+    def _pull_feed(self, host: str, port: int, since: int,
+                   timeout: float) -> Tuple[int, List[wire.FeedRecord]]:
+        with socket.create_connection((host, port), timeout=timeout) as s:
+            s.settimeout(timeout)
+            wire.send_frame(s, wire.MSG_FEED_SINCE, 0,
+                            struct.pack("<Q", since))
+            reply = wire.recv_frame(s)
+        if reply.msg_type != wire.MSG_OK:
+            raise wire.RemoteError(*wire.unpack_err(reply.body))
+        (floor,) = struct.unpack_from("<Q", reply.body, 0)
+        return floor, wire.unpack_records(reply.body, 8)
+
+    def _is_fresh(self) -> bool:
+        return (not self._feed and not self._applied and self.feed_floor == 0
+                and self.last_seq == 0 and not self.store.key_sizes)
+
+    def _bootstrap_state(self, peers: List[Tuple[str, int]],
+                         timeout: float) -> int:
+        """Full-state transfer for a fresh (wiped) cell facing peers
+        whose feeds are truncated: for every placement this cell owns,
+        copy a live replica's chunk + extent file bytes verbatim and
+        install its per-key accounting, then adopt the highest peer
+        floor seen.  Returns the number of placements installed.  Chunk
+        files never shrink at truncation (only the feed does), so any
+        replica's copy is complete regardless of its floor — and since
+        they are pure functions of the record set, the copied bytes are
+        exactly what replaying the full history would have produced."""
+        if self.store.backend != "file":
+            raise FeedTruncated(
+                "fresh mem-backed cell cannot bootstrap past a truncated "
+                "peer feed: full-state transfer needs the file backend")
+        pulled: set = set()
+        floors: List[int] = []
+        installed = 0
         for host, port in peers:
             try:
                 with socket.create_connection((host, port),
                                               timeout=timeout) as s:
                     s.settimeout(timeout)
-                    wire.send_frame(s, wire.MSG_FEED_SINCE, 0,
-                                    struct.pack("<Q", 0))
+                    wire.send_frame(s, wire.MSG_PLACEMENTS, 0)
                     reply = wire.recv_frame(s)
-                if reply.msg_type != wire.MSG_OK:
-                    continue
-                for rec in wire.unpack_records(reply.body):
-                    if rec.seq not in self._applied and self._owns(rec.key):
-                        fetched.setdefault(rec.seq, rec)
-            except (OSError, wire.WireError):
+                    if reply.msg_type != wire.MSG_OK:
+                        continue
+                    placements = [
+                        p for p in wire.unpack_placements(reply.body)
+                        if p not in pulled
+                        and self.node_id in replica_nodes(p[0], p[1],
+                                                          self.n_cells,
+                                                          self.r)]
+                    for tsid, sid in placements:
+                        wire.send_frame(s, wire.MSG_STATE_PULL, 0,
+                                        struct.pack("<qq", tsid, sid))
+                        reply = wire.recv_frame(s)
+                        if reply.msg_type != wire.MSG_OK:
+                            continue
+                        state = wire.PlacementState.unpack(reply.body)
+                        self._install_state((tsid, sid), state)
+                        pulled.add((tsid, sid))
+                        floors.append(state.floor)
+                        installed += 1
+            except (OSError, wire.WireError, struct.error):
                 continue
+        with self._flock:
+            if floors:
+                self.feed_floor = max(self.feed_floor, max(floors))
+                self.ack_water = max(self.ack_water, self.feed_floor)
+                self.last_seq = max([self.last_seq, self.feed_floor]
+                                    + list(self._key_seq.values()))
+                self._save_base_locked()
+        return installed
+
+    def _install_state(self, placement: Tuple[int, int],
+                       state: wire.PlacementState) -> None:
+        cpath = self.store._chunk_path(0, placement)
+        epath = self.store._extent_path(0, placement)
+        cpath.parent.mkdir(parents=True, exist_ok=True)
+        cpath.write_bytes(state.chunk)
+        if state.ext:
+            epath.write_bytes(state.ext)
+        self.store.drop_chunk_caches(0, placement)
+        for key, raw, enc in state.sizes:
+            self.store.key_sizes[key] = (raw, enc)
+        for key, seq in state.key_seqs:
+            if seq > self._key_seq.get(key, 0):
+                self._key_seq[key] = seq
+
+    def catch_up(self, peers: List[Tuple[str, int]],
+                 timeout: float = 5.0) -> int:
+        """Converge with the cluster after a restart: pull every peer's
+        feed above this cell's own truncation floor, keep the records
+        whose key's replica chain includes this cell and whose seq is
+        not already certified applied, and apply them in seq order.
+        Returns the number of records applied (feed stamps included).
+
+        Fetching from the floor rather than from ``last_seq`` is what
+        repairs *interior* gaps — a PUT this cell missed while live
+        (transient timeout) below a seq it did accept would be invisible
+        to a tail-only pull and would otherwise serve silently stale
+        reads forever; the applied-seq set makes the refetch cheap to
+        dedupe and impossible to double-apply.  The floor is a safe
+        lower bound because it only ever advances past records every
+        replica (including this cell) durably acked.  A peer whose own
+        floor is above ours can no longer serve the records in between
+        as feed entries — for a disk-surviving cell that is fine (the
+        ack invariant says we already hold everything we own down
+        there); a *fresh* cell instead bootstraps by full-state
+        transfer first.  Unreachable peers are skipped — with r-way
+        replication any single live peer of a key suffices."""
+        fetched: Dict[int, wire.FeedRecord] = {}
+        max_peer_floor = 0
+        reachable: List[Tuple[str, int]] = []
+        for host, port in peers:
+            try:
+                floor, recs = self._pull_feed(host, port, self.feed_floor,
+                                              timeout)
+            except (OSError, wire.WireError, struct.error):
+                continue
+            reachable.append((host, port))
+            max_peer_floor = max(max_peer_floor, floor)
+            for rec in recs:
+                if (rec.seq > self.feed_floor
+                        and rec.seq not in self._applied
+                        and self._owns(rec.key)):
+                    fetched.setdefault(rec.seq, rec)
+        if max_peer_floor > self.feed_floor and self._is_fresh():
+            self._bootstrap_state(reachable, timeout)
         n = 0
         for seq in sorted(fetched):
             applied, _ = self.apply(fetched[seq])
@@ -246,6 +506,10 @@ class StorageCell:
         cell was binding are not missed."""
         if peers:
             self.catch_up(peers)
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=self.workers,
+                thread_name_prefix=f"cell{self.node_id}-worker")
         self._lsock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._lsock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._lsock.bind((self.host, self.port))
@@ -271,6 +535,9 @@ class StorageCell:
                 c.close()
             except OSError:
                 pass
+        if self._pool is not None:
+            self._pool.shutdown(wait=False, cancel_futures=True)
+            self._pool = None
 
     def _accept_loop(self) -> None:
         while not self._stop.is_set():
@@ -278,6 +545,7 @@ class StorageCell:
                 conn, _ = self._lsock.accept()
             except OSError:
                 return  # listen socket closed by stop()
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
             self._conns.add(conn)
             t = threading.Thread(target=self._serve_conn, args=(conn,),
                                  daemon=True)
@@ -285,39 +553,54 @@ class StorageCell:
             self._threads.append(t)
 
     def _serve_conn(self, conn: socket.socket) -> None:
+        """Per-connection read loop.  Cheap liveness traffic (HELLO,
+        PING) is answered inline so it can never queue behind a slow
+        request; everything else is dispatched to the worker pool under
+        the per-connection in-flight cap.  Replies are written under
+        ``send_lock`` in completion order — out-of-order by design, the
+        client demuxes by ``req_id``."""
+        send_lock = threading.Lock()
+        slots = threading.BoundedSemaphore(self.inflight_cap)
+        reader = wire.FrameReader(conn)  # pipelined requests batch per recv
         try:
             while not self._stop.is_set():
                 try:
-                    frame = wire.recv_frame(conn)
-                except wire.ConnectionClosed:
-                    return
+                    frame = reader.next_frame()
+                except (wire.ConnectionClosed, OSError):
+                    return  # peer hung up, or stop() closed us mid-read
                 except wire.WireError:
                     return  # garbage on the stream: drop the connection
                 if frame.version != wire.PROTO_VERSION:
                     # answer under OUR version so the peer's codec can
                     # still read the rejection, then hang up
-                    wire.send_frame(
-                        conn, wire.MSG_ERR, frame.req_id,
-                        wire.pack_err(wire.ERR_VERSION,
-                                      f"cell speaks v{wire.PROTO_VERSION}, "
-                                      f"client sent v{frame.version}"))
+                    with send_lock:
+                        wire.send_frame(
+                            conn, wire.MSG_ERR, frame.req_id,
+                            wire.pack_err(
+                                wire.ERR_VERSION,
+                                f"cell speaks v{wire.PROTO_VERSION}, "
+                                f"client sent v{frame.version}"))
                     return
-                try:
-                    mtype, body = self._handle(frame.msg_type, frame.body)
-                except KeyMissing as e:
-                    mtype, body = wire.MSG_ERR, wire.pack_err(
-                        wire.ERR_KEY_MISSING, str(e.args[0]))
-                except (wire.WireError, struct.error, IndexError,
-                        UnicodeDecodeError, AssertionError) as e:
-                    mtype, body = wire.MSG_ERR, wire.pack_err(
-                        wire.ERR_BAD_REQUEST, f"{type(e).__name__}: {e}")
-                except Exception as e:  # noqa: BLE001 — relay, don't die
-                    mtype, body = wire.MSG_ERR, wire.pack_err(
-                        wire.ERR_INTERNAL, f"{type(e).__name__}: {e}")
-                try:
-                    wire.send_frame(conn, mtype, frame.req_id, body)
-                except OSError:
-                    return
+                if frame.msg_type in (wire.MSG_HELLO, wire.MSG_PING):
+                    if frame.msg_type == wire.MSG_PING and len(frame.body) >= 8:
+                        (water,) = struct.unpack_from("<Q", frame.body, 0)
+                        self.note_ack(water)
+                    reply = (wire.MSG_HELLO if frame.msg_type == wire.MSG_HELLO
+                             else wire.MSG_OK)
+                    try:
+                        with send_lock:
+                            wire.send_frame(conn, reply, frame.req_id,
+                                            struct.pack("<BQ", self.node_id,
+                                                        self.last_seq))
+                    except OSError:
+                        return
+                    continue
+                slots.acquire()  # in-flight cap: blocks the READ loop only
+                if self._pool is None:  # direct use without start(): inline
+                    self._run_request(conn, send_lock, slots, frame)
+                else:
+                    self._pool.submit(self._run_request, conn, send_lock,
+                                      slots, frame)
         finally:
             self._conns.discard(conn)
             try:
@@ -325,15 +608,46 @@ class StorageCell:
             except OSError:
                 pass
 
-    def _handle(self, msg_type: int, body: bytes) -> Tuple[int, bytes]:
-        if msg_type in (wire.MSG_HELLO, wire.MSG_PING):
-            reply = wire.MSG_HELLO if msg_type == wire.MSG_HELLO else wire.MSG_OK
-            return reply, struct.pack("<BQ", self.node_id, self.last_seq)
-        if msg_type == wire.MSG_GET:
-            key, off = wire.unpack_key(body, 0)
-            fields, _ = wire.unpack_fields(body, off)
-            return wire.MSG_OK, self.store.get_encoded(key, fields)
-        if msg_type == wire.MSG_MULTIGET:
+    def _run_request(self, conn: socket.socket, send_lock: threading.Lock,
+                     slots: threading.BoundedSemaphore,
+                     frame: wire.Frame) -> None:
+        try:
+            try:
+                if frame.msg_type == wire.MSG_MULTIGET:
+                    self._stream_multiget(conn, send_lock, frame)
+                    return
+                mtype, body = self._handle(frame.msg_type, frame.body)
+            except KeyMissing as e:
+                mtype, body = wire.MSG_ERR, wire.pack_err(
+                    wire.ERR_KEY_MISSING, str(e.args[0]))
+            except FeedTruncated as e:
+                mtype, body = wire.MSG_ERR, wire.pack_err(
+                    wire.ERR_FEED_TRUNCATED, str(e))
+            except (wire.WireError, struct.error, IndexError,
+                    UnicodeDecodeError, AssertionError) as e:
+                mtype, body = wire.MSG_ERR, wire.pack_err(
+                    wire.ERR_BAD_REQUEST, f"{type(e).__name__}: {e}")
+            except Exception as e:  # noqa: BLE001 — relay, don't die
+                mtype, body = wire.MSG_ERR, wire.pack_err(
+                    wire.ERR_INTERNAL, f"{type(e).__name__}: {e}")
+            try:
+                with send_lock:
+                    wire.send_frame(conn, mtype, frame.req_id, body)
+            except OSError:
+                pass
+        finally:
+            slots.release()
+
+    def _stream_multiget(self, conn: socket.socket,
+                         send_lock: threading.Lock,
+                         frame: wire.Frame) -> None:
+        """MULTIGET reply stream: one CHUNK frame per found key as it is
+        read (the client can decode and pool-fill immediately), END with
+        the found count as the terminal frame, ERR as the terminal frame
+        on a hard miss.  All frames carry the request's req_id, so the
+        stream interleaves freely with other in-flight replies."""
+        try:
+            body = frame.body
             (n,) = struct.unpack_from("<I", body, 0)
             off = 4
             keys = []
@@ -342,34 +656,94 @@ class StorageCell:
                 keys.append(k)
             fields, off = wire.unpack_fields(body, off)
             (missing_ok,) = struct.unpack_from("<B", body, off)
-            found = []
+        except (wire.WireError, struct.error, IndexError,
+                UnicodeDecodeError) as e:
+            try:
+                with send_lock:
+                    wire.send_frame(conn, wire.MSG_ERR, frame.req_id,
+                                    wire.pack_err(wire.ERR_BAD_REQUEST,
+                                                  f"{type(e).__name__}: {e}"))
+            except OSError:
+                pass
+            return
+        # CHUNK frames coalesce into one sendall per ~64 KiB — identical
+        # frames on the wire, a fraction of the syscalls (and on a busy
+        # box, of the scheduler switches).  A terminal ERR/END appends
+        # after any buffered chunks so per-request frame order holds.
+        found = 0
+        pend = bytearray()
+        try:
             for k in keys:
                 try:
-                    found.append((k, self.store.get_encoded(k, fields)))
-                except KeyMissing:
-                    if not missing_ok:
-                        raise
-            out = [struct.pack("<I", len(found))]
-            for k, blob in found:
-                out.append(wire.pack_key(k))
-                out.append(wire.pack_blob(blob))
-            return wire.MSG_OK, b"".join(out)
+                    blob = self.store.get_encoded(k, fields)
+                except KeyMissing as e:
+                    if missing_ok:
+                        continue
+                    pend += wire.encode_frame(
+                        wire.MSG_ERR, frame.req_id,
+                        wire.pack_err(wire.ERR_KEY_MISSING, str(e.args[0])))
+                    with send_lock:
+                        conn.sendall(pend)
+                    return
+                except Exception as e:  # noqa: BLE001 — relay, don't die
+                    pend += wire.encode_frame(
+                        wire.MSG_ERR, frame.req_id,
+                        wire.pack_err(wire.ERR_INTERNAL,
+                                      f"{type(e).__name__}: {e}"))
+                    with send_lock:
+                        conn.sendall(pend)
+                    return
+                found += 1
+                pend += wire.encode_frame(
+                    wire.MSG_CHUNK, frame.req_id,
+                    wire.pack_key(k) + wire.pack_blob(blob))
+                if len(pend) >= (1 << 16):
+                    with send_lock:
+                        conn.sendall(pend)
+                    pend = bytearray()
+            pend += wire.encode_frame(wire.MSG_END, frame.req_id,
+                                      struct.pack("<I", found))
+            with send_lock:
+                conn.sendall(pend)
+        except OSError:
+            pass
+
+    def _handle(self, msg_type: int, body: bytes) -> Tuple[int, bytes]:
+        if msg_type in (wire.MSG_HELLO, wire.MSG_PING):
+            # normally answered inline by the read loop; kept here for
+            # direct (non-socket) callers
+            if msg_type == wire.MSG_PING and len(body) >= 8:
+                (water,) = struct.unpack_from("<Q", body, 0)
+                self.note_ack(water)
+            reply = wire.MSG_HELLO if msg_type == wire.MSG_HELLO else wire.MSG_OK
+            return reply, struct.pack("<BQ", self.node_id, self.last_seq)
+        if msg_type == wire.MSG_GET:
+            key, off = wire.unpack_key(body, 0)
+            fields, _ = wire.unpack_fields(body, off)
+            return wire.MSG_OK, self.store.get_encoded(key, fields)
         if msg_type == wire.MSG_PUT:
             key, off = wire.unpack_key(body, 0)
             seq, raw = struct.unpack_from("<QQ", body, off)
-            blob, _ = wire.unpack_blob(body, off + 16)
+            blob, off = wire.unpack_blob(body, off + 16)
             applied, _ = self.apply(
                 wire.FeedRecord(seq, wire.OP_PUT, key, raw, blob))
-            return wire.MSG_OK, struct.pack("<B", applied)
+            if off + 8 <= len(body):  # trailing ack watermark
+                (water,) = struct.unpack_from("<Q", body, off)
+                self.note_ack(water)
+            return wire.MSG_OK, struct.pack("<BQ", applied, self.last_seq)
         if msg_type == wire.MSG_DELETE:
             key, off = wire.unpack_key(body, 0)
             (seq,) = struct.unpack_from("<Q", body, off)
             _, existed = self.apply(
                 wire.FeedRecord(seq, wire.OP_DELETE, key, 0, b""))
-            return wire.MSG_OK, struct.pack("<B", existed)
+            if off + 16 <= len(body):  # trailing ack watermark
+                (water,) = struct.unpack_from("<Q", body, off + 8)
+                self.note_ack(water)
+            return wire.MSG_OK, struct.pack("<BQ", existed, self.last_seq)
         if msg_type == wire.MSG_FEED_SINCE:
             (since,) = struct.unpack_from("<Q", body, 0)
-            return wire.MSG_OK, wire.pack_records(self.feed_since(since))
+            return wire.MSG_OK, (struct.pack("<Q", self.feed_floor)
+                                 + wire.pack_records(self.feed_since(since)))
         if msg_type == wire.MSG_STATUS:
             s = self.store.stats
             status = {
@@ -378,6 +752,10 @@ class StorageCell:
                 "live_bytes": self.store.live_bytes(),
                 "backend": self.store.backend,
                 "feed_len": len(self._feed),
+                "feed": {"len": len(self._feed), "floor": self.feed_floor,
+                         "bytes": self.feed_bytes(),
+                         "ack_water": self.ack_water,
+                         "truncations": self.truncations},
                 "stats": {"reads": s.reads, "writes": s.writes,
                           "bytes_read": s.bytes_read,
                           "bytes_written": s.bytes_written,
@@ -395,10 +773,43 @@ class StorageCell:
             return wire.MSG_OK, (struct.pack("<I", len(keys))
                                  + b"".join(wire.pack_key(k) for k in keys))
         if msg_type == wire.MSG_MAINT:
-            # fire-and-forget: the pass runs on a background thread so
-            # the cell answers (and keeps serving) immediately
-            started = self.maintain()
+            # empty body: legacy "kick a vacuum".  Otherwise a flags
+            # byte: bit0 vacuum (fire-and-forget, background thread),
+            # bit1 truncate the feed NOW if the watermark allows
+            # (synchronous — used by benches/tests to reach a
+            # deterministic final feed state before comparing files)
+            flags = wire.MAINT_VACUUM
+            if len(body) >= 1:
+                (flags,) = struct.unpack_from("<B", body, 0)
+            started = False
+            if flags & wire.MAINT_VACUUM:
+                started = self.maintain()
+            if flags & wire.MAINT_TRUNCATE:
+                self.truncate_feed(force=True)
             return wire.MSG_OK, struct.pack("<B", started)
+        if msg_type == wire.MSG_PLACEMENTS:
+            placements = sorted({(k.tsid, k.sid)
+                                 for k in self.store.key_sizes})
+            return wire.MSG_OK, wire.pack_placements(placements)
+        if msg_type == wire.MSG_STATE_PULL:
+            if self.store.backend != "file":
+                raise FeedTruncated(
+                    "mem-backed cell cannot serve full-state transfer")
+            tsid, sid = struct.unpack_from("<qq", body, 0)
+            placement = (tsid, sid)
+            with self._flock:
+                cpath = self.store._chunk_path(0, placement)
+                epath = self.store._extent_path(0, placement)
+                chunk = cpath.read_bytes() if cpath.exists() else b""
+                ext = epath.read_bytes() if epath.exists() else b""
+                sizes = [(k, rw, en)
+                         for k, (rw, en) in self.store.key_sizes.items()
+                         if (k.tsid, k.sid) == placement]
+                key_seqs = [(k, s) for k, s in self._key_seq.items()
+                            if (k.tsid, k.sid) == placement]
+                state = wire.PlacementState(self.feed_floor, chunk, ext,
+                                            sizes, key_seqs)
+            return wire.MSG_OK, state.pack()
         raise AssertionError(f"unknown message type {msg_type}")
 
 
@@ -428,11 +839,19 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="listen port (0 = ephemeral, printed on READY)")
     ap.add_argument("--peers", default="",
                     help="comma-separated host:port peers for boot catch-up")
+    ap.add_argument("--workers", type=int, default=4,
+                    help="request worker pool size (read loops stay free)")
+    ap.add_argument("--inflight-cap", type=int, default=32,
+                    help="max queued+running requests per connection")
+    ap.add_argument("--feed-keep", type=int, default=256,
+                    help="min fully-acked backlog before feed truncation")
     args = ap.parse_args(argv)
     cell = StorageCell(node_id=args.node_id, n_cells=args.n_cells,
                        r=args.replication, backend=args.backend,
                        root=args.root, fmt=args.fmt, host=args.host,
-                       port=args.port)
+                       port=args.port, workers=args.workers,
+                       inflight_cap=args.inflight_cap,
+                       feed_keep=args.feed_keep)
     port = cell.start(peers=_parse_peers(args.peers))
     print(f"CELL READY node={cell.node_id} port={port}", flush=True)
     stop = threading.Event()

@@ -7,18 +7,40 @@ above the physical-I/O layer is *inherited*: placement, replica
 failover, the pool preamble, projection, and stats all come from
 ``DeltaStore``; this class only swaps dict/file reads for wire frames.
 
+**Transport: a per-node connection multiplexer.**  Each node gets one
+socket (dialed lazily, HELLO handshake once per connection) shared by
+every concurrent request: a background reader thread demuxes reply
+frames to waiting futures by ``req_id``, so replies complete out of
+order and a slow GET never head-of-line-blocks a PING.  In-flight
+requests per node are bounded by a window semaphore (backpressure: a
+submitter blocks, within its deadline, until a slot frees).  Deadlines
+are wall-clock from *enqueue* — queue wait, connect, send, and reply
+all spend the same budget — and an expired request cancels its future
+WITHOUT poisoning the connection: the late reply is drained and
+dropped by the reader, the slot frees on that terminal frame, and
+every other in-flight request proceeds untouched.  A dead connection
+fails all its pending futures with ``NodeUnavailable``; the request
+wrapper transparently re-dials and re-issues *idempotent* requests
+only (GET/MULTIGET/PING/STATUS/KEYS/FEED_SINCE/...) with bounded
+backoff — writes fail loudly after one attempt and rely on the
+seq-dedup'd redelivery queue, never on silent transport replays.
+Idle connections (mux and the serial fallback pool) are reaped after
+``idle_ttl``.  Pass ``pipeline=False`` for the pre-multiplexer
+behavior: one checked-out connection per request — kept as the bench
+baseline and as a fallback.
+
 Read path: ``_read_columns`` issues one GET per key (fields pushed
 through the wire, so the cell preads only the projected columns) and
 decodes the TGI2 reply client-side — a reply that fails its per-column
 crc32 raises ``BlockCorruption``, which the inherited ``get`` treats
 as a dead replica and fails over, extending corrupt-replica failover
-across the process boundary.  ``_group_fetch`` batches each multiget
-group into one MULTIGET frame per replica tier; a group whose primary
-cell is known-unavailable is hedged straight to the fallback replicas
-(``StoreStats.hedged_reads``).  Requests carry a per-request timeout
-and bounded-backoff retries; a cell that stays unreachable is marked
-*suspect* for ``suspect_ttl`` seconds so subsequent reads skip it
-without paying the timeout again, then re-probed.
+across the process boundary.  ``multiget`` fans out every replica-tier
+group *concurrently* across nodes on the muxes — hedged reads ride the
+same futures — and consumes the streamed CHUNK replies as they arrive,
+decoding and filling the BlockPool while the cells are still reading
+later keys.  A cell that stays unreachable is marked *suspect* for
+``suspect_ttl`` seconds so subsequent reads skip it without paying the
+timeout again, then re-probed.
 
 Write path: every ``put``/``delete`` is stamped with a globally
 monotonic ``seq`` and fanned out to the key's replica cells while the
@@ -33,7 +55,15 @@ suspect, or a transient failure) gets the record queued on a per-node
 node serves any further read or receives any further write from this
 client, so a cell with an interior feed gap this client created can
 never serve it a stale version — and a restarting cell additionally
-repairs gaps from any writer via the full-feed ``catch_up`` pull.
+repairs gaps from any writer via the feed ``catch_up`` pull.
+
+Every write and ``quiesce`` piggybacks the client's *ack watermark* —
+the highest seq below which no redelivery is queued, i.e. every cell
+provably holds everything it owns — which is what lets cells truncate
+``feed.log`` (see ``StorageCell``).  The watermark assumes this
+client's redelivery queues drain before it exits (``quiesce`` does
+both); a hard-killed writer's queued records are the documented
+residual a restart-time catch-up repairs.
 
 Attaching requires every cell to answer a PING: the write seq resumes
 from the cluster-wide high-water mark, and a cell that is unreachable
@@ -48,7 +78,8 @@ import socket
 import struct
 import threading
 import time
-from typing import Dict, Iterable, List, Optional, Tuple
+from collections import deque
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
@@ -59,6 +90,252 @@ from repro.storage.kvstore import (DEFAULT_POOL_BYTES, BlockCorruption,
                                    NodeUnavailable, ReadSizes,
                                    StorageNodeDown, replica_nodes)
 
+# message types the transport may re-issue transparently after a
+# reconnect: read-only (or seq-dedup'd maintenance) requests.  PUT and
+# DELETE are deliberately absent — a write gets ONE transport attempt
+# and then fails loudly into the redelivery queue, so a retry can never
+# materialize a write the caller saw fail.
+_IDEMPOTENT = frozenset({
+    wire.MSG_HELLO, wire.MSG_PING, wire.MSG_GET, wire.MSG_MULTIGET,
+    wire.MSG_STATUS, wire.MSG_KEYS, wire.MSG_FEED_SINCE, wire.MSG_MAINT,
+    wire.MSG_PLACEMENTS, wire.MSG_STATE_PULL,
+})
+
+
+class _Deadline(Exception):
+    """Internal: a per-request deadline expired (wall-clock from
+    enqueue).  Converted to ``NodeUnavailable`` at the API boundary."""
+
+
+class _MuxFuture:
+    """Reply slot of one in-flight request: an ordered event queue the
+    reader thread pushes into (``("chunk", body)`` per CHUNK frame, then
+    exactly one terminal ``("end", msg_type, body)`` or ``("err",
+    exc)``).  The waiter consumes with a deadline; ``cancelled`` makes
+    the reader drop late frames instead of queuing them."""
+
+    __slots__ = ("_q", "_cond", "cancelled")
+
+    def __init__(self):
+        self._q: deque = deque()
+        self._cond = threading.Condition()
+        self.cancelled = False
+
+    def push(self, item) -> None:
+        with self._cond:
+            self._q.append(item)
+            self._cond.notify()
+
+    def push_many(self, items) -> None:
+        """Batch push from the demux loop: one lock hold + one notify
+        for a whole CHUNK train instead of a wakeup per frame."""
+        with self._cond:
+            self._q.extend(items)
+            self._cond.notify()
+
+    def next(self, deadline: float):
+        with self._cond:
+            while not self._q:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise _Deadline()
+                self._cond.wait(remaining)
+            return self._q.popleft()
+
+    def next_batch(self, deadline: float) -> List:
+        """Pop *everything* queued in one lock round (blocking like
+        ``next`` while empty).  Consumers that can absorb a run of
+        events amortise the handoff to one wakeup per CHUNK train."""
+        with self._cond:
+            while not self._q:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise _Deadline()
+                self._cond.wait(remaining)
+            evs = list(self._q)
+            self._q.clear()
+            return evs
+
+
+class _NodeMux:
+    """One multiplexed connection to one cell.  ``submit`` acquires a
+    window slot (bounded in-flight, backpressure within the caller's
+    deadline), registers a future under a fresh ``req_id``, and sends
+    the frame; a background reader thread owns the receive side and
+    demuxes every incoming frame to its future.  The window slot is
+    released exactly when the request's terminal frame arrives (or the
+    connection dies) — a cancelled future keeps its slot until the
+    server's reply is drained, which is the price of not poisoning the
+    stream, bounded by the window.  Connection death fails every
+    pending future with ``NodeUnavailable``; re-dial is lazy on the
+    next submit."""
+
+    def __init__(self, store: "RemoteDeltaStore", node: int, window: int):
+        self.store = store
+        self.node = node
+        self.window = threading.BoundedSemaphore(window)
+        self.lock = threading.Lock()
+        self.send_lock = threading.Lock()
+        self.sock: Optional[socket.socket] = None
+        self.gen = 0  # bumped per dial; stale reader threads self-expire
+        self.waiters: Dict[int, _MuxFuture] = {}
+        self.inflight_hwm = 0
+        self.last_used = time.monotonic()
+        self.closed = False
+
+    def submit(self, msg_type: int, body: bytes,
+               deadline: float) -> _MuxFuture:
+        """Register + send one request; returns its future.  Raises
+        ``_Deadline`` if the window or the dial exhausts the budget and
+        ``NodeUnavailable`` if the node can't be dialed.  A send failure
+        does NOT raise — it fails the connection, and the returned
+        future already carries the error event."""
+        remaining = deadline - time.monotonic()
+        if remaining <= 0 or not self.window.acquire(timeout=remaining):
+            raise _Deadline()
+        fut = _MuxFuture()
+        registered = False
+        try:
+            with self.lock:
+                if self.closed:
+                    raise NodeUnavailable(f"cell {self.node}: client closed")
+                if self.sock is None:
+                    if self.gen > 0:
+                        with self.store._lock:
+                            self.store.stats.rt_reconnects += 1
+                    sock = self.store._dial(self.node)
+                    sock.settimeout(None)  # deadlines live in the futures
+                    self.sock = sock
+                    self.gen += 1
+                    t = threading.Thread(
+                        target=self._read_loop, args=(sock, self.gen),
+                        name=f"mux{self.node}-reader", daemon=True)
+                    t.start()
+                req_id = self.store._next_req_id()
+                self.waiters[req_id] = fut
+                registered = True
+                depth = len(self.waiters)
+                self.inflight_hwm = max(self.inflight_hwm, depth)
+                self.last_used = time.monotonic()
+                sock, gen = self.sock, self.gen
+        except wire.ProtocolMismatch:
+            raise
+        except (OSError, wire.WireError) as e:
+            raise NodeUnavailable(
+                f"cell {self.node} @ {self.store.addrs[self.node]}: {e}"
+            ) from e
+        finally:
+            if not registered:
+                self.window.release()
+        with self.store._lock:
+            if depth > 1:
+                self.store.stats.rt_pipelined += 1
+            else:
+                self.store.stats.rt_serial += 1
+        try:
+            with self.send_lock:
+                wire.send_frame(sock, msg_type, req_id, body)
+        except OSError as e:
+            self._fail(gen, e)  # drains fut with the error event
+        return fut
+
+    def cancel(self, fut: _MuxFuture) -> None:
+        """Deadline expiry: stop waiting without poisoning the stream.
+        The future stays registered so the reader can drain (and drop)
+        the late reply; its window slot frees on that terminal frame."""
+        fut.cancelled = True
+        with self.store._lock:
+            self.store.stats.rt_deadline_cancels += 1
+
+    def _read_loop(self, sock: socket.socket, gen: int) -> None:
+        reader = wire.FrameReader(sock)
+        while True:
+            try:
+                frames = reader.read_frames()
+            except (OSError, wire.WireError) as e:
+                self._fail(gen, e)
+                return
+            # resolve the whole batch under ONE lock hold, then deliver
+            # with one wakeup per future — a 64-chunk train costs one
+            # recv, one lock round, one notify
+            resolved = []
+            with self.lock:
+                if gen != self.gen:
+                    return  # superseded connection: stand down
+                self.last_used = time.monotonic()
+                for frame in frames:
+                    terminal = frame.msg_type != wire.MSG_CHUNK
+                    fut = self.waiters.get(frame.req_id)
+                    if fut is not None and terminal:
+                        del self.waiters[frame.req_id]
+                    resolved.append((fut, terminal, frame))
+            deliver: Dict[int, Tuple[_MuxFuture, list]] = {}
+            for fut, terminal, frame in resolved:
+                if fut is None:
+                    continue  # stray frame (already-failed request): drop
+                if terminal:
+                    self.window.release()
+                if fut.cancelled:
+                    continue  # deadline passed: drain and drop
+                slot = deliver.setdefault(id(fut), (fut, []))
+                if terminal:
+                    slot[1].append(("end", frame.msg_type, frame.body))
+                else:
+                    slot[1].append(("chunk", frame.body))
+            for fut, items in deliver.values():
+                fut.push_many(items)
+
+    def _fail(self, gen: int, exc: Exception) -> None:
+        """Connection death: close the socket and fail every pending
+        future.  ``gen`` guards double-failure (send-side and read-side
+        racing) and stale reader threads."""
+        with self.lock:
+            if gen != self.gen:
+                return
+            if self.sock is not None:
+                try:
+                    self.sock.close()
+                except OSError:
+                    pass
+                self.sock = None
+            pending = list(self.waiters.values())
+            self.waiters.clear()
+        err = NodeUnavailable(
+            f"cell {self.node} @ {self.store.addrs[self.node]}: {exc}")
+        for fut in pending:
+            self.window.release()
+            fut.push(("err", err))
+
+    def reap_if_idle(self, cutoff: float) -> bool:
+        with self.lock:
+            if (self.sock is None or self.waiters
+                    or self.last_used >= cutoff):
+                return False
+            try:
+                self.sock.close()
+            except OSError:
+                pass
+            self.sock = None
+            self.gen += 1  # blocked reader fails with a stale gen: no drain
+            return True
+
+    def close(self) -> None:
+        with self.lock:
+            self.closed = True
+            if self.sock is not None:
+                try:
+                    self.sock.close()
+                except OSError:
+                    pass
+                self.sock = None
+            self.gen += 1
+            pending = list(self.waiters.values())
+            self.waiters.clear()
+        err = NodeUnavailable(f"cell {self.node}: client closed")
+        for fut in pending:
+            self.window.release()
+            fut.push(("err", err))
+
 
 class RemoteDeltaStore(DeltaStore):
     def __init__(self, addrs: List[Tuple[str, int]], r: int = 1,
@@ -66,7 +343,9 @@ class RemoteDeltaStore(DeltaStore):
                  pool_bytes: int = DEFAULT_POOL_BYTES,
                  timeout: float = 5.0, retries: int = 2,
                  backoff: float = 0.05, suspect_ttl: float = 2.0,
-                 require_full_attach: bool = True):
+                 require_full_attach: bool = True,
+                 pipeline: bool = True, window: int = 32,
+                 idle_ttl: float = 30.0):
         super().__init__(m=len(addrs), r=r, backend="mem", fmt=fmt,
                          pool_bytes=pool_bytes)
         self.backend = "remote"
@@ -75,15 +354,27 @@ class RemoteDeltaStore(DeltaStore):
         self.retries = retries
         self.backoff = backoff
         self.suspect_ttl = suspect_ttl
+        self.window = max(1, window)
+        self.idle_ttl = idle_ttl
+        self._pipeline = pipeline
         self._suspects: Dict[int, float] = {}
-        self._conns: List[List[socket.socket]] = [[] for _ in addrs]
+        # serial fallback pool: (socket, last-checkin time) per node
+        self._conns: List[List[Tuple[socket.socket, float]]] = [
+            [] for _ in addrs]
         self._conn_lock = threading.Lock()
+        self._muxes = [_NodeMux(self, j, self.window)
+                       for j in range(len(addrs))]
         self._req_id = 0
         self._wlock = threading.Lock()
         # per-node redelivery queues: (seq, msg_type, body) of replica
         # writes that node missed, drained in seq order before the node
         # serves any further read/write from this client (gap repair)
         self._pending: List[List[Tuple[int, int, bytes]]] = [[] for _ in addrs]
+        self._closed = threading.Event()
+        self._reaper = threading.Thread(target=self._reap_loop,
+                                        name="remote-store-reaper",
+                                        daemon=True)
+        self._reaper.start()
         # resume the global write sequence from the cluster's high-water
         # mark, so a fresh client attaching can never stamp a seq the
         # feeds have already seen (which dedupe would silently drop).
@@ -106,7 +397,7 @@ class RemoteDeltaStore(DeltaStore):
                 f"high-water mark cannot be resumed safely (pass "
                 f"require_full_attach=False for a degraded attach)")
 
-    # ---- connection pool ----
+    # ---- connection management ----
     def _dial(self, node: int) -> socket.socket:
         sock = socket.create_connection(self.addrs[node],
                                         timeout=self.timeout)
@@ -126,57 +417,150 @@ class RemoteDeltaStore(DeltaStore):
                 f"expected HELLO reply, got type {reply.msg_type}")
         return sock
 
+    def _next_req_id(self) -> int:
+        with self._lock:
+            self._req_id = (self._req_id + 1) & 0xFFFFFFFF or 1
+            return self._req_id
+
     def _checkout(self, node: int) -> socket.socket:
+        cutoff = time.monotonic() - self.idle_ttl
         with self._conn_lock:
-            if self._conns[node]:
-                return self._conns[node].pop()
+            while self._conns[node]:
+                sock, ts = self._conns[node].pop()
+                if ts >= cutoff:
+                    return sock
+                try:  # sat idle past the TTL: the cell may have dropped
+                    sock.close()  # it; don't hand a dead socket out
+                except OSError:
+                    pass
         return self._dial(node)
 
     def _checkin(self, node: int, sock: socket.socket) -> None:
         with self._conn_lock:
-            self._conns[node].append(sock)
+            self._conns[node].append((sock, time.monotonic()))
+
+    def _reap_loop(self) -> None:
+        interval = max(0.05, min(self.idle_ttl, 5.0) / 2)
+        while not self._closed.wait(interval):
+            cutoff = time.monotonic() - self.idle_ttl
+            for mux in self._muxes:
+                mux.reap_if_idle(cutoff)
+            with self._conn_lock:
+                for node, stack in enumerate(self._conns):
+                    live = [(s, ts) for s, ts in stack if ts >= cutoff]
+                    for s, ts in stack:
+                        if ts < cutoff:
+                            try:
+                                s.close()
+                            except OSError:
+                                pass
+                    self._conns[node] = live
 
     def close(self) -> None:
+        self._closed.set()
+        for mux in self._muxes:
+            mux.close()
         with self._conn_lock:
             for stack in self._conns:
                 while stack:
                     try:
-                        stack.pop().close()
+                        stack.pop()[0].close()
                     except OSError:
                         pass
 
-    # ---- request/reply with timeout, retry, bounded backoff ----
+    # ---- request/reply: deadline from enqueue, idempotent-only retry ----
+    def _map_reply(self, msg_type: int, body: bytes) -> bytes:
+        if msg_type != wire.MSG_ERR:
+            return body
+        code, msg = wire.unpack_err(body)
+        if code == wire.ERR_VERSION:
+            raise wire.ProtocolMismatch(msg)
+        if code == wire.ERR_KEY_MISSING:
+            raise KeyMissing(msg)
+        raise wire.RemoteError(code, msg)
+
     def _request(self, node: int, msg_type: int, body: bytes,
-                 retries: Optional[int] = None) -> bytes:
-        """One request to one cell.  Transport failures (connect/read
-        timeout, reset, torn or corrupt frame) are retried with bounded
-        exponential backoff, then surface as ``NodeUnavailable`` — the
-        caller fails over.  Server-relayed errors (ERR frames) are not
-        retried: the cell is alive, the request itself failed."""
+                 retries: Optional[int] = None,
+                 deadline: Optional[float] = None) -> bytes:
+        """One request to one cell.  The deadline is wall-clock from
+        THIS call (enqueue): window wait, dial, send, queueing on the
+        server, and the reply all draw down the same ``timeout`` budget,
+        so a request stuck behind a full window can't silently exceed
+        the caller's patience.  Transport failures (dead connection,
+        torn or corrupt frame) are retried with bounded backoff for
+        idempotent message types only, then surface as
+        ``NodeUnavailable`` — the caller fails over.  Server-relayed
+        errors (ERR frames) are never retried: the cell is alive, the
+        request itself failed."""
+        if deadline is None:
+            deadline = time.monotonic() + self.timeout
+        if not self._pipeline:
+            return self._request_serial(node, msg_type, body, retries,
+                                        deadline)
+        retries = self.retries if retries is None else retries
+        attempts = (retries + 1) if msg_type in _IDEMPOTENT else 1
+        delay = self.backoff
+        mux = self._muxes[node]
+        last: Exception = NodeUnavailable(f"cell {node}")
+        for _ in range(attempts):
+            try:
+                fut = mux.submit(msg_type, body, deadline)
+            except _Deadline:
+                break
+            except NodeUnavailable as e:
+                last = e
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    break
+                time.sleep(min(delay, remaining))
+                delay = min(delay * 2, 1.0)
+                continue
+            try:
+                ev = fut.next(deadline)
+            except _Deadline:
+                mux.cancel(fut)
+                raise NodeUnavailable(
+                    f"cell {node} @ {self.addrs[node]}: deadline "
+                    f"({self.timeout}s from enqueue) expired") from None
+            if ev[0] == "err":
+                last = ev[1]
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    break
+                time.sleep(min(delay, remaining))
+                delay = min(delay * 2, 1.0)
+                continue
+            assert ev[0] == "end", f"unexpected stream event {ev[0]}"
+            return self._map_reply(ev[1], ev[2])
+        raise NodeUnavailable(
+            f"cell {node} @ {self.addrs[node]}: {last}") from last
+
+    def _request_serial(self, node: int, msg_type: int, body: bytes,
+                        retries: Optional[int], deadline: float) -> bytes:
+        """The pre-multiplexer transport: one checked-out connection per
+        request, blocking reply read.  Kept as the ``pipeline=False``
+        baseline; per-attempt socket timeouts are clipped to the
+        remaining enqueue budget."""
         retries = self.retries if retries is None else retries
         delay = self.backoff
         last: Exception = NodeUnavailable(f"cell {node}")
         for _ in range(retries + 1):
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                break
             sock = None
             try:
                 sock = self._checkout(node)
-                with self._lock:
-                    self._req_id += 1
-                    req_id = self._req_id
+                sock.settimeout(max(0.05, remaining))
+                req_id = self._next_req_id()
                 wire.send_frame(sock, msg_type, req_id, body)
                 reply = wire.recv_frame(sock)
                 if reply.req_id != req_id:
                     raise wire.FrameError("reply req_id mismatch")
-                if reply.msg_type == wire.MSG_ERR:
-                    code, msg = wire.unpack_err(reply.body)
-                    self._checkin(node, sock)
-                    if code == wire.ERR_VERSION:
-                        raise wire.ProtocolMismatch(msg)
-                    if code == wire.ERR_KEY_MISSING:
-                        raise KeyMissing(msg)
-                    raise wire.RemoteError(code, msg)
+                with self._lock:
+                    self.stats.rt_serial += 1
                 self._checkin(node, sock)
-                return reply.body
+                return self._map_reply(reply.msg_type, reply.body)
             except (wire.ProtocolMismatch, wire.RemoteError, KeyMissing):
                 raise
             except (OSError, wire.WireError) as e:
@@ -186,7 +570,10 @@ class RemoteDeltaStore(DeltaStore):
                     except OSError:
                         pass
                 last = e
-                time.sleep(delay)
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    break
+                time.sleep(min(delay, remaining))
                 delay = min(delay * 2, 1.0)
         raise NodeUnavailable(
             f"cell {node} @ {self.addrs[node]}: {last}") from last
@@ -248,6 +635,51 @@ class RemoteDeltaStore(DeltaStore):
                 self.stats.redelivered += 1
         return True
 
+    # ---- replica-ack watermark (feed truncation) ----
+    def _ack_watermark_locked(self, exclude_current: bool = False) -> int:
+        """Highest seq S such that every record this client stamped with
+        seq <= S was accepted by EVERY replica cell it belongs to: every
+        fan-out either acked on all replicas or queued the misses, so S
+        is ``_seq`` clamped below the oldest queued redelivery.  Caller
+        holds ``_wlock``.  ``exclude_current`` backs off by one for the
+        write being fanned out right now (its own acks are not in yet).
+        Cells truncate their feeds up to the watermark — see the module
+        docstring for the hard-killed-writer residual."""
+        base = self._seq - (1 if exclude_current else 0)
+        for q in self._pending:
+            if q:
+                base = min(base, q[0][0] - 1)
+        return max(0, base)
+
+    def ack_watermark(self) -> int:
+        with self._wlock:
+            return self._ack_watermark_locked()
+
+    def quiesce(self, truncate: bool = False) -> int:
+        """Drain every redelivery queue (best effort), then push the ack
+        watermark to every cell with a PING; with ``truncate`` also ask
+        each cell to truncate its feed up to the watermark NOW (forced
+        MAINT) — benches/tests use this to reach a deterministic feed
+        state before comparing files.  Returns the watermark."""
+        with self._wlock:
+            for j in range(self.m):
+                if self._pending[j]:
+                    self._drain_pending(j)
+            water = self._ack_watermark_locked()
+        body = struct.pack("<Q", water)
+        for j in range(self.m):
+            try:
+                self._request(j, wire.MSG_PING, body, retries=0)
+            except (NodeUnavailable, wire.WireError):
+                continue
+            if truncate:
+                try:
+                    self._request(j, wire.MSG_MAINT,
+                                  struct.pack("<B", wire.MAINT_TRUNCATE))
+                except (NodeUnavailable, wire.RemoteError):
+                    pass
+        return water
+
     # ---- physical I/O overrides (everything above is inherited) ----
     def _read_columns(self, node: int, key: DeltaKey,
                       fields: Optional[Tuple[str, ...]],
@@ -292,7 +724,9 @@ class RemoteDeltaStore(DeltaStore):
             self._seq += 1
             body = (wire.pack_key(key)
                     + struct.pack("<QQ", self._seq, raw_bytes)
-                    + wire.pack_blob(blob))
+                    + wire.pack_blob(blob)
+                    + struct.pack("<Q",
+                                  self._ack_watermark_locked(True)))
             self._fan_out(key, self._seq, wire.MSG_PUT, body)
         if self.pool is not None:
             self.pool.invalidate(key)
@@ -310,7 +744,9 @@ class RemoteDeltaStore(DeltaStore):
         accounting untouched instead of silently 'succeeding'."""
         with self._wlock:
             self._seq += 1
-            body = wire.pack_key(key) + struct.pack("<Q", self._seq)
+            body = (wire.pack_key(key) + struct.pack("<Q", self._seq)
+                    + struct.pack("<Q",
+                                  self._ack_watermark_locked(True)))
             replies = self._fan_out(key, self._seq, wire.MSG_DELETE, body)
             existed = any(bool(rep[0]) for rep in replies)
         if self.pool is not None:
@@ -322,15 +758,259 @@ class RemoteDeltaStore(DeltaStore):
                 self.stats.bytes_deleted += sizes[1] * self.r
         return existed or sizes is not None
 
+    # ---- multiget: replica-parallel fan-out over streamed chunks ----
+    def _mg_body(self, keys: List[DeltaKey],
+                 flist: Optional[List[str]]) -> bytes:
+        req = [struct.pack("<I", len(keys))]
+        req += [wire.pack_key(k) for k in keys]
+        req.append(wire.pack_fields(flist))
+        req.append(struct.pack("<B", 1))  # found-subset reply; the
+        # client decides missing vs try-next-replica
+        return b"".join(req)
+
+    def _absorb_hit(self, k: DeltaKey, blob: bytes,
+                    flist: Optional[List[str]],
+                    sizes: Optional[Dict[DeltaKey, ReadSizes]],
+                    tier: int) -> Optional[Dict]:
+        """Decode one multiget hit and run the full read-side
+        bookkeeping (pool fill, stats, sizes); None on a corrupt blob
+        (counted as a failover — the key retries on the next tier)."""
+        try:
+            arrays, enc_read, raw_read = serialize.loads_sized(
+                blob, fields=flist)
+        except BlockCorruption:
+            with self._lock:
+                self.stats.failovers += 1
+            return None
+        self._pool_dir_fill(k, blob)
+        with self._lock:
+            self.stats.reads += 1
+            self.stats.bytes_read += enc_read
+            self.stats.bytes_decompressed += raw_read
+            if self.pool is not None:
+                self.stats.pool_misses += len(arrays)
+            if tier > 0:
+                self.stats.failovers += 1
+        if self.pool is not None:
+            for name, a in arrays.items():
+                self.pool.put(k, name, a)
+        if sizes is not None:
+            sizes[k] = ReadSizes(enc_read, raw_read, 0, 0)
+        return arrays
+
+    def _mg_drain(self, node: int, fut: _MuxFuture, deadline: float,
+                  on_blob: Callable[[DeltaKey, bytes], None]) -> int:
+        """Consume one MULTIGET reply stream from a mux future, invoking
+        ``on_blob`` per CHUNK as it arrives (decode overlaps the
+        server's reads of later keys).  Returns the server's found
+        count; transport failure or deadline -> ``NodeUnavailable``."""
+        mux = self._muxes[node]
+        while True:
+            try:
+                evs = fut.next_batch(deadline)
+            except _Deadline:
+                mux.cancel(fut)
+                raise NodeUnavailable(
+                    f"cell {node}: multiget deadline expired") from None
+            for ev in evs:
+                if ev[0] == "chunk":
+                    k, off = wire.unpack_key(ev[1], 0)
+                    blob, _ = wire.unpack_blob(ev[1], off)
+                    on_blob(k, blob)
+                    continue
+                if ev[0] == "err":
+                    raise NodeUnavailable(
+                        f"cell {node}: {ev[1]}") from ev[1]
+                mtype, body = ev[1], ev[2]
+                if mtype == wire.MSG_END:
+                    (found,) = struct.unpack_from("<I", body, 0)
+                    return found
+                self._map_reply(mtype, body)  # raises on ERR
+                raise wire.FrameError(
+                    f"unexpected terminal frame {mtype}")
+
+    def multiget(self, keys: Iterable[DeltaKey], c: int = 1,
+                 fields: Optional[Iterable[str]] = None,
+                 missing_ok: bool = False,
+                 sizes: Optional[Dict[DeltaKey, ReadSizes]] = None,
+                 ) -> Dict[DeltaKey, Dict]:
+        """Replica-parallel pipelined multiget: every primary-node group
+        is submitted to its node's mux *concurrently* (one streamed
+        MULTIGET each — ``c`` is moot, parallelism is free on the
+        muxes), then the streams are drained with decode/pool-fill per
+        arriving chunk.  Keys a tier leaves unserved advance together to
+        the next replica tier — hedged groups (primary known-dead) ride
+        the same mechanism starting at tier 0.  With ``pipeline=False``
+        falls back to the serial per-group path."""
+        if not self._pipeline:
+            return super().multiget(keys, c=c, fields=fields,
+                                    missing_ok=missing_ok, sizes=sizes)
+        keys = list(keys)
+        flist = None if fields is None else list(fields)
+        out: Dict[DeltaKey, Dict] = {}
+        groups: Dict[int, List[DeltaKey]] = {}
+        for k in keys:
+            if self.pool is not None and self.pool.dir_get(k) is not None:
+                try:
+                    out[k] = self.get(k, fields=fields, sizes=sizes)
+                except KeyMissing:
+                    if not missing_ok:
+                        raise
+            else:
+                groups.setdefault(self.replicas(k)[0], []).append(k)
+        states = []
+        for primary, batch in groups.items():
+            if not self._node_ok(primary):
+                with self._lock:
+                    self.stats.hedged_reads += len(batch)
+            states.append({"chain": self.replicas(batch[0]),
+                           "pending": batch, "reachable": False})
+        for tier in range(self.r):
+            live = []
+            for st in states:
+                pending = st["pending"]
+                if not pending:
+                    continue
+                node = st["chain"][tier]
+                if not self._node_ok(node):
+                    if tier > 0 or self.r == 1:
+                        with self._lock:
+                            self.stats.failovers += len(pending)
+                    continue
+                deadline = time.monotonic() + self.timeout
+                try:
+                    fut = self._muxes[node].submit(
+                        wire.MSG_MULTIGET, self._mg_body(pending, flist),
+                        deadline)
+                except (_Deadline, NodeUnavailable):
+                    self._mark_unavailable(node)
+                    with self._lock:
+                        self.stats.failovers += len(pending)
+                    continue
+                live.append((st, node, fut, deadline))
+            for st, node, fut, deadline in live:
+                pending = st["pending"]
+                done: Dict[DeltaKey, Dict] = {}
+
+                def absorb(k, blob, done=done, tier=tier):
+                    if k in done:
+                        return
+                    arrays = self._absorb_hit(k, blob, flist, sizes, tier)
+                    if arrays is not None:
+                        done[k] = arrays
+
+                ok = False
+                for attempt in range(self.retries + 1):
+                    try:
+                        self._mg_drain(node, fut, deadline, absorb)
+                        ok = True
+                        break
+                    except NodeUnavailable:
+                        # transport blip mid-stream: re-issue the
+                        # remaining keys on the same tier within the
+                        # original enqueue deadline (MULTIGET is
+                        # idempotent; already-absorbed keys are skipped)
+                        if (attempt == self.retries
+                                or time.monotonic() >= deadline):
+                            break
+                        rest = [k for k in pending if k not in done]
+                        if not rest:
+                            ok = True
+                            break
+                        try:
+                            fut = self._muxes[node].submit(
+                                wire.MSG_MULTIGET,
+                                self._mg_body(rest, flist), deadline)
+                        except (_Deadline, NodeUnavailable):
+                            break
+                    except (KeyMissing, wire.RemoteError,
+                            wire.WireError):
+                        break  # cell alive, batch refused: next tier
+                if not ok:
+                    self._mark_unavailable(node)
+                    with self._lock:
+                        self.stats.failovers += len(pending) - len(done)
+                else:
+                    st["reachable"] = True
+                out.update(done)
+                st["pending"] = [k for k in pending if k not in done]
+            if all(not st["pending"] for st in states):
+                break
+        for st in states:
+            if st["pending"]:
+                if not st["reachable"]:
+                    raise StorageNodeDown(
+                        f"no live replica cell for {st['pending'][0]}")
+                if not missing_ok:
+                    raise KeyMissing(st["pending"][0])
+        return out
+
+    def _mg_round_serial(self, node: int, pending: List[DeltaKey],
+                         flist: Optional[List[str]],
+                         ) -> Dict[DeltaKey, bytes]:
+        """Serial-mode MULTIGET: one checked-out connection, blocking
+        CHUNK/END stream read.  Returns key -> blob for the found
+        subset; transport failure -> ``NodeUnavailable``."""
+        deadline = time.monotonic() + self.timeout
+        body = self._mg_body(pending, flist)
+        delay = self.backoff
+        last: Exception = NodeUnavailable(f"cell {node}")
+        for _ in range(self.retries + 1):
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                break
+            sock = None
+            try:
+                sock = self._checkout(node)
+                sock.settimeout(max(0.05, remaining))
+                req_id = self._next_req_id()
+                wire.send_frame(sock, wire.MSG_MULTIGET, req_id, body)
+                got: Dict[DeltaKey, bytes] = {}
+                while True:
+                    reply = wire.recv_frame(sock)
+                    if reply.req_id != req_id:
+                        raise wire.FrameError("reply req_id mismatch")
+                    if reply.msg_type == wire.MSG_CHUNK:
+                        k, off = wire.unpack_key(reply.body, 0)
+                        blob, _ = wire.unpack_blob(reply.body, off)
+                        got[k] = blob
+                        continue
+                    with self._lock:
+                        self.stats.rt_serial += 1
+                    self._checkin(node, sock)
+                    if reply.msg_type == wire.MSG_END:
+                        return got
+                    self._map_reply(reply.msg_type, reply.body)
+                    raise wire.FrameError(
+                        f"unexpected terminal frame {reply.msg_type}")
+            except (wire.ProtocolMismatch, wire.RemoteError, KeyMissing):
+                raise
+            except (OSError, wire.WireError) as e:
+                if sock is not None:
+                    try:
+                        sock.close()
+                    except OSError:
+                        pass
+                last = e
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    break
+                time.sleep(min(delay, remaining))
+                delay = min(delay * 2, 1.0)
+        raise NodeUnavailable(
+            f"cell {node} @ {self.addrs[node]}: {last}") from last
+
     def _group_fetch(self, primary: int, gkeys: List[DeltaKey],
                      fields: Optional[Iterable[str]], missing_ok: bool,
                      sizes: Optional[Dict[DeltaKey, ReadSizes]],
                      ) -> Dict[DeltaKey, Dict]:
-        """One MULTIGET frame per replica tier for a whole primary-node
-        group.  Keys with pooled state go through the inherited per-key
-        ``get`` (it merges pool hits with a partial fetch); cold keys
-        ride the batch.  An unavailable tier redirects the *remaining
-        batch* to the next replica in one frame — the hedged path."""
+        """Serial-mode group fetch (``pipeline=False``, reached via the
+        inherited ``multiget``): one MULTIGET frame per replica tier for
+        a whole primary-node group.  Keys with pooled state go through
+        the inherited per-key ``get`` (it merges pool hits with a
+        partial fetch); cold keys ride the batch.  An unavailable tier
+        redirects the *remaining batch* to the next replica in one
+        frame — the hedged path."""
         out: Dict[DeltaKey, Dict] = {}
         batch: List[DeltaKey] = []
         for k in gkeys:
@@ -358,54 +1038,24 @@ class RemoteDeltaStore(DeltaStore):
                     with self._lock:
                         self.stats.failovers += len(pending)
                 continue
-            req = [struct.pack("<I", len(pending))]
-            req += [wire.pack_key(k) for k in pending]
-            req.append(wire.pack_fields(flist))
-            req.append(struct.pack("<B", 1))  # found-subset reply; the
-            # client decides missing vs try-next-replica
             try:
-                reply = self._request(node, wire.MSG_MULTIGET, b"".join(req))
+                got = self._mg_round_serial(node, pending, flist)
             except NodeUnavailable:
                 self._mark_unavailable(node)
                 with self._lock:
                     self.stats.failovers += len(pending)
                 continue
             reachable = True
-            (n,) = struct.unpack_from("<I", reply, 0)
-            off = 4
-            got: Dict[DeltaKey, bytes] = {}
-            for _ in range(n):
-                k, off = wire.unpack_key(reply, off)
-                blob, off = wire.unpack_blob(reply, off)
-                got[k] = blob
             still: List[DeltaKey] = []
             for k in pending:
                 blob = got.get(k)
                 if blob is None:
                     still.append(k)  # not on this tier: try the next
                     continue
-                try:
-                    arrays, enc_read, raw_read = serialize.loads_sized(
-                        blob, fields=flist)
-                except BlockCorruption:
-                    with self._lock:
-                        self.stats.failovers += 1
+                arrays = self._absorb_hit(k, blob, flist, sizes, j)
+                if arrays is None:
                     still.append(k)
                     continue
-                self._pool_dir_fill(k, blob)
-                with self._lock:
-                    self.stats.reads += 1
-                    self.stats.bytes_read += enc_read
-                    self.stats.bytes_decompressed += raw_read
-                    if self.pool is not None:
-                        self.stats.pool_misses += len(arrays)
-                    if j > 0:
-                        self.stats.failovers += 1
-                if self.pool is not None:
-                    for name, a in arrays.items():
-                        self.pool.put(k, name, a)
-                if sizes is not None:
-                    sizes[k] = ReadSizes(enc_read, raw_read, 0, 0)
                 out[k] = arrays
             pending = still
         if pending:
@@ -450,6 +1100,43 @@ class RemoteDeltaStore(DeltaStore):
                 self._mark_unavailable(i)
         return super().node_status()
 
+    def feed_status(self) -> List[Optional[Dict]]:
+        """Per-cell feed state (length/floor/bytes/ack_water/
+        truncations), ``None`` for unreachable cells — how benches and
+        ``storage_report`` observe ack-watermark feed truncation."""
+        out: List[Optional[Dict]] = []
+        for i in range(self.m):
+            try:
+                out.append(self.cell_status(i).get("feed"))
+            except (NodeUnavailable, wire.WireError, ValueError):
+                out.append(None)
+        return out
+
+    def transport_stats(self) -> Dict:
+        """Live mux state + transport counters: per-node in-flight
+        depth (and its high-water mark), connectedness, and the
+        pipelined/serial/cancel/reconnect round-trip counters."""
+        nodes = []
+        for j, mux in enumerate(self._muxes):
+            with mux.lock:
+                nodes.append({"node": j,
+                              "connected": mux.sock is not None,
+                              "in_flight": len(mux.waiters),
+                              "inflight_hwm": mux.inflight_hwm})
+        with self._lock:
+            s = self.stats
+            counters = {"rt_pipelined": s.rt_pipelined,
+                        "rt_serial": s.rt_serial,
+                        "rt_deadline_cancels": s.rt_deadline_cancels,
+                        "rt_reconnects": s.rt_reconnects,
+                        "hedged_reads": s.hedged_reads,
+                        "failovers": s.failovers}
+        return {"pipeline": self._pipeline, "window": self.window,
+                "in_flight": sum(n["in_flight"] for n in nodes),
+                "inflight_hwm": max((n["inflight_hwm"] for n in nodes),
+                                    default=0),
+                **counters, "nodes": nodes}
+
     def cell_status(self, node: int) -> Dict:
         """Server-side view of one cell (its own stats/feed/last_seq) —
         the bench asserts server-measured ``bytes_io`` through this."""
@@ -472,4 +1159,6 @@ class RemoteDeltaStore(DeltaStore):
         write-accounting mirror."""
         snap = super().report_snapshot()
         snap["node_status"] = self.node_status()
+        snap["transport"] = self.transport_stats()
+        snap["feeds"] = self.feed_status()
         return snap

@@ -45,6 +45,12 @@ class ClusterSpec:
     # 5:kill"}}); merged over the inherited environment at spawn AND
     # respawn, so a restarted cell comes back with the same overrides
     cell_env: Optional[Dict[int, Dict[str, str]]] = None
+    # cell serving knobs (see StorageCell): request-executor pool size,
+    # per-connection in-flight cap, and the feed-records threshold that
+    # arms ack-watermark truncation
+    workers: int = 4
+    inflight_cap: int = 32
+    feed_keep: int = 256
 
     def cell_root(self, node: int) -> Optional[str]:
         if self.backend == "mem":
@@ -99,6 +105,17 @@ class LocalCluster:
                  if i != node and self._alive(i)]
         self._spawn(node, peers=peers, port=self.ports[node])
 
+    def wipe(self, node: int) -> None:
+        """Erase a (downed) cell's on-disk state — feed, checkpoint,
+        chunks — simulating a disk loss.  On restart the fresh cell
+        must bootstrap via full-state transfer from its peers."""
+        assert not self._alive(node), "wipe requires the cell to be down"
+        root = self.spec.cell_root(node)
+        if root is None:
+            return
+        import shutil
+        shutil.rmtree(root, ignore_errors=True)
+
     def _alive(self, node: int) -> bool:
         if self.mode == "thread":
             return self._cells[node] is not None
@@ -131,7 +148,10 @@ class LocalCluster:
             cell = StorageCell(node_id=node, n_cells=spec.n_cells, r=spec.r,
                                backend=spec.backend,
                                root=spec.cell_root(node), fmt=spec.fmt,
-                               host=spec.host, port=port)
+                               host=spec.host, port=port,
+                               workers=spec.workers,
+                               inflight_cap=spec.inflight_cap,
+                               feed_keep=spec.feed_keep)
             self.ports[node] = cell.start(peers=peers)
             self._cells[node] = cell
             return
@@ -146,7 +166,10 @@ class LocalCluster:
         cmd = [sys.executable, "-m", "repro.service.cell",
                "--node-id", str(node), "--n-cells", str(spec.n_cells),
                "--replication", str(spec.r), "--backend", spec.backend,
-               "--host", spec.host, "--port", str(port)]
+               "--host", spec.host, "--port", str(port),
+               "--workers", str(spec.workers),
+               "--inflight-cap", str(spec.inflight_cap),
+               "--feed-keep", str(spec.feed_keep)]
         if spec.backend == "file":
             cmd += ["--root", spec.cell_root(node)]
         if spec.fmt:

@@ -27,6 +27,33 @@ raise *typed* errors (``FrameError`` / ``FrameTooLarge`` /
 ``FrameCorrupt`` / ``ProtocolMismatch``) — never a hang, never a
 silent mis-parse.  ``decode_frame`` is a pure bytes->Frame function so
 the codec is fuzzable without sockets.
+
+Protocol v2 (pipelining + feed compaction):
+
+* **Streaming replies.** A MULTIGET no longer answers with one giant
+  OK frame: the server sends one ``MSG_CHUNK`` frame per found key
+  (body: ``pack_key + pack_blob``) followed by one ``MSG_END`` frame
+  (body: ``<I found_count>``), all under the request's ``req_id``.
+  The client starts decoding (and filling its BlockPool) from the
+  first CHUNK while the server is still reading later keys, and a
+  multiplexed connection can interleave CHUNK streams of concurrent
+  requests — the demux key is ``req_id``, not arrival order.
+* **Ack piggyback.** The writer client appends a trailing ``<Q
+  ack_watermark>`` to PUT / DELETE / PING bodies: the highest seq S
+  such that, as far as this client can prove, EVERY cell has applied
+  every record it owns with seq <= S (min over nodes of observed
+  ``last_seq``, clamped below any queued redelivery).  Cells use the
+  watermark to truncate ``feed.log`` (see ``cell.py``); the field is
+  optional — an empty PING body or a v1-shaped write body means "no
+  ack claim".
+* **Feed floor + full-state transfer.** FEED_SINCE replies are
+  prefixed with ``<Q feed_floor>`` (the highest truncated seq; records
+  at or below it are no longer in the feed).  A peer that needs
+  records below the floor bootstraps via ``MSG_PLACEMENTS`` (list the
+  cell's chunk placements) + ``MSG_STATE_PULL`` (verbatim chunk +
+  extent file bytes for one placement, plus per-key accounting) —
+  chunk files are append-ordered pure functions of the record set, so
+  copying them preserves the byte-identical-convergence property.
 """
 from __future__ import annotations
 
@@ -37,14 +64,15 @@ from typing import List, NamedTuple, Optional, Tuple
 
 from repro.storage.kvstore import DeltaKey
 
-PROTO_VERSION = 1
+PROTO_VERSION = 2
 FRAME_MAGIC = b"TW"
 HEADER = struct.Struct("<2sBBIII")  # magic, version, type, req_id, len, crc
 MAX_FRAME = 1 << 28  # 256 MiB: far above any block, far below a bomb
 
 (MSG_HELLO, MSG_OK, MSG_ERR, MSG_PING, MSG_GET, MSG_MULTIGET, MSG_PUT,
  MSG_DELETE, MSG_FEED_SINCE, MSG_STATUS, MSG_KEYS,
- MSG_MAINT) = range(1, 13)
+ MSG_MAINT, MSG_CHUNK, MSG_END, MSG_PLACEMENTS,
+ MSG_STATE_PULL) = range(1, 17)
 
 # ERR body codes (pack_str'd): the client maps these back to the local
 # store's exception types so failure semantics match the local backend
@@ -52,10 +80,21 @@ ERR_KEY_MISSING = "KEY_MISSING"
 ERR_BAD_REQUEST = "BAD_REQUEST"
 ERR_INTERNAL = "INTERNAL"
 ERR_VERSION = "VERSION"
+# requested feed history predates the truncation floor and the cell
+# cannot serve a full-state transfer (mem backend): caller must either
+# bootstrap from a file-backed replica or accept the typed failure
+ERR_FEED_TRUNCATED = "FEED_TRUNCATED"
 
 # change-feed record ops
 OP_PUT = 0
 OP_DELETE = 1
+
+# MAINT body flags (an empty MAINT body means "vacuum only" — the v1
+# shape).  TRUNCATE forces a synchronous feed truncation up to the
+# cell's ack watermark regardless of backlog size, so benches/tests can
+# reach a deterministic final feed state before comparing files.
+MAINT_VACUUM = 1
+MAINT_TRUNCATE = 2
 
 
 class WireError(RuntimeError):
@@ -167,6 +206,73 @@ def recv_frame(sock: socket.socket) -> Frame:
     if zlib.crc32(body) & 0xFFFFFFFF != body_crc:
         raise FrameCorrupt("frame body crc32 mismatch")
     return Frame(version, msg_type, req_id, body)
+
+
+class FrameReader:
+    """Buffered frame reader for pipelined streams: one ``recv`` syscall
+    can carry many frames (a multiget's CHUNK train, a burst of small
+    requests), so the per-frame syscall pair of ``recv_frame`` collapses
+    to ~one per buffer fill.  Same validation, same typed errors, same
+    frames — only the socket read granularity changes.  Not for sharing
+    between threads (buffered bytes belong to one reader)."""
+
+    __slots__ = ("sock", "bufsize", "_buf")
+
+    def __init__(self, sock: socket.socket, bufsize: int = 1 << 18):
+        self.sock = sock
+        self.bufsize = bufsize
+        self._buf = bytearray()
+
+    def _parse_one(self) -> Optional[Frame]:
+        buf = self._buf
+        if len(buf) < HEADER.size:
+            return None
+        magic, version, msg_type, req_id, body_len, body_crc = \
+            HEADER.unpack_from(buf)
+        if magic != FRAME_MAGIC:
+            raise FrameError(f"bad frame magic {magic!r}")
+        if body_len > MAX_FRAME:
+            raise FrameTooLarge(
+                f"declared body of {body_len} bytes exceeds MAX_FRAME")
+        end = HEADER.size + body_len
+        if len(buf) < end:
+            return None
+        body = bytes(buf[HEADER.size:end])
+        if zlib.crc32(body) & 0xFFFFFFFF != body_crc:
+            raise FrameCorrupt("frame body crc32 mismatch")
+        del buf[:end]
+        return Frame(version, msg_type, req_id, body)
+
+    def _fill(self) -> None:
+        chunk = self.sock.recv(self.bufsize)
+        if not chunk:
+            if self._buf:
+                raise FrameError(
+                    f"connection closed mid-frame ({len(self._buf)} "
+                    f"buffered bytes)")
+            raise ConnectionClosed("peer closed the connection")
+        self._buf += chunk
+
+    def next_frame(self) -> Frame:
+        """Blocking read of the next frame (drop-in for ``recv_frame``)."""
+        while True:
+            frame = self._parse_one()
+            if frame is not None:
+                return frame
+            self._fill()
+
+    def read_frames(self) -> List[Frame]:
+        """Block until at least one frame is available, then return every
+        complete frame currently buffered — the demux loop's batch unit."""
+        out: List[Frame] = []
+        while True:
+            frame = self._parse_one()
+            if frame is None:
+                if out:
+                    return out
+                self._fill()
+            else:
+                out.append(frame)
 
 
 # ---------------------------------------------------------------------------
@@ -288,3 +394,79 @@ def unpack_err(buf: bytes) -> Tuple[str, str]:
     code, off = unpack_str(buf, 0)
     message, _ = unpack_str(buf, off)
     return code, message
+
+
+# ---------------------------------------------------------------------------
+# full-state transfer (bootstrap past a truncated feed)
+# ---------------------------------------------------------------------------
+
+
+class PlacementState(NamedTuple):
+    """STATE_PULL reply for one ``(tsid, sid)`` placement: the replica's
+    chunk + extent file bytes *verbatim* (chunk files are append-ordered
+    pure functions of the applied record set, so copying them preserves
+    byte-identical convergence), plus the per-key accounting a restored
+    cell needs: live ``(key, raw, enc)`` sizes and the per-key max-seq
+    watermark (including deleted keys, whose watermark guards replays)."""
+
+    floor: int  # serving cell's feed floor at pull time
+    chunk: bytes
+    ext: bytes
+    sizes: List[Tuple[DeltaKey, int, int]]
+    key_seqs: List[Tuple[DeltaKey, int]]
+
+    def pack(self) -> bytes:
+        out = [struct.pack("<Q", self.floor), pack_blob(self.chunk),
+               pack_blob(self.ext), struct.pack("<I", len(self.sizes))]
+        for key, raw, enc in self.sizes:
+            out.append(pack_key(key) + struct.pack("<QQ", raw, enc))
+        out.append(struct.pack("<I", len(self.key_seqs)))
+        for key, seq in self.key_seqs:
+            out.append(pack_key(key) + struct.pack("<Q", seq))
+        return b"".join(out)
+
+    @staticmethod
+    def unpack(buf: bytes) -> "PlacementState":
+        _need(buf, 0, 8, "state floor")
+        (floor,) = struct.unpack_from("<Q", buf, 0)
+        chunk, off = unpack_blob(buf, 8)
+        ext, off = unpack_blob(buf, off)
+        _need(buf, off, 4, "state size count")
+        (n,) = struct.unpack_from("<I", buf, off)
+        off += 4
+        sizes = []
+        for _ in range(n):
+            key, off = unpack_key(buf, off)
+            _need(buf, off, 16, "state key sizes")
+            raw, enc = struct.unpack_from("<QQ", buf, off)
+            off += 16
+            sizes.append((key, raw, enc))
+        _need(buf, off, 4, "state seq count")
+        (n,) = struct.unpack_from("<I", buf, off)
+        off += 4
+        key_seqs = []
+        for _ in range(n):
+            key, off = unpack_key(buf, off)
+            _need(buf, off, 8, "state key seq")
+            (seq,) = struct.unpack_from("<Q", buf, off)
+            off += 8
+            key_seqs.append((key, seq))
+        return PlacementState(floor, chunk, ext, sizes, key_seqs)
+
+
+def pack_placements(placements: List[Tuple[int, int]]) -> bytes:
+    return (struct.pack("<I", len(placements))
+            + b"".join(struct.pack("<qq", t, s) for t, s in placements))
+
+
+def unpack_placements(buf: bytes) -> List[Tuple[int, int]]:
+    _need(buf, 0, 4, "placement count")
+    (n,) = struct.unpack_from("<I", buf, 0)
+    off = 4
+    out = []
+    for _ in range(n):
+        _need(buf, off, 16, "placement entry")
+        t, s = struct.unpack_from("<qq", buf, off)
+        off += 16
+        out.append((t, s))
+    return out

@@ -118,6 +118,19 @@ class StoreStats:
     pool_misses: int = 0  # columns physically read + decoded (pool on)
     bytes_pool_served: int = 0  # raw bytes served from the pool
     bytes_io: int = 0  # physical file-backend bytes read (0 for mem)
+    # wire-transport round trips (remote store only): a request submitted
+    # while its node's connection already had >= 1 reply outstanding rode
+    # the pipeline; one submitted to an idle connection paid a serial
+    # round trip.  Deadline cancels expired client-side without poisoning
+    # the connection; reconnects are transparent re-dials of a mux socket
+    rt_pipelined: int = 0
+    rt_serial: int = 0
+    rt_deadline_cancels: int = 0
+    rt_reconnects: int = 0
+    # encoded serve cache (file backend): projected blocks assembled once
+    # and re-served byte-identical while their extent record is unmoved
+    serve_hits: int = 0
+    serve_misses: int = 0
 
     def reset(self):
         self.reads = self.writes = self.n_deletes = 0
@@ -127,6 +140,9 @@ class StoreStats:
         self.failovers = self.hedged_reads = self.redelivered = 0
         self.pool_hits = self.pool_misses = self.bytes_pool_served = 0
         self.bytes_io = 0
+        self.rt_pipelined = self.rt_serial = 0
+        self.rt_deadline_cancels = self.rt_reconnects = 0
+        self.serve_hits = self.serve_misses = 0
 
 
 class ReadSizes(NamedTuple):
@@ -311,7 +327,8 @@ class DeltaStore:
 
     def __init__(self, m: int = 4, r: int = 1, backend: str = "mem",
                  root: Optional[str] = None, fmt: Optional[str] = None,
-                 pool_bytes: int = DEFAULT_POOL_BYTES, seek: bool = True):
+                 pool_bytes: int = DEFAULT_POOL_BYTES, seek: bool = True,
+                 serve_cache_bytes: int = 8 << 20):
         assert 1 <= r <= m
         self.m, self.r = m, r
         self.backend = backend
@@ -341,6 +358,23 @@ class DeltaStore:
         # loaded from the .tgx sidecars (or one legacy chunk scan)
         self._ext_cache: Dict[Tuple[int, Tuple[int, int]],
                               Dict[bytes, Tuple[int, int]]] = {}
+        # file backend: cached read handles per chunk, shared between
+        # reader threads via positioned reads (os.pread — no seek state).
+        # Invalidation pops the handle WITHOUT closing it: in-flight
+        # readers keep their reference alive (refcounting closes the old
+        # inode once the last one returns), so an fd number can never be
+        # recycled under a concurrent pread.
+        self._fh_lock = threading.Lock()
+        self._fh_cache: Dict[Tuple[int, Tuple[int, int]], object] = {}
+        # encoded serve cache: assembled projected blocks keyed by
+        # (node, placement, record, projection), validated against the
+        # CURRENT extent record and vacuum generation on every hit —
+        # appends move a rewritten key's extent (miss), vacuum bumps the
+        # generation (wholesale miss) — so a stale blob is unservable
+        self._serve_lock = threading.Lock()
+        self._serve_cache: "collections.OrderedDict" = collections.OrderedDict()
+        self._serve_bytes = 0
+        self.serve_cache_bytes = int(serve_cache_bytes)
         if backend == "mem":
             self._mem: List[Dict] = [dict() for _ in range(m)]
         else:
@@ -352,6 +386,12 @@ class DeltaStore:
     # ---- placement ----
     def replicas(self, key: DeltaKey) -> List[int]:
         return replica_nodes(key.tsid, key.sid, self.m, self.r)
+
+    def transport_stats(self) -> Dict:
+        """Wire-transport view (in-flight depth, pipelined vs serial
+        round trips).  Local backends have no transport: empty dict.
+        ``RemoteDeltaStore`` overrides with live per-node mux state."""
+        return {}
 
     # ---- failure injection / node health ----
     def fail_node(self, i: int):
@@ -474,6 +514,84 @@ class DeltaStore:
                     off += blen
             self._ext_cache[ck] = cache
             return cache
+
+    def _chunk_file(self, node: int, placement):
+        """Cached read handle of one chunk file (unbuffered, read via
+        ``os.pread`` so concurrent readers never race a shared file
+        position).  Raises ``FileNotFoundError`` when the chunk does not
+        exist — callers translate to ``KeyMissing``."""
+        ck = (node, placement)
+        with self._fh_lock:
+            f = self._fh_cache.get(ck)
+        if f is not None:
+            return f
+        f = open(self._chunk_path(node, placement), "rb", buffering=0)
+        with self._fh_lock:
+            cur = self._fh_cache.setdefault(ck, f)
+        if cur is not f:
+            f.close()
+        return cur
+
+    @staticmethod
+    def _pread_exact(fd: int, n: int, off: int) -> bytes:
+        """Positioned read of exactly ``n`` bytes (short reads looped;
+        a true EOF returns what exists, like ``file.read``)."""
+        out = os.pread(fd, n, off)
+        if len(out) == n or not out:
+            return out
+        parts = [out]
+        got = len(out)
+        while got < n:
+            chunk = os.pread(fd, n - got, off + got)
+            if not chunk:
+                break
+            parts.append(chunk)
+            got += len(chunk)
+        return b"".join(parts)
+
+    def drop_chunk_caches(self, node: int, placement) -> None:
+        """Invalidate every read-side cache over one chunk after its
+        file was replaced wholesale (state transfer installs, external
+        rewrites): extent table, read handle, and — via the generation
+        bump — every encoded serve-cache entry sourced from it."""
+        with self._lock:
+            self._ext_cache.pop((node, placement), None)
+            self._vacuum_gen += 1
+        with self._fh_lock:
+            self._fh_cache.pop((node, placement), None)
+
+    def _serve_cache_get(self, node: int, placement, rec_key: bytes,
+                         wkey, rec: Tuple[int, int]) -> Optional[bytes]:
+        """Serve-cache hit iff the entry was assembled from the record
+        the extent table points at RIGHT NOW (same offset/length, same
+        vacuum generation) — anything else misses and re-reads."""
+        k = (node, placement, rec_key, wkey)
+        with self._serve_lock:
+            ent = self._serve_cache.get(k)
+            if ent is None:
+                return None
+            gen, erec, blob = ent
+            if gen != self._vacuum_gen or erec != rec:
+                del self._serve_cache[k]
+                self._serve_bytes -= len(blob)
+                return None
+            self._serve_cache.move_to_end(k)
+            return blob
+
+    def _serve_cache_put(self, node: int, placement, rec_key: bytes,
+                         wkey, rec: Tuple[int, int], blob: bytes) -> None:
+        if len(blob) * 4 > self.serve_cache_bytes:
+            return  # one giant block must not wipe the whole cache
+        k = (node, placement, rec_key, wkey)
+        with self._serve_lock:
+            old = self._serve_cache.pop(k, None)
+            if old is not None:
+                self._serve_bytes -= len(old[2])
+            self._serve_cache[k] = (self._vacuum_gen, rec, blob)
+            self._serve_bytes += len(blob)
+            while self._serve_bytes > self.serve_cache_bytes:
+                _, (_, _, evicted) = self._serve_cache.popitem(last=False)
+                self._serve_bytes -= len(evicted)
 
     def encode_payload(self, key: DeltaKey,
                        arrays: Dict[str, np.ndarray]) -> Tuple[bytes, int]:
@@ -729,56 +847,59 @@ class DeltaStore:
         """Range-seek read: extent lookup -> directory prefix pread ->
         one pread per requested column.  Unrequested columns cost zero
         file bytes (``stats.bytes_io`` counts exactly what was read)."""
-        path = self._chunk_path(node, key.placement)
         ext = self._extents(node, key.placement)
         rec = ext.get(f"{key.did}|{key.pid}".encode())
         if rec is None:
             raise KeyMissing(key)
         off, blen = rec
         io_bytes = 0
-        with open(path, "rb") as f:
-            f.seek(off)
-            prefix = f.read(min(blen, self._DIR_PREFIX))
-            io_bytes += len(prefix)
-            if bytes(prefix[:4]) == serialize.MAGIC:
-                # TGI1 interleaves headers with payloads: no seekable
-                # directory — fall back to reading this blob in full
-                blob = prefix + f.read(blen - len(prefix))
-                io_bytes += max(blen - len(prefix), 0)
-                arrays, enc_read, raw_read = serialize.loads_sized(
-                    blob, fields=fields)
-                self._pool_dir_fill(key, blob)
-                with self._lock:
-                    self.stats.bytes_io += io_bytes
-                return arrays, enc_read, raw_read
+        try:
+            fd = self._chunk_file(node, key.placement).fileno()
+        except FileNotFoundError:
+            raise KeyMissing(key) from None
+        prefix = self._pread_exact(fd, min(blen, self._DIR_PREFIX), off)
+        io_bytes += len(prefix)
+        if bytes(prefix[:4]) == serialize.MAGIC:
+            # TGI1 interleaves headers with payloads: no seekable
+            # directory — fall back to reading this blob in full
+            blob = prefix + self._pread_exact(
+                fd, blen - len(prefix), off + len(prefix))
+            io_bytes += max(blen - len(prefix), 0)
+            arrays, enc_read, raw_read = serialize.loads_sized(
+                blob, fields=fields)
+            self._pool_dir_fill(key, blob)
+            with self._lock:
+                self.stats.bytes_io += io_bytes
+            return arrays, enc_read, raw_read
+        entries = serialize.parse_directory(prefix)
+        while entries is None and len(prefix) < blen:
+            more = self._pread_exact(
+                fd, min(blen - len(prefix), len(prefix)),
+                off + len(prefix))
+            if not more:
+                break
+            prefix += more
+            io_bytes += len(more)
             entries = serialize.parse_directory(prefix)
-            while entries is None and len(prefix) < blen:
-                more = f.read(min(blen - len(prefix), len(prefix)))
-                if not more:
-                    break
-                prefix += more
-                io_bytes += len(more)
-                entries = serialize.parse_directory(prefix)
-            if entries is None:
-                raise BlockCorruption(f"truncated TGI2 directory for {key}")
-            if self.pool is not None and self.pool.dir_get(key) is None:
-                self.pool.dir_put(key, entries, ver=self._dir_ver(key))
-            want = None if fields is None else set(fields)
-            arrays: Dict[str, np.ndarray] = {}
-            enc_read, raw_read = 8, 0
-            view = memoryview(prefix)
-            for e in entries:
-                if want is not None and e.name not in want:
-                    continue
-                if e.off + e.length <= len(prefix):
-                    payload = view[e.off : e.off + e.length]
-                else:
-                    f.seek(off + e.off)
-                    payload = f.read(e.length)
-                    io_bytes += e.length
-                arrays[e.name] = serialize.decode_entry(e, payload)
-                enc_read += e.length
-                raw_read += arrays[e.name].nbytes
+        if entries is None:
+            raise BlockCorruption(f"truncated TGI2 directory for {key}")
+        if self.pool is not None and self.pool.dir_get(key) is None:
+            self.pool.dir_put(key, entries, ver=self._dir_ver(key))
+        want = None if fields is None else set(fields)
+        arrays: Dict[str, np.ndarray] = {}
+        enc_read, raw_read = 8, 0
+        view = memoryview(prefix)
+        for e in entries:
+            if want is not None and e.name not in want:
+                continue
+            if e.off + e.length <= len(prefix):
+                payload = view[e.off : e.off + e.length]
+            else:
+                payload = self._pread_exact(fd, e.length, off + e.off)
+                io_bytes += e.length
+            arrays[e.name] = serialize.decode_entry(e, payload)
+            enc_read += e.length
+            raw_read += arrays[e.name].nbytes
         with self._lock:
             self.stats.bytes_io += io_bytes
         return arrays, enc_read, raw_read
@@ -975,14 +1096,36 @@ class DeltaStore:
         wire GET — the cell never decompresses, per-column crc32s ride
         along unchanged (the client verifies on decode), and on the
         range-seek file backend only the projected columns' byte ranges
-        are read off disk (``stats.bytes_io`` measures exactly that)."""
+        are read off disk (``stats.bytes_io`` measures exactly that).
+        Assembled blocks land in the encoded serve cache, so a cell
+        re-serving a hot key skips file io AND re-assembly — the cached
+        bytes are only ever served while the key's extent record (and
+        the vacuum generation) are exactly what they were at assembly
+        time, so a rewrite or compaction can never serve stale bytes."""
         want = None if fields is None else set(fields)
+        wkey = None if want is None else frozenset(want)
+        seekable = self.backend == "file" and self.seek
+        rec_key = f"{key.did}|{key.pid}".encode() if seekable else b""
         last_err: Exception = KeyMissing(key)
         for j, node in enumerate(self.replicas(key)):
             if not self._node_ok(node):
                 with self._lock:
                     self.stats.failovers += j > 0 or self.r == 1
                 continue
+            rec = None
+            if seekable:
+                rec = self._extents(node, key.placement).get(rec_key)
+                if rec is not None:
+                    blob = self._serve_cache_get(
+                        node, key.placement, rec_key, wkey, rec)
+                    if blob is not None:
+                        with self._lock:
+                            self.stats.reads += 1
+                            self.stats.bytes_read += len(blob)
+                            self.stats.serve_hits += 1
+                            if j > 0:
+                                self.stats.failovers += 1
+                        return blob
             try:
                 entries, payloads, enc_read = self._read_encoded(
                     node, key, want)
@@ -997,9 +1140,14 @@ class DeltaStore:
             with self._lock:
                 self.stats.reads += 1
                 self.stats.bytes_read += enc_read
+                self.stats.serve_misses += seekable
                 if j > 0:
                     self.stats.failovers += 1
-            return serialize.assemble_block(entries, payloads)
+            blob = serialize.assemble_block(entries, payloads)
+            if rec is not None:
+                self._serve_cache_put(
+                    node, key.placement, rec_key, wkey, rec, blob)
+            return blob
         if isinstance(last_err, (KeyMissing, BlockCorruption)):
             raise last_err
         raise StorageNodeDown(f"no live replica for {key}")
@@ -1043,52 +1191,56 @@ class DeltaStore:
         """Range-seek twin of ``_read_encoded``: extent lookup ->
         directory prefix pread -> one pread per wanted column.
         Unrequested columns cost zero file bytes."""
-        path = self._chunk_path(node, key.placement)
         ext = self._extents(node, key.placement)
         rec = ext.get(f"{key.did}|{key.pid}".encode())
         if rec is None:
             raise KeyMissing(key)
         off, blen = rec
         io_bytes = 0
-        with open(path, "rb") as f:
-            f.seek(off)
-            prefix = f.read(min(blen, self._DIR_PREFIX))
-            io_bytes += len(prefix)
-            if bytes(prefix[:4]) == serialize.MAGIC:
-                # TGI1: headers interleave with payloads — full read
-                blob = prefix + f.read(blen - len(prefix))
-                io_bytes += max(blen - len(prefix), 0)
-                with self._lock:
-                    self.stats.bytes_io += io_bytes
-                blob_v = memoryview(blob)
-                entries = serialize.walk(blob_v)
-                payloads = {
-                    e.name: bytes(blob_v[e.off : e.off + e.length])
-                    for e in entries if want is None or e.name in want
-                }
-                return entries, payloads, 8 + sum(
-                    len(p) for p in payloads.values())
+        try:
+            fd = self._chunk_file(node, key.placement).fileno()
+        except FileNotFoundError:
+            raise KeyMissing(key) from None
+        prefix = self._pread_exact(fd, min(blen, self._DIR_PREFIX), off)
+        io_bytes += len(prefix)
+        if bytes(prefix[:4]) == serialize.MAGIC:
+            # TGI1: headers interleave with payloads — full read
+            blob = prefix + self._pread_exact(
+                fd, blen - len(prefix), off + len(prefix))
+            io_bytes += max(blen - len(prefix), 0)
+            with self._lock:
+                self.stats.bytes_io += io_bytes
+            blob_v = memoryview(blob)
+            entries = serialize.walk(blob_v)
+            payloads = {
+                e.name: bytes(blob_v[e.off : e.off + e.length])
+                for e in entries if want is None or e.name in want
+            }
+            return entries, payloads, 8 + sum(
+                len(p) for p in payloads.values())
+        entries = serialize.parse_directory(prefix)
+        while entries is None and len(prefix) < blen:
+            more = self._pread_exact(
+                fd, min(blen - len(prefix), len(prefix)),
+                off + len(prefix))
+            if not more:
+                break
+            prefix += more
+            io_bytes += len(more)
             entries = serialize.parse_directory(prefix)
-            while entries is None and len(prefix) < blen:
-                more = f.read(min(blen - len(prefix), len(prefix)))
-                if not more:
-                    break
-                prefix += more
-                io_bytes += len(more)
-                entries = serialize.parse_directory(prefix)
-            if entries is None:
-                raise BlockCorruption(f"truncated TGI2 directory for {key}")
-            view = memoryview(prefix)
-            payloads: Dict[str, bytes] = {}
-            for e in entries:
-                if want is not None and e.name not in want:
-                    continue
-                if e.off + e.length <= len(prefix):
-                    payloads[e.name] = bytes(view[e.off : e.off + e.length])
-                else:
-                    f.seek(off + e.off)
-                    payloads[e.name] = f.read(e.length)
-                    io_bytes += e.length
+        if entries is None:
+            raise BlockCorruption(f"truncated TGI2 directory for {key}")
+        view = memoryview(prefix)
+        payloads: Dict[str, bytes] = {}
+        for e in entries:
+            if want is not None and e.name not in want:
+                continue
+            if e.off + e.length <= len(prefix):
+                payloads[e.name] = bytes(view[e.off : e.off + e.length])
+            else:
+                payloads[e.name] = self._pread_exact(
+                    fd, e.length, off + e.off)
+                io_bytes += e.length
         with self._lock:
             self.stats.bytes_io += io_bytes
         return entries, payloads, 8 + sum(len(p) for p in payloads.values())
@@ -1204,6 +1356,8 @@ class DeltaStore:
                             cpath.unlink(missing_ok=True)
                             epath.unlink(missing_ok=True)
                             self._ext_cache.pop((node, placement), None)
+                            with self._fh_lock:
+                                self._fh_cache.pop((node, placement), None)
                             self._vacuum_gen += 1
                             out["chunks_removed"] += 1
                             continue
@@ -1239,6 +1393,8 @@ class DeltaStore:
                         os.replace(tmp_c, cpath)
                         os.replace(tmp_e, epath)
                         self._ext_cache[(node, placement)] = new_cache
+                        with self._fh_lock:
+                            self._fh_cache.pop((node, placement), None)
                         self._vacuum_gen += 1
                         out["chunks_rewritten"] += 1
                         out["bytes_after"] += len(new_data)

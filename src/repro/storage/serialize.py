@@ -460,9 +460,8 @@ def assemble_block(entries: List["ColumnMeta"],
     dir_len = 8
     for e in entries:
         dir_len += 2 + len(e.name.encode()) + 2 + 8 * len(e.shape) + 21
-    buf = io.BytesIO()
-    buf.write(MAGIC2)
-    buf.write(struct.pack("<I", len(entries) | DIR_HAS_CRC))
+    parts = [MAGIC2, struct.pack("<I", len(entries) | DIR_HAS_CRC)]
+    tail = []
     off = dir_len
     for e in entries:
         nb = e.name.encode()
@@ -474,16 +473,12 @@ def assemble_block(entries: List["ColumnMeta"],
             off += len(payload)
             crc = (e.crc if e.crc is not None
                    else zlib.crc32(payload) & 0xFFFFFFFF)
-        buf.write(struct.pack("<H", len(nb)))
-        buf.write(nb)
-        buf.write(struct.pack("<BB", _DT_CODE[np.dtype(e.dtype)], len(e.shape)))
-        buf.write(struct.pack(f"<{len(e.shape)}q", *e.shape))
-        buf.write(struct.pack("<BQQI", e.enc, e.length, poff, crc))
-    for e in entries:
-        payload = payloads.get(e.name)
-        if payload is not None:
-            buf.write(payload)
-    return buf.getvalue()
+            tail.append(payload)
+        parts.append(struct.pack(
+            f"<H{len(nb)}sBB{len(e.shape)}qBQQI", len(nb), nb,
+            _DT_CODE[np.dtype(e.dtype)], len(e.shape), *e.shape,
+            e.enc, e.length, poff, crc))
+    return b"".join(parts + tail)
 
 
 def dumps(arrays: Dict[str, np.ndarray], fmt: Optional[str] = None,

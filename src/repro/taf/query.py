@@ -191,6 +191,9 @@ class HistoricalGraphStore:
             # storage node was down or unreachable during reads)
             "failovers": self.store.stats.failovers,
             "hedged_reads": self.store.stats.hedged_reads,
+            # wire-transport view: mux in-flight depth + pipelined/
+            # serial round-trip counters ({} for local backends)
+            "transport": self.store.transport_stats(),
             "plan_compile": _compile_cache_stats(),
             # MVCC observability: the published epoch, who's pinned
             # below it, and how many superseded keys await GC

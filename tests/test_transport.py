@@ -1,0 +1,702 @@
+"""Pipelined wire transport: the per-node connection multiplexer
+(out-of-order completion fuzzed against a scripted stub peer,
+interleaved CHUNK streams, bounded in-flight window backpressure,
+enqueue-anchored deadlines, deadline-cancel without connection
+poisoning, idle-TTL reaping, HELLO once per connection, loud write
+failures vs idempotent retry), server-side head-of-line isolation
+(PING stays fast while big GETs saturate the worker pool), SIGKILL
+mid-pipeline draining every future, and ack-watermark feed truncation
+(bounded feeds under churn, checkpoint boot, byte-identical restart
+convergence past a truncation, full-state bootstrap of a wiped cell,
+typed FeedTruncated for mem-backed cells)."""
+import hashlib
+import socket
+import struct
+import threading
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.service import ClusterSpec, FeedTruncated, LocalCluster, StorageCell
+from repro.service import wire
+from repro.service.client import RemoteDeltaStore
+from repro.storage.kvstore import (DeltaKey, DeltaStore, NodeUnavailable,
+                                   StorageNodeDown)
+
+HOST = "127.0.0.1"
+
+
+# ---------------------------------------------------------------------------
+# scripted stub peer: speaks the wire protocol, misbehaves on command
+# ---------------------------------------------------------------------------
+
+
+class StubCell:
+    """A wire-speaking peer whose reply behavior is scripted per test:
+    HELLO and PING are answered inline (so ``RemoteDeltaStore`` can
+    attach), everything else goes through ``handler(stub, conn, send,
+    frame)`` — which may reply out of order, interleave streams, stall,
+    or hang up.  Counts connections, HELLOs, and every received frame."""
+
+    def __init__(self, handler=None):
+        self.handler = handler
+        self.lsock = socket.socket()
+        self.lsock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self.lsock.bind((HOST, 0))
+        self.lsock.listen(16)
+        self.port = self.lsock.getsockname()[1]
+        self.conns = 0
+        self.hellos = 0
+        self.frames = []  # (msg_type, req_id, body)
+        self.lock = threading.Lock()
+        self._stop = threading.Event()
+        threading.Thread(target=self._accept, daemon=True).start()
+
+    @property
+    def addr(self):
+        return (HOST, self.port)
+
+    def count(self, mtype):
+        with self.lock:
+            return sum(1 for t, _, _ in self.frames if t == mtype)
+
+    def close(self):
+        self._stop.set()
+        try:
+            self.lsock.close()
+        except OSError:
+            pass
+
+    def _accept(self):
+        while not self._stop.is_set():
+            try:
+                conn, _ = self.lsock.accept()
+            except OSError:
+                return
+            with self.lock:
+                self.conns += 1
+            threading.Thread(target=self._serve, args=(conn,),
+                             daemon=True).start()
+
+    def _serve(self, conn):
+        send_lock = threading.Lock()
+
+        def send(mtype, req_id, body=b""):
+            with send_lock:
+                wire.send_frame(conn, mtype, req_id, body)
+
+        try:
+            while True:
+                try:
+                    frame = wire.recv_frame(conn)
+                except (wire.WireError, OSError):
+                    return
+                with self.lock:
+                    self.frames.append((frame.msg_type, frame.req_id,
+                                        frame.body))
+                if frame.msg_type == wire.MSG_HELLO:
+                    with self.lock:
+                        self.hellos += 1
+                    send(wire.MSG_HELLO, frame.req_id,
+                         struct.pack("<BQ", 0, 0))
+                elif frame.msg_type == wire.MSG_PING:
+                    send(wire.MSG_OK, frame.req_id, struct.pack("<BQ", 0, 0))
+                elif self.handler is not None:
+                    self.handler(self, conn, send, frame)
+                else:
+                    send(wire.MSG_OK, frame.req_id, frame.body)
+        finally:
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+
+def _attach_stub(stub, **kw):
+    kw.setdefault("timeout", 5.0)
+    kw.setdefault("retries", 1)
+    kw.setdefault("backoff", 0.02)
+    return RemoteDeltaStore([stub.addr], r=1, **kw)
+
+
+# ---------------------------------------------------------------------------
+# multiplexer: out-of-order completion, stream demux, window, deadlines
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.timeout(60)
+def test_mux_demuxes_shuffled_replies_fuzz():
+    """8 concurrent requests per round, 10 rounds, replies deliberately
+    shuffled by the peer: every caller must still receive exactly ITS
+    reply (byte-identical to the oracle), proving req_id demux rather
+    than arrival order pairs replies with requests."""
+    rng = np.random.RandomState(7)
+    pending = []
+    lock = threading.Lock()
+
+    def handler(stub, conn, send, frame):
+        with lock:
+            pending.append(frame)
+            if len(pending) < 8:
+                return
+            batch, pending[:] = list(pending), []
+            order = rng.permutation(len(batch))
+        for i in order:
+            f = batch[i]
+            send(wire.MSG_OK, f.req_id, hashlib.sha256(f.body).digest())
+
+    stub = StubCell(handler)
+    store = _attach_stub(stub)
+    try:
+        barrier = threading.Barrier(8)
+        errors = []
+
+        def worker(wid):
+            try:
+                for rnd in range(10):
+                    body = f"req {wid}/{rnd}".encode() * (wid + 1)
+                    barrier.wait(timeout=20)
+                    reply = store._request(0, wire.MSG_GET, body)
+                    assert reply == hashlib.sha256(body).digest()
+            except Exception as e:  # noqa: BLE001 — surface in main thread
+                errors.append(e)
+
+        threads = [threading.Thread(target=worker, args=(w,))
+                   for w in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=30)
+        assert not errors, errors
+        assert stub.hellos == 1  # HELLO exactly once per connection
+        assert stub.conns == 1  # one socket carried all 80 requests
+        ts = store.transport_stats()
+        assert ts["inflight_hwm"] > 1  # genuinely pipelined
+        assert ts["rt_pipelined"] > 0
+        assert ts["rt_reconnects"] == 0
+    finally:
+        store.close()
+        stub.close()
+
+
+@pytest.mark.timeout(60)
+def test_interleaved_chunk_streams_demux_to_their_futures():
+    """Two in-flight MULTIGET streams whose CHUNK frames the peer
+    interleaves frame-by-frame: each drain must collect exactly its own
+    keys/blobs, byte-identical, with both ENDs honored."""
+    pend = []
+    lock = threading.Lock()
+
+    def handler(stub, conn, send, frame):
+        with lock:
+            pend.append(frame)
+            if len(pend) < 2:
+                return
+            a, b = pend
+            pend[:] = []
+        for i in range(3):  # A1 B1 A2 B2 A3 B3, then END B, END A
+            for tag, f in (("A", a), ("B", b)):
+                k = DeltaKey(0, 0, f"{tag}:{i}", i)
+                send(wire.MSG_CHUNK, f.req_id,
+                     wire.pack_key(k) + wire.pack_blob(
+                         f"{tag}-blob-{i}".encode() * 5))
+        send(wire.MSG_END, b.req_id, struct.pack("<I", 3))
+        send(wire.MSG_END, a.req_id, struct.pack("<I", 3))
+
+    stub = StubCell(handler)
+    store = _attach_stub(stub)
+    try:
+        deadline = time.monotonic() + 10
+        futs = [store._muxes[0].submit(wire.MSG_MULTIGET, b"ignored",
+                                       deadline) for _ in range(2)]
+        got = [{}, {}]
+        counts = [None, None]
+
+        def drain(i):
+            counts[i] = store._mg_drain(0, futs[i], deadline,
+                                        lambda k, blob: got[i].update(
+                                            {k: blob}))
+
+        threads = [threading.Thread(target=drain, args=(i,))
+                   for i in range(2)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=20)
+        assert counts == [3, 3]
+        # submission order == stub's pend order (same socket, FIFO), so
+        # futs[0] is stream A.  Each stream got only its own blobs.
+        for i, tag in enumerate(("A", "B")):
+            assert set(got[i]) == {DeltaKey(0, 0, f"{tag}:{j}", j)
+                                   for j in range(3)}
+            for j in range(3):
+                assert got[i][DeltaKey(0, 0, f"{tag}:{j}", j)] == \
+                    f"{tag}-blob-{j}".encode() * 5
+    finally:
+        store.close()
+        stub.close()
+
+
+@pytest.mark.timeout(60)
+def test_window_backpressure_caps_in_flight():
+    """window=2: a third concurrent request must NOT reach the wire
+    until one of the first two completes — the submitter blocks in the
+    window, which is the client half of flow control."""
+    release = threading.Event()
+
+    def handler(stub, conn, send, frame):
+        def later(f=frame):
+            release.wait(timeout=20)
+            send(wire.MSG_OK, f.req_id, f.body)
+        threading.Thread(target=later, daemon=True).start()
+
+    stub = StubCell(handler)
+    store = _attach_stub(stub, window=2)
+    try:
+        results = []
+        threads = [threading.Thread(
+            target=lambda i=i: results.append(
+                store._request(0, wire.MSG_GET, b"r%d" % i)))
+            for i in range(3)]
+        for t in threads:
+            t.start()
+        time.sleep(0.4)
+        assert stub.count(wire.MSG_GET) == 2  # third held by the window
+        assert store.transport_stats()["in_flight"] == 2
+        release.set()
+        for t in threads:
+            t.join(timeout=20)
+        assert len(results) == 3
+        assert store.transport_stats()["inflight_hwm"] == 2
+    finally:
+        store.close()
+        stub.close()
+
+
+@pytest.mark.timeout(60)
+def test_deadline_wall_clock_from_enqueue_not_checkout():
+    """window=1 and a peer that sits on request A: request B's deadline
+    must expire ~timeout after B was *submitted*, even though B never
+    got a window slot — the budget starts at enqueue, not at dispatch."""
+    def handler(stub, conn, send, frame):
+        def later(f=frame):
+            time.sleep(1.5)
+            try:
+                send(wire.MSG_OK, f.req_id, f.body)
+            except OSError:
+                pass
+        threading.Thread(target=later, daemon=True).start()
+
+    stub = StubCell(handler)
+    store = _attach_stub(stub, window=1, timeout=0.5)
+    try:
+        started = threading.Event()
+
+        def occupant():
+            started.set()
+            with pytest.raises(NodeUnavailable):
+                store._request(0, wire.MSG_GET, b"A")
+
+        t = threading.Thread(target=occupant)
+        t.start()
+        started.wait()
+        time.sleep(0.05)  # let A take the slot
+        t0 = time.monotonic()
+        with pytest.raises(NodeUnavailable):
+            store._request(0, wire.MSG_GET, b"B")
+        elapsed = time.monotonic() - t0
+        t.join(timeout=10)
+        assert 0.3 < elapsed < 1.2, elapsed  # ~its own 0.5s, not 1.5s+
+        assert stub.count(wire.MSG_GET) == 1  # B never reached the wire
+    finally:
+        store.close()
+        stub.close()
+
+
+@pytest.mark.timeout(60)
+def test_deadline_cancel_leaves_connection_usable():
+    """A request that times out must cancel its future WITHOUT
+    poisoning the connection: the late reply is drained and dropped,
+    and the very same socket serves the next request — no reconnect,
+    no second HELLO."""
+    first = threading.Event()
+
+    def handler(stub, conn, send, frame):
+        if not first.is_set():
+            first.set()
+            time.sleep(0.8)  # reply late: client gave up at 0.3
+        send(wire.MSG_OK, frame.req_id, frame.body)
+
+    stub = StubCell(handler)
+    store = _attach_stub(stub, timeout=0.3)
+    try:
+        with pytest.raises(NodeUnavailable):
+            store._request(0, wire.MSG_GET, b"slow")
+        assert store.stats.rt_deadline_cancels == 1
+        time.sleep(0.8)  # late reply lands, reader drains + drops it
+        store.timeout = 5.0
+        reply = store._request(0, wire.MSG_GET, b"follow-up")
+        assert reply == b"follow-up"
+        assert stub.conns == 1 and stub.hellos == 1
+        assert store.transport_stats()["rt_reconnects"] == 0
+    finally:
+        store.close()
+        stub.close()
+
+
+@pytest.mark.timeout(60)
+def test_idle_ttl_reaps_mux_connection():
+    stub = StubCell()
+    store = _attach_stub(stub, idle_ttl=0.3)
+    try:
+        assert store._request(0, wire.MSG_GET, b"x") == b"x"
+        assert store._muxes[0].sock is not None
+        time.sleep(1.0)  # reaper interval is idle_ttl/2
+        assert store._muxes[0].sock is None  # reaped
+        assert store._request(0, wire.MSG_GET, b"y") == b"y"  # re-dialed
+        assert stub.conns == 2 and stub.hellos == 2
+    finally:
+        store.close()
+        stub.close()
+
+
+@pytest.mark.timeout(60)
+def test_reconnect_retries_idempotent_but_not_writes():
+    """A connection the peer kills mid-request: a GET is transparently
+    re-issued on a fresh connection; a PUT gets exactly ONE transport
+    attempt and fails loudly (StorageNodeDown; nothing queued, nothing
+    silently replayed)."""
+    drop_next = {"get": True, "put": True}
+
+    def handler(stub, conn, send, frame):
+        if frame.msg_type == wire.MSG_GET and drop_next["get"]:
+            drop_next["get"] = False
+            conn.close()
+            return
+        if frame.msg_type == wire.MSG_PUT and drop_next["put"]:
+            drop_next["put"] = False
+            conn.close()
+            return
+        send(wire.MSG_OK, frame.req_id, frame.body)
+
+    stub = StubCell(handler)
+    store = _attach_stub(stub, retries=2)
+    try:
+        assert store._request(0, wire.MSG_GET, b"idem") == b"idem"
+        assert stub.count(wire.MSG_GET) == 2  # dropped once, retried once
+        assert store.transport_stats()["rt_reconnects"] >= 1
+        with pytest.raises(StorageNodeDown):
+            store.put_encoded(DeltaKey(0, 0, "E:0", 0), b"payload", 7)
+        assert stub.count(wire.MSG_PUT) == 1  # ONE attempt, no replay
+        assert all(not q for q in store._pending)  # failed != queued
+    finally:
+        store.close()
+        stub.close()
+
+
+# ---------------------------------------------------------------------------
+# server: head-of-line isolation, SIGKILL mid-pipeline
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.timeout(120)
+def test_ping_not_hol_blocked_by_slow_gets(tmp_path):
+    """workers=1, the worker pinned inside a slow GET and a second GET
+    queued behind it: PINGs on the SAME multiplexed connection must
+    keep completing fast, because the cell answers liveness inline on
+    its read loop instead of queueing it behind the worker pool.  (In
+    the pre-pipelining protocol this exact shape head-of-line-blocked:
+    one connection, one outstanding request at a time.)"""
+    cell = StorageCell(node_id=0, n_cells=1, r=1, backend="file",
+                       root=str(tmp_path / "cell0"), workers=1)
+    cell.start()
+    store = RemoteDeltaStore([(HOST, cell.port)], r=1, timeout=30.0)
+    try:
+        key = DeltaKey(0, 0, "E:0", 0)
+        store.put(key, {"v": np.arange(100, dtype=np.int64)})
+        gate = threading.Event()
+        entered = threading.Event()
+        real = cell.store.get_encoded
+
+        def slow_get(k, fields=None):
+            entered.set()
+            gate.wait(timeout=60)  # pin the (only) worker until released
+            return real(k, fields)
+
+        cell.store.get_encoded = slow_get
+        body = wire.pack_key(key) + wire.pack_fields(None)
+        done = []
+
+        def get():
+            store._request(0, wire.MSG_GET, body)
+            done.append(1)
+
+        threads = [threading.Thread(target=get) for _ in range(2)]
+        for t in threads:
+            t.start()
+        assert entered.wait(timeout=20)  # worker provably busy; GET #2
+        lat = []                         # is queued behind it
+        for _ in range(30):
+            t0 = time.monotonic()
+            store._request(0, wire.MSG_PING, b"", retries=0)
+            lat.append(time.monotonic() - t0)
+        assert not done  # both GETs still in flight: pings overtook them
+        gate.set()
+        for t in threads:
+            t.join(timeout=60)
+        assert len(done) == 2  # the slow work itself completed
+        assert max(lat) < 1.0, max(lat)  # no ping waited on a GET
+    finally:
+        store.close()
+        cell.stop()
+
+
+@pytest.mark.timeout(120)
+def test_sigkill_mid_pipeline_drains_all_futures(tmp_path):
+    """SIGKILL a cell while 8 threads have pipelined multigets in
+    flight against it: every future must complete — served by the
+    surviving replica via failover, zero failed queries, no hang."""
+    spec = ClusterSpec(n_cells=3, r=2, backend="file",
+                       root=str(tmp_path / "cluster"))
+    with LocalCluster(spec, mode="subprocess") as cl:
+        oracle = cl.client(timeout=5.0, pipeline=False)
+        rng = np.random.RandomState(3)
+        keys = [DeltaKey(t, s, "E:0", p) for t in range(4)
+                for s in range(3) for p in range(2)]
+        for k in keys:
+            oracle.put(k, {"t": np.arange(150, dtype=np.int64) * (k.tsid + 1),
+                           "v": rng.randn(150).astype(np.float32)})
+        oracle.clear_pool()
+        want = oracle.multiget(keys)  # serial-transport oracle
+        store = cl.client(timeout=2.0, retries=1, backoff=0.02,
+                          suspect_ttl=0.5)
+        errors, results = [], []
+        killed = threading.Event()
+
+        def reader():
+            try:
+                for _ in range(3):
+                    store.clear_pool()
+                    results.append(store.multiget(keys))
+                killed.wait(timeout=60)  # rounds guaranteed post-kill
+                for _ in range(3):
+                    store.clear_pool()
+                    results.append(store.multiget(keys))
+            except Exception as e:  # noqa: BLE001 — any failure fails the test
+                errors.append(e)
+
+        threads = [threading.Thread(target=reader) for _ in range(8)]
+        for t in threads:
+            t.start()
+        while len(results) < 8:  # at least one round per thread in flight
+            time.sleep(0.01)
+        cl.kill(0)  # SIGKILL mid-pipeline
+        killed.set()
+        for t in threads:
+            t.join(timeout=90)
+        assert not errors, errors
+        assert len(results) == 48  # 8 threads x 6 rounds, zero failed
+        for out in results:  # byte-for-byte what the serial oracle read
+            assert set(out) == set(want)
+            for k in keys:
+                for f in ("t", "v"):
+                    assert np.array_equal(out[k][f], want[k][f])
+        assert store.transport_stats()["inflight_hwm"] > 1
+        assert store.stats.failovers > 0  # the kill was actually absorbed
+        oracle.close()
+        store.close()
+
+
+# ---------------------------------------------------------------------------
+# feed truncation: bounded feeds, checkpoint boot, convergence, bootstrap
+# ---------------------------------------------------------------------------
+
+
+def _mini_fill(store, n=40, size=50):
+    rng = np.random.RandomState(9)
+    keys = [DeltaKey(i % 4, i % 3, "E:0", i % 2) for i in range(n)]
+    for i, k in enumerate(keys):
+        store.put(k, {"t": np.arange(size, dtype=np.int64) + i,
+                      "v": rng.randn(size).astype(np.float32)})
+    return keys
+
+
+@pytest.mark.timeout(120)
+def test_feed_truncation_bounded_under_churn_and_boot_floor(tmp_path):
+    """Writes piggyback the client's ack watermark, so cells truncate
+    their feeds while the workload runs (no quiesce needed); a cluster
+    restart then boots from feed.base + the truncated log and serves
+    every key."""
+    spec = ClusterSpec(n_cells=3, r=2, backend="file",
+                       root=str(tmp_path / "cluster"), feed_keep=8)
+    with LocalCluster(spec, mode="thread") as cl:
+        store = cl.client(timeout=5.0)
+        keys = _mini_fill(store, n=60)
+        feeds = store.feed_status()
+        assert all(f is not None for f in feeds)
+        assert sum(f["truncations"] for f in feeds) >= 3  # live truncation
+        for f in feeds:
+            assert f["floor"] > 0
+            assert f["len"] < 60  # bounded: far fewer than records hosted
+        store.clear_pool()
+        want = {k: store.get(k) for k in keys}
+        store.close()
+    for node in range(3):
+        assert (tmp_path / "cluster" / f"cell{node}" / "feed.base").exists()
+    with LocalCluster(spec, mode="thread") as cl:  # reboot from checkpoint
+        store = cl.client(timeout=5.0)
+        for k in set(keys):
+            got = store.get(k)
+            for f in ("t", "v"):
+                assert np.array_equal(got[f], want[k][f])
+        assert store.quiesce() > 0  # watermark resumes past the floor
+        store.close()
+
+
+@pytest.mark.timeout(180)
+def test_truncated_restart_catch_up_converges_byte_identical(tmp_path):
+    """The PR-6 byte-identity guarantee survives feed truncation: kill
+    a cell, keep writing (truncation keeps running on the survivors),
+    restart it, quiesce to the common watermark + forced truncation —
+    cell 0's chunk, extent, checkpoint AND feed files are byte-for-byte
+    what a never-killed run produces."""
+
+    def run(root, kill):
+        spec = ClusterSpec(n_cells=3, r=2, backend="file", root=str(root),
+                           feed_keep=4)
+        with LocalCluster(spec, mode="subprocess") as cl:
+            store = cl.client(timeout=2.0, retries=1, backoff=0.02,
+                              suspect_ttl=0.2)
+            rng = np.random.RandomState(5)
+            keys = [DeltaKey(t, s, "E:0", p) for t in range(4)
+                    for s in range(3) for p in range(2)]
+            half = len(keys) // 2
+            for k in keys[:half]:
+                store.put(k, {"t": np.arange(100, dtype=np.int64),
+                              "v": rng.randn(100).astype(np.float32)})
+            if kill:
+                cl.kill(0)
+            for k in keys[half:]:  # cell 0 misses its share of these
+                store.put(k, {"t": np.arange(100, dtype=np.int64),
+                              "v": rng.randn(100).astype(np.float32)})
+            store.delete(keys[1])
+            if kill:
+                cl.restart(0)
+            store.clear_pool()
+            store._suspects.clear()
+            for k in keys:
+                if k == keys[1]:
+                    continue
+                assert "t" in store.get(k)
+            # drive every cell to the common final feed state
+            water = store.quiesce(truncate=True)
+            assert water == store._seq
+            feeds = store.feed_status()
+            assert all(f is not None and f["floor"] == water for f in feeds)
+            if kill:  # truncation actually happened during/after churn
+                assert sum(f["truncations"] for f in feeds) >= 1
+            store.close()
+        return {
+            str(p.relative_to(root)): hashlib.sha256(p.read_bytes()).hexdigest()
+            for p in sorted(Path(root, "cell0").rglob("*")) if p.is_file()
+        }
+
+    baseline = run(tmp_path / "a", kill=False)
+    recovered = run(tmp_path / "b", kill=True)
+    assert baseline == recovered
+    assert "cell0/feed.base" in baseline  # the checkpoint is part of it
+    assert any(f.endswith(".tgi") for f in baseline)
+
+
+@pytest.mark.timeout(180)
+def test_wiped_cell_bootstraps_by_full_state_transfer(tmp_path):
+    """A cell that lost its disk AND faces peers whose feeds are
+    truncated below its needs can't replay history — it must pull
+    chunk/extent state verbatim from live replicas, landing on byte-
+    identical files, then serve reads."""
+    spec = ClusterSpec(n_cells=3, r=2, backend="file",
+                       root=str(tmp_path / "cluster"), feed_keep=4)
+    with LocalCluster(spec, mode="subprocess") as cl:
+        store = cl.client(timeout=2.0, retries=1, backoff=0.02,
+                          suspect_ttl=0.2)
+        keys = _mini_fill(store, n=30)
+        water = store.quiesce(truncate=True)
+        assert water > 0  # peers' feeds are truncated: replay impossible
+        cell1 = Path(tmp_path / "cluster" / "cell1")
+
+        def state_hashes():
+            return {str(p.relative_to(cell1)):
+                    hashlib.sha256(p.read_bytes()).hexdigest()
+                    for p in sorted(cell1.rglob("*"))
+                    if p.is_file() and (p.suffix in (".tgi", ".tgx")
+                                        or p.name == "feed.base")}
+
+        before = state_hashes()
+        assert before  # it held real state
+        cl.kill(1)
+        cl.wipe(1)  # disk loss: no feed, no checkpoint, no chunks
+        assert not cell1.exists()
+        cl.restart(1)  # READY implies boot catch-up (bootstrap) finished
+        assert state_hashes() == before  # verbatim full-state transfer
+        status = store.cell_status(1)
+        assert status["feed"]["floor"] == water  # adopted the peer floor
+        assert status["n_keys"] > 0  # accounting restored, not just bytes
+        store.clear_pool()
+        store._suspects.clear()
+        for k in set(keys):  # and the cluster serves everything
+            assert "t" in store.get(k)
+        store.close()
+
+
+@pytest.mark.timeout(60)
+def test_mem_cell_raises_typed_feed_truncated(tmp_path):
+    """The file backend can full-state-transfer past a truncation; the
+    mem backend cannot — a fresh mem cell facing a truncated peer must
+    fail with the typed FeedTruncated (and serve ERR_FEED_TRUNCATED on
+    the wire), never converge silently incomplete."""
+    a = StorageCell(node_id=0, n_cells=2, r=2, backend="mem", feed_keep=1)
+    a.start()
+    try:
+        blob = DeltaStore(m=1, r=1, backend="mem").encode_payload(
+            DeltaKey(0, 0, "E:0", 0), {"t": np.arange(5, dtype=np.int64)})
+        for seq in (1, 2, 3):
+            a.apply(wire.FeedRecord(seq, wire.OP_PUT,
+                                    DeltaKey(0, 0, "E:0", seq - 1),
+                                    40, blob))
+        a.note_ack(3)
+        assert a.feed_floor == 3 and a.truncations == 1
+        b = StorageCell(node_id=1, n_cells=2, r=2, backend="mem")
+        with pytest.raises(FeedTruncated):
+            b.catch_up([(HOST, a.port)])
+        # and over the wire: STATE_PULL against a mem cell is typed too
+        store = RemoteDeltaStore([(HOST, a.port)], r=1,
+                                 require_full_attach=False)
+        with pytest.raises(wire.RemoteError) as ei:
+            store._request(0, wire.MSG_STATE_PULL, struct.pack("<qq", 0, 0))
+        assert ei.value.code == wire.ERR_FEED_TRUNCATED
+        store.close()
+    finally:
+        a.stop()
+
+
+@pytest.mark.timeout(60)
+def test_transport_stats_shape_local_vs_remote(tmp_path):
+    """Local stores report no transport ({}); the remote store reports
+    the mux view cache_stats()/storage_report build on."""
+    assert DeltaStore(m=2, r=1, backend="mem").transport_stats() == {}
+    spec = ClusterSpec(n_cells=2, r=1, backend="file",
+                       root=str(tmp_path / "cluster"))
+    with LocalCluster(spec, mode="thread") as cl:
+        store = cl.client()
+        ts = store.transport_stats()
+        for field in ("pipeline", "window", "in_flight", "inflight_hwm",
+                      "rt_pipelined", "rt_serial", "rt_deadline_cancels",
+                      "rt_reconnects", "nodes"):
+            assert field in ts
+        assert ts["pipeline"] is True and len(ts["nodes"]) == 2
+        snap = store.report_snapshot()
+        assert snap["transport"]["window"] == store.window
+        assert len(snap["feeds"]) == 2
+        store.close()
