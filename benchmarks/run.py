@@ -642,6 +642,201 @@ def bench_transport():
             store.close()
 
 
+def bench_multiwriter():
+    """Multi-writer chaos bench: three lease-fenced writer PROCESSES
+    hammer one subprocess cluster under distinct ``(epoch, seq)``
+    lanes; one writer is SIGKILLed mid-storm (no release, no goodbye).
+    Gates (always asserted — these are correctness, not speed):
+    (1) zero acked writes lost — every key serves its max-vseq winner
+    across the union of the writers' acked-op logs (modulo the dead
+    writer's single possibly-in-flight next op, reconstructed from its
+    seed); (2) lease expiry triggers orphan-seq reconciliation within
+    one sweep — the dead lane seals at one agreed point >= its acked
+    high-water mark on every cell and the ack watermark advances past
+    it, resuming feed truncation; (3) after a canonical vacuum both
+    replicas of every placement hold byte-identical chunk/extent
+    files, regardless of per-cell arrival interleaving."""
+    import hashlib
+    import subprocess
+    import sys
+    import tempfile
+    from pathlib import Path
+
+    from repro.service import ClusterSpec, LocalCluster
+    from repro.service.stress import (key_for, payload_arrays,
+                                      read_acked_log)
+    from repro.storage.kvstore import KeyMissing, make_vseq, split_vseq
+
+    n_ops = max(80, int(round(160 * SCALE)))  # per surviving writer
+    kill_at = 30  # acked ops before the victim is SIGKILLed
+    keyspace = 24
+    lease_ttl = 1.0
+    seeds = (21, 22, 23)  # seeds[0] is the victim
+
+    def matches(got, token):
+        want = payload_arrays(token)
+        return (set(got) == set(want)
+                and all(np.array_equal(got[f], want[f]) for f in want))
+
+    def spawn(cl, seed, out, n_writes):
+        import repro
+        src = str(Path(next(iter(repro.__path__))).parent)
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.pathsep.join(
+            [src] + [p for p in env.get("PYTHONPATH", "").split(os.pathsep)
+                     if p])
+        cmd = [sys.executable, "-m", "repro.service.stress",
+               "--addrs", ",".join(f"{h}:{p}" for h, p in cl.addrs),
+               "--r", str(cl.spec.r), "--n-writes", str(n_writes),
+               "--keyspace", str(keyspace), "--seed", str(seed),
+               "--out", str(out), "--lease-ttl", str(lease_ttl)]
+        proc = subprocess.Popen(cmd, env=env, stdout=subprocess.PIPE,
+                                stderr=subprocess.DEVNULL, text=True)
+        line = proc.stdout.readline()
+        assert line.startswith("WRITER READY"), line
+        return proc
+
+    with tempfile.TemporaryDirectory() as root:
+        spec = ClusterSpec(n_cells=3, r=2, backend="file", root=root,
+                           feed_keep=16, lease_ttl=lease_ttl)
+        with LocalCluster(spec, mode="subprocess") as cl:
+            logs = [Path(root) / f"writer{i}.log" for i in range(3)]
+            t0 = time.perf_counter()
+            procs = [spawn(cl, seeds[i], logs[i],
+                           10**6 if i == 0 else n_ops)
+                     for i in range(3)]
+            # SIGKILL the victim once it has >= kill_at acked ops
+            deadline = time.monotonic() + 120
+            while time.monotonic() < deadline:
+                if (logs[0].exists()
+                        and len(logs[0].read_text().splitlines())
+                        >= kill_at):
+                    break
+                time.sleep(0.02)
+            procs[0].kill()
+            t_kill = time.perf_counter()
+            procs[0].wait(timeout=10)
+            for p in procs[1:]:  # survivors run their storm to the end
+                assert p.wait(timeout=600) == 0, \
+                    "multiwriter bench: a surviving writer degraded"
+            t_storm = time.perf_counter() - t0
+
+            rows = [read_acked_log(log) for log in logs]
+            dead = rows[0]
+            assert len(dead) >= kill_at
+            epoch = split_vseq(max(v for _, _, v, _ in dead))[0]
+            max_acked = max(split_vseq(v)[1] for _, _, v, _ in dead)
+            acked_total = sum(len(r) for r in rows)
+            _row("multiwriter/storm", t_storm * 1e6 / acked_total,
+                 f"writers=3;killed=1;acked_total={acked_total};"
+                 f"dead_acked={len(dead)};survivor_ops={n_ops}x2")
+
+            reader = cl.client(timeout=5.0, retries=1, backoff=0.02,
+                               pool_bytes=0)
+            # (2) lease expiry -> orphan-seq reconciliation seals the
+            # dead lane at ONE agreed point on every cell
+            deadline = time.monotonic() + 120
+            while time.monotonic() < deadline:
+                lanes = [(st or {}).get("lanes", {}).get(str(epoch))
+                         for st in reader.feed_status()]
+                lanes = [l for l in lanes if l]
+                if len(lanes) == 3 and all(l["seal"] is not None
+                                           for l in lanes):
+                    break
+                time.sleep(0.1)
+            else:
+                raise AssertionError(
+                    "multiwriter bench: dead lane never sealed")
+            t_seal = time.perf_counter() - t_kill
+            seals = {l["seal"] for l in lanes}
+            assert len(seals) == 1, f"split-brain seal: {seals}"
+            seal = seals.pop()
+            assert seal >= max_acked, \
+                f"seal {seal} below acked high-water {max_acked}"
+            _row("multiwriter/reconcile_latency", t_seal * 1e6,
+                 f"seal={seal};acked_hwm={max_acked};"
+                 f"lease_ttl={lease_ttl}")
+
+            # ack watermark past the dead lane; feed truncation resumed
+            reader.quiesce(truncate=True)
+            water_ok = 0
+            for st in reader.feed_status():
+                assert st is not None
+                lane = st["lanes"][str(epoch)]
+                assert lane["floor"] == lane["seal"] and not lane["lease"]
+                assert st["ack_water"] >= make_vseq(epoch, max_acked)
+                water_ok += 1
+            _row("multiwriter/ack_watermark_resume", 0.0,
+                 f"cells={water_ok};floor=seal;dead_epoch={epoch}")
+
+            # (1) zero acked writes lost: per-key max-vseq winner over
+            # the union of the logs, modulo the victim's one possibly
+            # in-flight op (applied by the cluster, never logged)
+            n_acked = len(dead)
+            rng = np.random.default_rng(seeds[0])
+            slots = [int(rng.integers(0, keyspace))
+                     for _ in range(n_acked + 1)]
+            cand_key = key_for(slots[n_acked])
+            cand_op = "DEL" if n_acked % 10 == 9 else "PUT"
+            cand_token = seeds[0] * 1_000_003 + n_acked
+            cand_vseq = make_vseq(epoch, max_acked + 1)
+            winners = {}
+            for wrows in rows:
+                for op, key, vseq, token in wrows:
+                    if key not in winners or vseq > winners[key][1]:
+                        winners[key] = (op, vseq, token)
+            lost = []
+            for key, (op, vseq, token) in winners.items():
+                cand = key == cand_key and cand_vseq > vseq
+                try:
+                    got = reader.get(key)
+                except KeyMissing:
+                    if not (op == "DEL" or (cand and cand_op == "DEL")):
+                        lost.append(key)
+                    continue
+                ok = op == "PUT" and matches(got, token)
+                if cand and cand_op == "PUT":
+                    ok = ok or matches(got, cand_token)
+                if not ok:
+                    lost.append(key)
+            _row("multiwriter/zero_acked_lost", 0.0,
+                 f"keys_checked={len(winners)};lost={len(lost)}")
+            assert not lost, f"acked writes lost on keys: {lost}"
+
+            # (3) canonical vacuum -> replica files byte-identical per
+            # placement (each chunk/extent lives on exactly r=2 cells
+            # under the same relative path)
+            t0 = time.perf_counter()
+            for node in range(3):
+                for _ in range(50):  # background maint may hold the slot
+                    if reader.maintain(node, canonical=True):
+                        break
+                    time.sleep(0.1)
+                else:
+                    raise AssertionError(
+                        f"canonical vacuum never ran on cell {node}")
+            us_canon = (time.perf_counter() - t0) * 1e6
+            by_path = {}
+            for node in range(3):
+                croot = Path(spec.cell_root(node))
+                for p in sorted(croot.rglob("*")):
+                    if p.is_file() and p.suffix in (".tgi", ".tgx"):
+                        h = hashlib.sha256(p.read_bytes()).hexdigest()
+                        by_path.setdefault(
+                            str(p.relative_to(croot)), []).append(h)
+            assert by_path, "multiwriter bench: no chunk files found"
+            mismatched = [rel for rel, hs in by_path.items()
+                          if len(set(hs)) != 1]
+            lonely = [rel for rel, hs in by_path.items() if len(hs) < 2]
+            _row("multiwriter/replica_byte_identity", us_canon,
+                 f"files={len(by_path)};mismatched={len(mismatched)};"
+                 f"unreplicated={len(lonely)}")
+            assert not mismatched, \
+                f"replica divergence after canonical vacuum: {mismatched}"
+            assert not lonely, f"under-replicated chunks: {lonely}"
+            reader.close()
+
+
 def fig17_incremental_vs_temporal():
     """Fig 17: NodeComputeDelta vs NodeComputeTemporal cumulative time vs
     number of evaluated versions."""
@@ -1155,6 +1350,7 @@ BENCHES: Dict[str, Callable] = {
     "ingest": bench_ingest,
     "service": bench_service,
     "transport": bench_transport,
+    "multiwriter": bench_multiwriter,
     "table1": table1_index_comparison,
     "ckpt": bench_checkpoint_store,
     "kernel": bench_delta_overlay_kernel,

@@ -1,7 +1,11 @@
 """Deterministic fault injection for the MVCC maintenance path.
 
 Named crash points (``compact.shadow_build``, ``compact.pre_swap``,
-``compact.post_swap``, ``compact.mid_gc``, ``cell.apply``, ...) are
+``compact.post_swap``, ``compact.mid_gc``, ``cell.apply``,
+``cell.lease_expire`` — a cell's sweeper just detected an expired
+writer lease, before reconciliation starts — and ``cell.reconcile`` —
+mid orphan-seq reconciliation, after anti-entropy but before the lane
+seal persists, ...) are
 compiled into the maintenance and service code as ``fire(name)`` calls —
 free when disarmed (one dict probe).  Tests arm a point with a hit
 countdown and an action:

@@ -5,11 +5,19 @@ and serves them over a length-prefixed binary wire protocol
 nodes are cells reached over sockets — TGI, the PlanExecutor fetch
 stage, and the decoded-block pool run unchanged on top of it.  An
 append-only change feed per cell (``feed_since``) drives replica
-catch-up after a crash.  ``LocalCluster`` spins up N cells x r
-replicas in threads or subprocesses for tests, benches, and docs."""
+catch-up after a crash.  Writers are lease-fenced: each holds a
+time-bounded lease under a monotonic fencing epoch, stale-epoch writes
+are rejected with the typed ``LeaseFenced``, dead writers' lanes are
+sealed by orphan-seq reconciliation, and a writer that loses its cell
+quorum degrades to read-only (``WriteUnavailable``) until it returns.
+``LocalCluster`` spins up N cells x r replicas in threads or
+subprocesses for tests, benches, and docs."""
 from repro.service.cell import FeedTruncated, StorageCell
-from repro.service.client import RemoteDeltaStore
+from repro.service.client import Backoff, RemoteDeltaStore
 from repro.service.cluster import ClusterSpec, LocalCluster
+from repro.service.wire import AuthFailed, LeaseFenced
+from repro.storage.kvstore import WriteUnavailable
 
 __all__ = ["StorageCell", "RemoteDeltaStore", "ClusterSpec", "LocalCluster",
-           "FeedTruncated"]
+           "FeedTruncated", "LeaseFenced", "AuthFailed", "WriteUnavailable",
+           "Backoff"]

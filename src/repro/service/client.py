@@ -42,42 +42,70 @@ later keys.  A cell that stays unreachable is marked *suspect* for
 ``suspect_ttl`` seconds so subsequent reads skip it without paying the
 timeout again, then re-probed.
 
-Write path: every ``put``/``delete`` is stamped with a globally
-monotonic ``seq`` and fanned out to the key's replica cells while the
-writer lock is held — writes are serialized, so every cell receives
-its records in seq order, which is what makes change-feed catch-up
-(``StorageCell.catch_up``) converge to byte-identical files.  A write
-(put OR delete) succeeds only when at least one replica cell accepted
-it — otherwise it raises ``StorageNodeDown`` with the local accounting
-untouched.  A replica that missed an acknowledged write (down,
-suspect, or a transient failure) gets the record queued on a per-node
-*redelivery queue*: the queue is drained, in seq order, before that
-node serves any further read or receives any further write from this
-client, so a cell with an interior feed gap this client created can
-never serve it a stale version — and a restarting cell additionally
-repairs gaps from any writer via the feed ``catch_up`` pull.
+Write path: **lease-fenced multi-writer**.  Before its first write the
+client acquires a time-bounded *writer lease* from a cell quorum
+(``m//2 + 1`` grants): a monotonic **fencing epoch** that names this
+writer incarnation's *lane*.  Every ``put``/``delete`` is stamped with
+a *vseq* — ``(epoch, seq)`` packed into one u64 — and fanned out to
+the key's replica cells while the writer lock is held; within a lane
+seqs are monotone, so every cell receives this writer's records in
+order, and across lanes the u64 vseq order is the cluster-wide total
+order that makes N concurrent writers' feeds merge deterministically
+(restart catch-up stays byte-identical).  Accepted writes double as
+the lease heartbeat; a background thread renews explicitly every
+``lease_ttl/3`` so an idle writer stays live.  A cell that has sealed
+the lane (this writer was presumed dead and reconciled away) rejects
+the write with the typed ``LeaseFenced`` — never silently applied —
+and the client invalidates its lease and re-acquires a fresh epoch for
+the next write.  When no quorum is reachable the client **degrades to
+read-only**: writes raise the typed ``WriteUnavailable`` *immediately*
+(no network attempt, no hang) while reads keep failing over, and the
+renewal thread re-acquires automatically once a quorum returns.
+
+A write (put OR delete) succeeds only when at least one replica cell
+accepted it — otherwise it raises ``StorageNodeDown`` with the local
+accounting untouched.  A replica that missed an acknowledged write
+(down, suspect, or a transient failure) gets the record queued on a
+per-node *redelivery queue*: the queue is drained, in vseq order,
+before that node serves any further read or receives any further write
+from this client, so a cell with an interior feed gap this client
+created can never serve it a stale version — and a restarting cell
+additionally repairs gaps from any writer via the feed ``catch_up``
+pull.  A queued record whose lane got sealed in the meantime is
+dropped at drain time (``fence_drops``): the reconciliation that
+sealed the lane already anti-entropied the records that mattered.
 
 Every write and ``quiesce`` piggybacks the client's *ack watermark* —
-the highest seq below which no redelivery is queued, i.e. every cell
-provably holds everything it owns — which is what lets cells truncate
-``feed.log`` (see ``StorageCell``).  The watermark assumes this
-client's redelivery queues drain before it exits (``quiesce`` does
-both); a hard-killed writer's queued records are the documented
-residual a restart-time catch-up repairs.
+the highest own-lane vseq below which no redelivery is queued, i.e.
+every cell provably holds everything it owns — which is what lets
+cells truncate ``feed.log`` per lane (see ``StorageCell``).  A
+hard-killed writer obviously stops acking; its lane's floor is
+un-stranded by lease-expiry reconciliation instead.  ``close()``
+releases the lease cleanly (sealing the lane at its final seq) when
+every own-lane redelivery has drained, so well-behaved exits don't
+wait out the TTL.
 
-Attaching requires every cell to answer a PING: the write seq resumes
-from the cluster-wide high-water mark, and a cell that is unreachable
-at attach time could be the only holder of the newest seqs — stamping
-over them would be silently dropped by the cells' dedupe.  Pass
-``require_full_attach=False`` to accept that risk explicitly (e.g. a
-read-only session against a degraded cluster).
+Attach is read-only and lazy: no probe, no seq resume — a fresh epoch
+starts its lane at seq 0, so nothing this writer stamps can collide
+with history.  Transport retries across the client (mux redial, serial
+fallback, lease acquisition) share one jittered ``Backoff`` helper
+with per-call deadline caps.
+
+With ``auth_key`` set, every dialed connection answers the cell's
+HELLO challenge with ``HMAC-SHA256(key, nonce)`` before any other
+frame; a wrong or missing key surfaces as the typed ``AuthFailed``
+(never retried, never wrapped into ``NodeUnavailable``).
 """
 from __future__ import annotations
 
+import hashlib
+import hmac
+import random
 import socket
 import struct
 import threading
 import time
+import uuid
 from collections import deque
 from typing import Callable, Dict, Iterable, List, Optional, Tuple
 
@@ -88,18 +116,57 @@ from repro.storage import serialize
 from repro.storage.kvstore import (DEFAULT_POOL_BYTES, BlockCorruption,
                                    DeltaKey, DeltaStore, KeyMissing,
                                    NodeUnavailable, ReadSizes,
-                                   StorageNodeDown, replica_nodes)
+                                   StorageNodeDown, WriteUnavailable,
+                                   make_vseq, replica_nodes, split_vseq)
 
 # message types the transport may re-issue transparently after a
 # reconnect: read-only (or seq-dedup'd maintenance) requests.  PUT and
 # DELETE are deliberately absent — a write gets ONE transport attempt
 # and then fails loudly into the redelivery queue, so a retry can never
-# materialize a write the caller saw fail.
+# materialize a write the caller saw fail.  LEASE and RECONCILE are
+# idempotent by construction (grants/seals are keyed by epoch and
+# monotone), so a replayed frame converges to the same state.
 _IDEMPOTENT = frozenset({
     wire.MSG_HELLO, wire.MSG_PING, wire.MSG_GET, wire.MSG_MULTIGET,
     wire.MSG_STATUS, wire.MSG_KEYS, wire.MSG_FEED_SINCE, wire.MSG_MAINT,
-    wire.MSG_PLACEMENTS, wire.MSG_STATE_PULL,
+    wire.MSG_PLACEMENTS, wire.MSG_STATE_PULL, wire.MSG_LEASE,
+    wire.MSG_RECONCILE,
 })
+
+
+class Backoff:
+    """One jittered exponential-backoff policy for every retry loop in
+    the client (transport redial, serial fallback, lease acquisition).
+    ``sleep`` blocks for the next delay — clipped to the remaining
+    deadline budget — and returns False *without sleeping* once the
+    budget is exhausted, so every loop is bounded by its caller's
+    deadline, never by an iteration count alone.  Full jitter
+    (0.5x–1.5x the nominal delay) decorrelates concurrent retriers —
+    with N writers hammering a recovering cell, synchronized retry
+    waves are exactly the failure mode this avoids."""
+
+    __slots__ = ("delay", "cap", "deadline", "rng")
+
+    def __init__(self, base: float, cap: float = 1.0,
+                 deadline: Optional[float] = None,
+                 rng: Optional[random.Random] = None):
+        self.delay = max(1e-4, base)
+        self.cap = cap
+        self.deadline = deadline
+        self.rng = rng if rng is not None else random.Random()
+
+    def sleep(self, deadline: Optional[float] = None) -> bool:
+        if deadline is None:
+            deadline = self.deadline
+        d = self.delay * (0.5 + self.rng.random())
+        if deadline is not None:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                return False
+            d = min(d, remaining)
+        time.sleep(d)
+        self.delay = min(self.delay * 2, self.cap)
+        return True
 
 
 class _Deadline(Exception):
@@ -218,8 +285,8 @@ class _NodeMux:
                 self.inflight_hwm = max(self.inflight_hwm, depth)
                 self.last_used = time.monotonic()
                 sock, gen = self.sock, self.gen
-        except wire.ProtocolMismatch:
-            raise
+        except (wire.ProtocolMismatch, wire.AuthFailed):
+            raise  # typed handshake failures: never masked as "down"
         except (OSError, wire.WireError) as e:
             raise NodeUnavailable(
                 f"cell {self.node} @ {self.store.addrs[self.node]}: {e}"
@@ -343,9 +410,10 @@ class RemoteDeltaStore(DeltaStore):
                  pool_bytes: int = DEFAULT_POOL_BYTES,
                  timeout: float = 5.0, retries: int = 2,
                  backoff: float = 0.05, suspect_ttl: float = 2.0,
-                 require_full_attach: bool = True,
                  pipeline: bool = True, window: int = 32,
-                 idle_ttl: float = 30.0):
+                 idle_ttl: float = 30.0, lease_ttl: float = 2.0,
+                 auth_key: Optional[str] = None,
+                 writer_id: Optional[str] = None):
         super().__init__(m=len(addrs), r=r, backend="mem", fmt=fmt,
                          pool_bytes=pool_bytes)
         self.backend = "remote"
@@ -356,6 +424,9 @@ class RemoteDeltaStore(DeltaStore):
         self.suspect_ttl = suspect_ttl
         self.window = max(1, window)
         self.idle_ttl = idle_ttl
+        self.lease_ttl = max(0.05, lease_ttl)
+        self.auth_key = auth_key.encode() if auth_key else None
+        self.writer_id = writer_id or uuid.uuid4().hex[:12]
         self._pipeline = pipeline
         self._suspects: Dict[int, float] = {}
         # serial fallback pool: (socket, last-checkin time) per node
@@ -366,36 +437,28 @@ class RemoteDeltaStore(DeltaStore):
                        for j in range(len(addrs))]
         self._req_id = 0
         self._wlock = threading.Lock()
-        # per-node redelivery queues: (seq, msg_type, body) of replica
-        # writes that node missed, drained in seq order before the node
+        # per-node redelivery queues: (vseq, msg_type, body) of replica
+        # writes that node missed, drained in vseq order before the node
         # serves any further read/write from this client (gap repair)
         self._pending: List[List[Tuple[int, int, bytes]]] = [[] for _ in addrs]
+        # writer-lease state, all guarded by _wlock: the lane this
+        # writer stamps (epoch 0 = no lease yet), its lane-local seq,
+        # the client-side lease validity horizon, and the degraded flag
+        # (True: no lease AND no quorum — writes fail fast until the
+        # renewal thread re-acquires)
+        self._seq = 0
+        self._epoch = 0
+        self._lease_deadline = 0.0
+        self._degraded = False
+        self._max_epoch_seen = 0
         self._closed = threading.Event()
         self._reaper = threading.Thread(target=self._reap_loop,
                                         name="remote-store-reaper",
                                         daemon=True)
         self._reaper.start()
-        # resume the global write sequence from the cluster's high-water
-        # mark, so a fresh client attaching can never stamp a seq the
-        # feeds have already seen (which dedupe would silently drop).
-        # The mark is only trustworthy if EVERY cell answered — an
-        # unreachable cell could be the sole holder of the newest seqs.
-        self._seq = 0
-        unreachable: List[int] = []
-        for i in range(self.m):
-            try:
-                _, last_seq = struct.unpack(
-                    "<BQ", self._request(i, wire.MSG_PING, b"", retries=0))
-                self._seq = max(self._seq, last_seq)
-            except NodeUnavailable:
-                unreachable.append(i)
-                self._mark_unavailable(i)
-        if unreachable and require_full_attach:
-            self.close()
-            raise StorageNodeDown(
-                f"cells {unreachable} unreachable at attach: the write-seq "
-                f"high-water mark cannot be resumed safely (pass "
-                f"require_full_attach=False for a degraded attach)")
+        self._lease_thread = threading.Thread(
+            target=self._lease_loop, name="remote-store-lease", daemon=True)
+        self._lease_thread.start()
 
     # ---- connection management ----
     def _dial(self, node: int) -> socket.socket:
@@ -405,11 +468,25 @@ class RemoteDeltaStore(DeltaStore):
         sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
         wire.send_frame(sock, wire.MSG_HELLO, 0)
         reply = wire.recv_frame(sock)
+        if reply.msg_type == wire.MSG_AUTH:
+            # HELLO challenge: prove the shared secret before anything
+            # else is served.  No key configured -> typed AuthFailed
+            # (retrying cannot help; never masked as NodeUnavailable).
+            if self.auth_key is None:
+                sock.close()
+                raise wire.AuthFailed(
+                    f"cell {node} requires auth (pass auth_key=...)")
+            mac = hmac.new(self.auth_key, reply.body,
+                           hashlib.sha256).digest()
+            wire.send_frame(sock, wire.MSG_AUTH, 0, mac)
+            reply = wire.recv_frame(sock)
         if reply.msg_type == wire.MSG_ERR:
             code, msg = wire.unpack_err(reply.body)
             sock.close()
             if code == wire.ERR_VERSION:
                 raise wire.ProtocolMismatch(msg)
+            if code == wire.ERR_AUTH_FAILED:
+                raise wire.AuthFailed(msg)
             raise wire.RemoteError(code, msg)
         if reply.msg_type != wire.MSG_HELLO:
             sock.close()
@@ -457,6 +534,7 @@ class RemoteDeltaStore(DeltaStore):
                     self._conns[node] = live
 
     def close(self) -> None:
+        self._release_lease()
         self._closed.set()
         for mux in self._muxes:
             mux.close()
@@ -477,6 +555,10 @@ class RemoteDeltaStore(DeltaStore):
             raise wire.ProtocolMismatch(msg)
         if code == wire.ERR_KEY_MISSING:
             raise KeyMissing(msg)
+        if code == wire.ERR_LEASE_FENCED:
+            raise wire.LeaseFenced(msg)
+        if code == wire.ERR_AUTH_FAILED:
+            raise wire.AuthFailed(msg)
         raise wire.RemoteError(code, msg)
 
     def _request(self, node: int, msg_type: int, body: bytes,
@@ -499,7 +581,7 @@ class RemoteDeltaStore(DeltaStore):
                                         deadline)
         retries = self.retries if retries is None else retries
         attempts = (retries + 1) if msg_type in _IDEMPOTENT else 1
-        delay = self.backoff
+        bo = Backoff(self.backoff, deadline=deadline)
         mux = self._muxes[node]
         last: Exception = NodeUnavailable(f"cell {node}")
         for _ in range(attempts):
@@ -509,11 +591,8 @@ class RemoteDeltaStore(DeltaStore):
                 break
             except NodeUnavailable as e:
                 last = e
-                remaining = deadline - time.monotonic()
-                if remaining <= 0:
+                if not bo.sleep():
                     break
-                time.sleep(min(delay, remaining))
-                delay = min(delay * 2, 1.0)
                 continue
             try:
                 ev = fut.next(deadline)
@@ -524,11 +603,8 @@ class RemoteDeltaStore(DeltaStore):
                     f"({self.timeout}s from enqueue) expired") from None
             if ev[0] == "err":
                 last = ev[1]
-                remaining = deadline - time.monotonic()
-                if remaining <= 0:
+                if not bo.sleep():
                     break
-                time.sleep(min(delay, remaining))
-                delay = min(delay * 2, 1.0)
                 continue
             assert ev[0] == "end", f"unexpected stream event {ev[0]}"
             return self._map_reply(ev[1], ev[2])
@@ -542,7 +618,7 @@ class RemoteDeltaStore(DeltaStore):
         baseline; per-attempt socket timeouts are clipped to the
         remaining enqueue budget."""
         retries = self.retries if retries is None else retries
-        delay = self.backoff
+        bo = Backoff(self.backoff, deadline=deadline)
         last: Exception = NodeUnavailable(f"cell {node}")
         for _ in range(retries + 1):
             remaining = deadline - time.monotonic()
@@ -561,8 +637,9 @@ class RemoteDeltaStore(DeltaStore):
                     self.stats.rt_serial += 1
                 self._checkin(node, sock)
                 return self._map_reply(reply.msg_type, reply.body)
-            except (wire.ProtocolMismatch, wire.RemoteError, KeyMissing):
-                raise
+            except (wire.ProtocolMismatch, wire.AuthFailed, wire.LeaseFenced,
+                    wire.RemoteError, KeyMissing):
+                raise  # the cell answered: retrying cannot change it
             except (OSError, wire.WireError) as e:
                 if sock is not None:
                     try:
@@ -570,11 +647,8 @@ class RemoteDeltaStore(DeltaStore):
                     except OSError:
                         pass
                 last = e
-                remaining = deadline - time.monotonic()
-                if remaining <= 0:
+                if not bo.sleep():
                     break
-                time.sleep(min(delay, remaining))
-                delay = min(delay * 2, 1.0)
         raise NodeUnavailable(
             f"cell {node} @ {self.addrs[node]}: {last}") from last
 
@@ -625,6 +699,15 @@ class RemoteDeltaStore(DeltaStore):
             _seq, mtype, body = q[0]
             try:
                 self._request(node, mtype, body)
+            except wire.LeaseFenced:
+                # the record's lane was sealed while it sat queued: the
+                # reconciliation that sealed it already anti-entropied
+                # every record that mattered, so this copy is moot —
+                # drop it, or the node stays gap-known forever
+                q.pop(0)
+                with self._lock:
+                    self.stats.fence_drops += 1
+                continue
             except NodeUnavailable:
                 self._mark_unavailable(node)
                 return False
@@ -635,21 +718,228 @@ class RemoteDeltaStore(DeltaStore):
                 self.stats.redelivered += 1
         return True
 
+    # ---- writer lease lifecycle ----
+    def _lease_body(self, op: int, epoch: int,
+                    final_seq: Optional[int] = None,
+                    peers: bool = False) -> bytes:
+        body = (struct.pack("<BQ", op, epoch)
+                + wire.pack_str(self.writer_id))
+        if final_seq is not None:
+            body += struct.pack("<Q", final_seq)
+        if peers:
+            body += wire.pack_peers(self.addrs)
+        return body
+
+    def _lease_quorum(self) -> int:
+        return self.m // 2 + 1
+
+    def _acquire_lease_locked(self, deadline: float) -> None:
+        """Acquire a fresh fencing epoch from a cell quorum (caller
+        holds ``_wlock``).  Proposes past the highest epoch seen and,
+        on a denied round, past the highest epoch the denials revealed
+        — two racing writers converge in one extra round.  The ACQUIRE
+        body carries the full address list so every cell learns the
+        topology reconciliation will later anti-entropy across.  Raises
+        ``WriteUnavailable`` once the deadline budget is exhausted
+        without a quorum."""
+        quorum = self._lease_quorum()
+        bo = Backoff(self.backoff, deadline=deadline)
+        propose = max(self._max_epoch_seen, self._epoch) + 1
+        while True:
+            grants = 0
+            body = self._lease_body(wire.LEASE_ACQUIRE, propose, peers=True)
+            for j in range(self.m):
+                try:
+                    rep = self._request(j, wire.MSG_LEASE, body, retries=0,
+                                        deadline=deadline)
+                except (NodeUnavailable, wire.RemoteError):
+                    self._mark_unavailable(j)
+                    continue
+                granted, max_epoch = struct.unpack_from("<BQ", rep, 0)
+                self._max_epoch_seen = max(self._max_epoch_seen, max_epoch)
+                grants += granted
+            if grants >= quorum:
+                self._epoch = propose
+                self._max_epoch_seen = max(self._max_epoch_seen, propose)
+                self._seq = 0  # a fresh lane starts empty: no seq resume
+                self._degraded = False
+                self._lease_deadline = time.monotonic() + self.lease_ttl
+                with self._lock:
+                    self.stats.lease_acquires += 1
+                return
+            propose = max(self._max_epoch_seen, propose) + 1
+            if not bo.sleep():
+                self._degraded = True
+                raise WriteUnavailable(
+                    f"writer lease: no quorum ({grants}/{quorum} grants, "
+                    f"m={self.m}) — write plane degraded to read-only; "
+                    f"re-acquiring in the background")
+
+    def _ensure_lease_locked(self) -> None:
+        """Write-path gate (caller holds ``_wlock``): a live lease
+        passes immediately; a degraded writer fails FAST with the typed
+        ``WriteUnavailable`` (no network — the renewal thread owns
+        re-acquisition); anything else (first write, lapsed or fenced
+        lease) acquires synchronously within one timeout budget."""
+        if self._epoch and not self._degraded \
+                and time.monotonic() < self._lease_deadline:
+            return
+        if self._degraded:
+            raise WriteUnavailable(
+                "write plane degraded: no writer-lease quorum (reads keep "
+                "serving; writes resume once a quorum returns)")
+        self._acquire_lease_locked(time.monotonic() + self.timeout)
+
+    def _renew_locked(self, deadline: float) -> bool:
+        quorum = self._lease_quorum()
+        grants = 0
+        body = self._lease_body(wire.LEASE_RENEW, self._epoch)
+        for j in range(self.m):
+            try:
+                rep = self._request(j, wire.MSG_LEASE, body, retries=0,
+                                    deadline=deadline)
+            except (NodeUnavailable, wire.RemoteError):
+                continue
+            granted, max_epoch = struct.unpack_from("<BQ", rep, 0)
+            self._max_epoch_seen = max(self._max_epoch_seen, max_epoch)
+            grants += granted
+        if grants >= quorum:
+            self._lease_deadline = time.monotonic() + self.lease_ttl
+            with self._lock:
+                self.stats.lease_renewals += 1
+            return True
+        return False
+
+    def _invalidate_lease_locked(self) -> None:
+        """A cell fenced our epoch: the lane was sealed (this writer was
+        presumed dead).  Drop the lease WITHOUT degrading — the next
+        write re-acquires a fresh epoch synchronously."""
+        self._lease_deadline = 0.0
+        self._degraded = False
+        with self._lock:
+            self.stats.lease_fenced += 1
+
+    def _lease_loop(self) -> None:
+        """Background renewal: every ``lease_ttl/3`` renew a held lease
+        (writes also extend it, so this mostly matters when idle),
+        degrade to read-only when the lease expires without a quorum,
+        and — while degraded — keep trying to re-acquire so writes
+        resume automatically when the quorum returns."""
+        interval = self.lease_ttl / 3
+        while not self._closed.wait(interval):
+            if not self._wlock.acquire(timeout=interval):
+                continue  # a write holds the lock — it IS the heartbeat
+            try:
+                budget = time.monotonic() + min(self.timeout,
+                                                self.lease_ttl)
+                if self._degraded:
+                    try:
+                        self._acquire_lease_locked(budget)
+                    except WriteUnavailable:
+                        pass
+                    continue
+                if not self._epoch:
+                    continue  # never written: nothing to maintain
+                if not self._renew_locked(budget) \
+                        and time.monotonic() >= self._lease_deadline:
+                    self._degraded = True
+            finally:
+                self._wlock.release()
+
+    def _release_lease(self) -> None:
+        """Best-effort clean exit: seal our lane at its final seq so the
+        cells needn't wait out the TTL.  Only safe — and only attempted
+        — when every own-lane redelivery has drained (a RELEASE seal
+        asserts the lane is replica-complete up to ``final_seq``); a
+        writer exiting with queued records leaves the TTL + orphan-seq
+        reconciliation to seal the lane instead."""
+        try:
+            with self._wlock:
+                if not self._epoch or self._degraded:
+                    return
+                for q in self._pending:
+                    for vseq, _, _ in q:
+                        if split_vseq(vseq)[0] == self._epoch:
+                            return
+                body = self._lease_body(wire.LEASE_RELEASE, self._epoch,
+                                        final_seq=self._seq)
+                for j in range(self.m):
+                    try:
+                        self._request(j, wire.MSG_LEASE, body, retries=0)
+                    except (NodeUnavailable, wire.WireError):
+                        continue
+                self._epoch = 0
+                self._lease_deadline = 0.0
+        except Exception:  # noqa: BLE001 — close() must never fail on this
+            pass
+
+    def lease_status(self) -> Dict:
+        """This writer's lane as the client sees it: epoch, lane seq,
+        degraded flag, and how much lease validity remains."""
+        with self._wlock:
+            return {"writer_id": self.writer_id, "epoch": self._epoch,
+                    "seq": self._seq, "degraded": self._degraded,
+                    "remaining": max(0.0, self._lease_deadline
+                                     - time.monotonic())}
+
+    def reconcile_lane(self, epoch: int, force: bool = False) -> int:
+        """Operator-driven orphan-seq reconciliation for one lane:
+        query every cell's lane high-water mark, have every cell
+        anti-entropy its gaps from the peer list (prepare: while every
+        feed is still intact), then seal the lane at the max and
+        broadcast.  Requires every cell reachable — sealing asserts
+        replica-completeness, which a partial view cannot prove — and,
+        unless ``force``, refuses while any cell still sees a live
+        lease.  ``force`` fences a *live* writer deliberately (the
+        stale-writer drill: its next write gets ``LeaseFenced``).
+        Returns the seal point."""
+        marks: List[int] = []
+        for j in range(self.m):
+            rep = self._request(
+                j, wire.MSG_RECONCILE,
+                struct.pack("<BQ", wire.RECONCILE_QUERY, epoch))
+            lane_seq, seal, has_seal, live = struct.unpack_from(
+                "<QQBB", rep, 0)
+            if live and not force:
+                raise StorageNodeDown(
+                    f"lane {epoch} still holds a live lease on cell {j}; "
+                    f"pass force=True to fence it anyway")
+            marks.append(lane_seq)
+            if has_seal:
+                marks.append(seal)
+        prep = (struct.pack("<BQ", wire.RECONCILE_PREPARE, epoch)
+                + wire.pack_peers(self.addrs))
+        for j in range(self.m):
+            rep = self._request(j, wire.MSG_RECONCILE, prep)
+            marks.append(struct.unpack_from("<Q", rep, 0)[0])
+        seal = max(marks)
+        body = (struct.pack("<BQQ", wire.RECONCILE_SEAL, epoch, seal)
+                + wire.pack_peers(self.addrs))
+        for j in range(self.m):
+            self._request(j, wire.MSG_RECONCILE, body)
+        return seal
+
     # ---- replica-ack watermark (feed truncation) ----
     def _ack_watermark_locked(self, exclude_current: bool = False) -> int:
-        """Highest seq S such that every record this client stamped with
-        seq <= S was accepted by EVERY replica cell it belongs to: every
-        fan-out either acked on all replicas or queued the misses, so S
-        is ``_seq`` clamped below the oldest queued redelivery.  Caller
-        holds ``_wlock``.  ``exclude_current`` backs off by one for the
-        write being fanned out right now (its own acks are not in yet).
-        Cells truncate their feeds up to the watermark — see the module
-        docstring for the hard-killed-writer residual."""
+        """Highest OWN-LANE seq S such that every record this client
+        stamped with lane seq <= S was accepted by EVERY replica cell it
+        belongs to: every fan-out either acked on all replicas or queued
+        the misses, so S is ``_seq`` clamped below the oldest own-lane
+        queued redelivery.  Returned as a vseq — cells split it and
+        advance only this lane's ack coverage, so one writer's watermark
+        can never certify (or strand) another writer's lane.  Queued
+        records from a *previous* epoch of this client are ignored: the
+        watermark asserts nothing about sealed lanes.  Caller holds
+        ``_wlock``.  ``exclude_current`` backs off by one for the write
+        being fanned out right now (its own acks are not in yet)."""
         base = self._seq - (1 if exclude_current else 0)
         for q in self._pending:
-            if q:
-                base = min(base, q[0][0] - 1)
-        return max(0, base)
+            for vseq, _, _ in q:
+                e, s = split_vseq(vseq)
+                if e == self._epoch:
+                    base = min(base, s - 1)
+                    break  # queues are vseq-ordered: first hit is min
+        return make_vseq(self._epoch, max(0, base))
 
     def ack_watermark(self) -> int:
         with self._wlock:
@@ -705,14 +995,28 @@ class RemoteDeltaStore(DeltaStore):
         raised."""
         acked: List[bytes] = []
         missed: List[int] = []
+        fenced: Optional[wire.LeaseFenced] = None
         for node in self.replicas(key):
             if self._health_ok(node) and self._drain_pending(node):
                 try:
                     acked.append(self._request(node, msg_type, body))
                     continue
+                except wire.LeaseFenced as e:
+                    fenced = e  # lane sealed there: do NOT queue a copy
+                    continue
                 except NodeUnavailable:
                     self._mark_unavailable(node)
             missed.append(node)
+        if fenced is not None:
+            # our epoch was reconciled away (this writer was presumed
+            # dead).  Invalidate the lease so the next write re-acquires
+            # a fresh epoch.  With zero acks the write plainly failed —
+            # surface the typed fence.  With partial acks the record IS
+            # durable (the accepting cell's copy rides the seal upward
+            # when reconciliation reaches it), so the write stands.
+            self._invalidate_lease_locked()
+            if not acked:
+                raise fenced
         if not acked:
             raise StorageNodeDown(f"all replica cells down for {key}")
         for node in missed:
@@ -721,13 +1025,18 @@ class RemoteDeltaStore(DeltaStore):
 
     def put_encoded(self, key: DeltaKey, blob: bytes, raw_bytes: int):
         with self._wlock:
+            self._ensure_lease_locked()
             self._seq += 1
+            vseq = make_vseq(self._epoch, self._seq)
             body = (wire.pack_key(key)
-                    + struct.pack("<QQ", self._seq, raw_bytes)
+                    + struct.pack("<QQ", vseq, raw_bytes)
                     + wire.pack_blob(blob)
                     + struct.pack("<Q",
                                   self._ack_watermark_locked(True)))
-            self._fan_out(key, self._seq, wire.MSG_PUT, body)
+            acked = self._fan_out(key, vseq, wire.MSG_PUT, body)
+            if len(acked) >= self._lease_quorum():
+                # a quorum saw the write: it doubles as the heartbeat
+                self._lease_deadline = time.monotonic() + self.lease_ttl
         if self.pool is not None:
             self.pool.invalidate(key)
         with self._lock:
@@ -743,12 +1052,16 @@ class RemoteDeltaStore(DeltaStore):
         the cluster), so it raises ``StorageNodeDown`` with the local
         accounting untouched instead of silently 'succeeding'."""
         with self._wlock:
+            self._ensure_lease_locked()
             self._seq += 1
-            body = (wire.pack_key(key) + struct.pack("<Q", self._seq)
+            vseq = make_vseq(self._epoch, self._seq)
+            body = (wire.pack_key(key) + struct.pack("<Q", vseq)
                     + struct.pack("<Q",
                                   self._ack_watermark_locked(True)))
-            replies = self._fan_out(key, self._seq, wire.MSG_DELETE, body)
+            replies = self._fan_out(key, vseq, wire.MSG_DELETE, body)
             existed = any(bool(rep[0]) for rep in replies)
+            if len(replies) >= self._lease_quorum():
+                self._lease_deadline = time.monotonic() + self.lease_ttl
         if self.pool is not None:
             self.pool.invalidate(key)
         with self._lock:
@@ -953,7 +1266,7 @@ class RemoteDeltaStore(DeltaStore):
         subset; transport failure -> ``NodeUnavailable``."""
         deadline = time.monotonic() + self.timeout
         body = self._mg_body(pending, flist)
-        delay = self.backoff
+        bo = Backoff(self.backoff, deadline=deadline)
         last: Exception = NodeUnavailable(f"cell {node}")
         for _ in range(self.retries + 1):
             remaining = deadline - time.monotonic()
@@ -983,7 +1296,8 @@ class RemoteDeltaStore(DeltaStore):
                     self._map_reply(reply.msg_type, reply.body)
                     raise wire.FrameError(
                         f"unexpected terminal frame {reply.msg_type}")
-            except (wire.ProtocolMismatch, wire.RemoteError, KeyMissing):
+            except (wire.ProtocolMismatch, wire.AuthFailed,
+                    wire.RemoteError, KeyMissing):
                 raise
             except (OSError, wire.WireError) as e:
                 if sock is not None:
@@ -992,11 +1306,8 @@ class RemoteDeltaStore(DeltaStore):
                     except OSError:
                         pass
                 last = e
-                remaining = deadline - time.monotonic()
-                if remaining <= 0:
+                if not bo.sleep():
                     break
-                time.sleep(min(delay, remaining))
-                delay = min(delay * 2, 1.0)
         raise NodeUnavailable(
             f"cell {node} @ {self.addrs[node]}: {last}") from last
 
@@ -1143,12 +1454,16 @@ class RemoteDeltaStore(DeltaStore):
         import json
         return json.loads(self._request(node, wire.MSG_STATUS, b""))
 
-    def maintain(self, node: int) -> bool:
-        """Ask one cell to run a background vacuum pass (MSG_MAINT).
-        The cell acks immediately and keeps serving while the pass runs;
-        returns whether a new pass was started (False: already running).
-        Progress/results surface in ``cell_status(node)["maint"]``."""
-        reply = self._request(node, wire.MSG_MAINT, b"")
+    def maintain(self, node: int, canonical: bool = False) -> bool:
+        """Ask one cell to run a vacuum pass (MSG_MAINT).  The default
+        background pass acks immediately and keeps serving while it
+        runs; ``canonical=True`` instead runs a SYNCHRONOUS canonical
+        vacuum — chunk records reordered by key, the pass that makes
+        replica files byte-identical under multi-writer interleaving.
+        Returns whether a pass ran/started (False: one already
+        running).  Results surface in ``cell_status(node)["maint"]``."""
+        body = (struct.pack("<B", wire.MAINT_CANON) if canonical else b"")
+        reply = self._request(node, wire.MSG_MAINT, body)
         (started,) = struct.unpack_from("<B", reply, 0)
         return bool(started)
 

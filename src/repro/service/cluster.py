@@ -51,6 +51,11 @@ class ClusterSpec:
     workers: int = 4
     inflight_cap: int = 32
     feed_keep: int = 256
+    # writer-lease TTL (cells sweep expired lanes at ttl/2; clients
+    # renew at ttl/3) and the optional shared wire-auth secret — both
+    # flow to every cell AND to client() so the cluster stays coherent
+    lease_ttl: float = 2.0
+    auth_key: Optional[str] = None
 
     def cell_root(self, node: int) -> Optional[str]:
         if self.backend == "mem":
@@ -91,6 +96,8 @@ class LocalCluster:
     def client(self, **kw) -> RemoteDeltaStore:
         kw.setdefault("r", self.spec.r)
         kw.setdefault("fmt", self.spec.fmt)
+        kw.setdefault("lease_ttl", self.spec.lease_ttl)
+        kw.setdefault("auth_key", self.spec.auth_key)
         return RemoteDeltaStore(self.addrs, **kw)
 
     def kill(self, node: int) -> None:
@@ -151,7 +158,9 @@ class LocalCluster:
                                host=spec.host, port=port,
                                workers=spec.workers,
                                inflight_cap=spec.inflight_cap,
-                               feed_keep=spec.feed_keep)
+                               feed_keep=spec.feed_keep,
+                               lease_ttl=spec.lease_ttl,
+                               auth_key=spec.auth_key)
             self.ports[node] = cell.start(peers=peers)
             self._cells[node] = cell
             return
@@ -169,7 +178,10 @@ class LocalCluster:
                "--host", spec.host, "--port", str(port),
                "--workers", str(spec.workers),
                "--inflight-cap", str(spec.inflight_cap),
-               "--feed-keep", str(spec.feed_keep)]
+               "--feed-keep", str(spec.feed_keep),
+               "--lease-ttl", str(spec.lease_ttl)]
+        if spec.auth_key:
+            cmd += ["--auth-key", spec.auth_key]
         if spec.backend == "file":
             cmd += ["--root", spec.cell_root(node)]
         if spec.fmt:

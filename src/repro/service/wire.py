@@ -47,24 +47,53 @@ Protocol v2 (pipelining + feed compaction):
   optional — an empty PING body or a v1-shaped write body means "no
   ack claim".
 * **Feed floor + full-state transfer.** FEED_SINCE replies are
-  prefixed with ``<Q feed_floor>`` (the highest truncated seq; records
-  at or below it are no longer in the feed).  A peer that needs
-  records below the floor bootstraps via ``MSG_PLACEMENTS`` (list the
-  cell's chunk placements) + ``MSG_STATE_PULL`` (verbatim chunk +
-  extent file bytes for one placement, plus per-key accounting) —
-  chunk files are append-ordered pure functions of the record set, so
-  copying them preserves the byte-identical-convergence property.
+  prefixed with the cell's per-lane floor map (the highest truncated
+  seq per writer lane; records at or below their lane's floor are no
+  longer in the feed).  A peer that needs records below a floor
+  bootstraps via ``MSG_PLACEMENTS`` (list the cell's chunk placements)
+  + ``MSG_STATE_PULL`` (verbatim chunk + extent file bytes for one
+  placement, plus per-key accounting) — chunk files are pure functions
+  of the record set, so copying them preserves the
+  byte-identical-convergence property.
+
+Protocol v3 (lease-fenced multi-writer):
+
+* **Versioned seqs.** Every write is stamped with a ``vseq`` — the
+  writer's fencing ``epoch`` and its lane-local ``seq`` packed into
+  one u64 (``kvstore.make_vseq``; numeric order == lexicographic
+  ``(epoch, seq)`` order).  N concurrent writers each own one epoch
+  lane; cells merge the lanes deterministically because every per-key
+  conflict resolves to the max vseq, whatever the arrival order.
+* **Writer leases.** ``MSG_LEASE`` carries acquire / renew / release
+  for a time-bounded writer lease: an epoch is granted iff it exceeds
+  every epoch the cell has seen (monotonic fencing), a write in lane
+  ``e`` refreshes lane ``e``'s lease (heartbeat piggybacked on
+  writes), and a write into a *sealed* lane above its seal point is
+  rejected with the typed ``ERR_LEASE_FENCED`` — never silently
+  applied.
+* **Orphan-seq reconciliation.** ``MSG_RECONCILE`` queries a lane's
+  replica high-water marks and broadcasts the agreed *seal*: cells
+  anti-entropy the dead lane from their peers up to the max
+  replica-acked record, fence the lane at that point, and advance the
+  lane's ack coverage so feed truncation resumes instead of stranding
+  the floor behind a hard-killed writer forever.
+* **Shared-secret auth (opt-in).** A cell configured with an auth key
+  answers HELLO with ``MSG_AUTH`` carrying a random nonce; the client
+  must reply ``MSG_AUTH`` with ``HMAC-SHA256(key, nonce)`` before any
+  other frame is served.  A wrong or missing response gets the typed
+  ``ERR_AUTH_FAILED`` and a closed connection.
 """
 from __future__ import annotations
 
 import socket
 import struct
 import zlib
-from typing import List, NamedTuple, Optional, Tuple
+from typing import Dict, List, NamedTuple, Optional, Tuple
 
-from repro.storage.kvstore import DeltaKey
+from repro.storage.kvstore import (DeltaKey,  # noqa: F401 — re-exported
+                                   make_vseq, split_vseq)
 
-PROTO_VERSION = 2
+PROTO_VERSION = 3
 FRAME_MAGIC = b"TW"
 HEADER = struct.Struct("<2sBBIII")  # magic, version, type, req_id, len, crc
 MAX_FRAME = 1 << 28  # 256 MiB: far above any block, far below a bomb
@@ -72,7 +101,7 @@ MAX_FRAME = 1 << 28  # 256 MiB: far above any block, far below a bomb
 (MSG_HELLO, MSG_OK, MSG_ERR, MSG_PING, MSG_GET, MSG_MULTIGET, MSG_PUT,
  MSG_DELETE, MSG_FEED_SINCE, MSG_STATUS, MSG_KEYS,
  MSG_MAINT, MSG_CHUNK, MSG_END, MSG_PLACEMENTS,
- MSG_STATE_PULL) = range(1, 17)
+ MSG_STATE_PULL, MSG_LEASE, MSG_RECONCILE, MSG_AUTH) = range(1, 20)
 
 # ERR body codes (pack_str'd): the client maps these back to the local
 # store's exception types so failure semantics match the local backend
@@ -84,6 +113,12 @@ ERR_VERSION = "VERSION"
 # cannot serve a full-state transfer (mem backend): caller must either
 # bootstrap from a file-backed replica or accept the typed failure
 ERR_FEED_TRUNCATED = "FEED_TRUNCATED"
+# write stamped into a sealed (fenced) lane above its seal point: the
+# writer's lease expired and a reconciliation pass closed the lane, or
+# a newer writer fenced it — the write must NOT be applied anywhere
+ERR_LEASE_FENCED = "LEASE_FENCED"
+# HELLO auth handshake failed: wrong or missing shared-secret HMAC
+ERR_AUTH_FAILED = "AUTH_FAILED"
 
 # change-feed record ops
 OP_PUT = 0
@@ -91,10 +126,32 @@ OP_DELETE = 1
 
 # MAINT body flags (an empty MAINT body means "vacuum only" — the v1
 # shape).  TRUNCATE forces a synchronous feed truncation up to the
-# cell's ack watermark regardless of backlog size, so benches/tests can
+# cell's ack coverage regardless of backlog size, so benches/tests can
 # reach a deterministic final feed state before comparing files.
+# CANON runs a *synchronous* canonical vacuum (chunk records reordered
+# by record key — the byte-identity anchor under multi-writer
+# interleave; see ``DeltaStore.vacuum(canonical=True)``).
 MAINT_VACUUM = 1
 MAINT_TRUNCATE = 2
+MAINT_CANON = 4
+
+# MSG_LEASE ops
+LEASE_ACQUIRE = 1
+LEASE_RENEW = 2
+LEASE_RELEASE = 3
+
+# MSG_RECONCILE ops.  PREPARE runs between QUERY and SEAL: every cell
+# anti-entropies its lane gaps from the peer list while every feed is
+# still intact — sealing truncates, so nobody may seal until the whole
+# cluster holds what it owns.
+RECONCILE_QUERY = 1
+RECONCILE_SEAL = 2
+RECONCILE_PREPARE = 3
+
+# auth handshake sizes: the server's random challenge and the client's
+# HMAC-SHA256 response
+AUTH_NONCE_LEN = 16
+AUTH_MAC_LEN = 32
 
 
 class WireError(RuntimeError):
@@ -121,6 +178,19 @@ class ProtocolMismatch(WireError):
 
 class ConnectionClosed(WireError):
     """Clean EOF between frames (peer went away)."""
+
+
+class LeaseFenced(WireError):
+    """A write carried an epoch whose lane is sealed at or below the
+    write's seq: the writer's lease expired (or a newer writer fenced
+    it) and reconciliation closed the lane.  The write was NOT applied;
+    the writer must degrade and re-acquire a fresh epoch."""
+
+
+class AuthFailed(WireError):
+    """The HELLO auth handshake failed: the cell requires a shared
+    secret this client lacks, the HMAC response was wrong, or the cell
+    refused an unauthenticated request."""
 
 
 class RemoteError(WireError):
@@ -345,13 +415,66 @@ def unpack_blob(buf: bytes, off: int) -> Tuple[bytes, int]:
     return bytes(buf[off:off + n]), off + n
 
 
+def pack_lanes(lanes: Dict[int, int]) -> bytes:
+    """Per-lane ``{epoch: seq}`` map (floor maps, seal maps, ack maps),
+    emitted in sorted epoch order so the bytes are a pure function of
+    the mapping — lane maps ride ``feed.base`` and the byte-identity
+    property extends to them."""
+    out = [struct.pack("<I", len(lanes))]
+    for epoch in sorted(lanes):
+        out.append(struct.pack("<QQ", epoch, lanes[epoch]))
+    return b"".join(out)
+
+
+def unpack_lanes(buf: bytes, off: int) -> Tuple[Dict[int, int], int]:
+    _need(buf, off, 4, "lane count")
+    (n,) = struct.unpack_from("<I", buf, off)
+    off += 4
+    lanes: Dict[int, int] = {}
+    for _ in range(n):
+        _need(buf, off, 16, "lane entry")
+        epoch, seq = struct.unpack_from("<QQ", buf, off)
+        off += 16
+        lanes[epoch] = seq
+    return lanes, off
+
+
+def pack_peers(peers: List[Tuple[str, int]]) -> bytes:
+    """Cluster address list: LEASE acquire and RECONCILE seal frames
+    carry it so cells learn the topology they need for lease-expiry
+    reconciliation (anti-entropy pulls peer feeds)."""
+    out = [struct.pack("<I", len(peers))]
+    for host, port in peers:
+        out.append(pack_str(host) + struct.pack("<H", port))
+    return b"".join(out)
+
+
+def unpack_peers(buf: bytes, off: int) -> Tuple[List[Tuple[str, int]], int]:
+    _need(buf, off, 4, "peer count")
+    (n,) = struct.unpack_from("<I", buf, off)
+    off += 4
+    peers: List[Tuple[str, int]] = []
+    for _ in range(n):
+        host, off = unpack_str(buf, off)
+        _need(buf, off, 2, "peer port")
+        (port,) = struct.unpack_from("<H", buf, off)
+        off += 2
+        peers.append((host, port))
+    return peers, off
+
+
 class FeedRecord(NamedTuple):
-    """One change-feed entry: a client-stamped globally monotonic ``seq``
-    plus the write it carries.  ``blob`` is the encoded block verbatim
-    (``raw_bytes`` rides along for storage accounting); DELETE records
-    carry an empty blob.  Replaying records in ``seq`` order through
-    ``put_encoded``/``delete`` reproduces a cell's chunk/extent files
-    byte for byte — the catch-up convergence property."""
+    """One change-feed entry: a client-stamped ``seq`` plus the write it
+    carries.  ``seq`` is a *vseq* — the writer's fencing epoch and its
+    lane-local counter packed into one u64 (``kvstore.make_vseq``), so
+    the u64 order is the cluster-wide (epoch, seq) total order; legacy
+    single-writer records live in epoch 0 unchanged.  ``blob`` is the
+    encoded block verbatim (``raw_bytes`` rides along for storage
+    accounting); DELETE records carry an empty blob.  Applying a record
+    set in vseq order — or any order, once per-key conflicts resolve to
+    the max vseq and a canonical vacuum pass orders the chunk bytes —
+    reproduces a cell's files byte for byte: the catch-up convergence
+    property, extended to N concurrent writer lanes."""
 
     seq: int
     op: int  # OP_PUT | OP_DELETE
@@ -403,20 +526,23 @@ def unpack_err(buf: bytes) -> Tuple[str, str]:
 
 class PlacementState(NamedTuple):
     """STATE_PULL reply for one ``(tsid, sid)`` placement: the replica's
-    chunk + extent file bytes *verbatim* (chunk files are append-ordered
-    pure functions of the applied record set, so copying them preserves
-    byte-identical convergence), plus the per-key accounting a restored
-    cell needs: live ``(key, raw, enc)`` sizes and the per-key max-seq
-    watermark (including deleted keys, whose watermark guards replays)."""
+    chunk + extent file bytes *verbatim* (chunk files are pure functions
+    of the applied record set, so copying them preserves byte-identical
+    convergence), plus the per-key accounting a restored cell needs:
+    live ``(key, raw, enc)`` sizes and the per-key max-vseq watermark
+    (including deleted keys, whose watermark guards replays), plus the
+    serving cell's per-lane floor and seal maps at pull time."""
 
-    floor: int  # serving cell's feed floor at pull time
+    floors: Dict[int, int]  # serving cell's per-lane feed floors
+    seals: Dict[int, int]   # serving cell's sealed (fenced) lanes
     chunk: bytes
     ext: bytes
     sizes: List[Tuple[DeltaKey, int, int]]
     key_seqs: List[Tuple[DeltaKey, int]]
 
     def pack(self) -> bytes:
-        out = [struct.pack("<Q", self.floor), pack_blob(self.chunk),
+        out = [pack_lanes(self.floors), pack_lanes(self.seals),
+               pack_blob(self.chunk),
                pack_blob(self.ext), struct.pack("<I", len(self.sizes))]
         for key, raw, enc in self.sizes:
             out.append(pack_key(key) + struct.pack("<QQ", raw, enc))
@@ -427,9 +553,9 @@ class PlacementState(NamedTuple):
 
     @staticmethod
     def unpack(buf: bytes) -> "PlacementState":
-        _need(buf, 0, 8, "state floor")
-        (floor,) = struct.unpack_from("<Q", buf, 0)
-        chunk, off = unpack_blob(buf, 8)
+        floors, off = unpack_lanes(buf, 0)
+        seals, off = unpack_lanes(buf, off)
+        chunk, off = unpack_blob(buf, off)
         ext, off = unpack_blob(buf, off)
         _need(buf, off, 4, "state size count")
         (n,) = struct.unpack_from("<I", buf, off)
@@ -451,7 +577,7 @@ class PlacementState(NamedTuple):
             (seq,) = struct.unpack_from("<Q", buf, off)
             off += 8
             key_seqs.append((key, seq))
-        return PlacementState(floor, chunk, ext, sizes, key_seqs)
+        return PlacementState(floors, seals, chunk, ext, sizes, key_seqs)
 
 
 def pack_placements(placements: List[Tuple[int, int]]) -> bytes:

@@ -71,8 +71,43 @@ def replica_nodes(tsid: int, sid: int, m: int, r: int) -> List[int]:
     return [(h + j) % m for j in range(r)]
 
 
+# ---------------------------------------------------------------------------
+# versioned sequence numbers: (epoch, seq) packed into one u64
+# ---------------------------------------------------------------------------
+
+# A write's version is ``(epoch, seq)``: ``epoch`` is the writer's
+# fencing epoch (one per writer-lease incarnation, granted by cell
+# quorum, strictly monotonic cluster-wide) and ``seq`` is that lane's
+# local counter starting at 1.  Packing epoch into the high bits makes
+# the numeric order of the u64 exactly the lexicographic (epoch, seq)
+# order — the cluster-wide total order that every per-key conflict
+# (concurrent writers, replays, redeliveries arriving in any
+# permutation) is resolved by.  Epoch 0 is the legacy unleased lane
+# (direct ``StorageCell.apply`` callers, pre-lease feeds).
+SEQ_BITS = 44
+SEQ_MASK = (1 << SEQ_BITS) - 1
+MAX_EPOCH = (1 << (64 - SEQ_BITS)) - 1
+
+
+def make_vseq(epoch: int, seq: int) -> int:
+    assert 0 <= epoch <= MAX_EPOCH and 0 <= seq <= SEQ_MASK
+    return (epoch << SEQ_BITS) | seq
+
+
+def split_vseq(vseq: int) -> Tuple[int, int]:
+    return vseq >> SEQ_BITS, vseq & SEQ_MASK
+
+
 class StorageNodeDown(RuntimeError):
     pass
+
+
+class WriteUnavailable(StorageNodeDown):
+    """The write plane is degraded: this writer holds no live lease and
+    cannot reach a cell quorum to acquire one, so writes fail *fast*
+    (no network attempt, no hang) while reads keep failing over.  The
+    client re-acquires automatically in the background; writes flow
+    again, under a fresh fencing epoch, once a quorum returns."""
 
 
 class NodeUnavailable(RuntimeError):
@@ -127,6 +162,15 @@ class StoreStats:
     rt_serial: int = 0
     rt_deadline_cancels: int = 0
     rt_reconnects: int = 0
+    # writer-lease lifecycle (remote store only): epochs acquired by
+    # quorum grant, quorum-confirmed renewals, writes refused by a cell
+    # because their lane was fenced (sealed under a newer epoch), and
+    # queued redeliveries dropped because redelivering them is forever
+    # futile (their lane sealed below them — restart catch-up repairs)
+    lease_acquires: int = 0
+    lease_renewals: int = 0
+    lease_fenced: int = 0
+    fence_drops: int = 0
     # encoded serve cache (file backend): projected blocks assembled once
     # and re-served byte-identical while their extent record is unmoved
     serve_hits: int = 0
@@ -142,6 +186,8 @@ class StoreStats:
         self.bytes_io = 0
         self.rt_pipelined = self.rt_serial = 0
         self.rt_deadline_cancels = self.rt_reconnects = 0
+        self.lease_acquires = self.lease_renewals = 0
+        self.lease_fenced = self.fence_drops = 0
         self.serve_hits = self.serve_misses = 0
 
 
@@ -1315,7 +1361,7 @@ class DeltaStore:
                 ks.add(DeltaKey(tsid, sid, did, int(pid)))
         return sorted(ks)
 
-    def vacuum(self) -> Dict[str, int]:
+    def vacuum(self, canonical: bool = False) -> Dict[str, int]:
         """File-backend chunk compaction: rewrite each chunk with only
         its live (non-tombstoned, non-superseded) records, dropping the
         garbage that append-only puts and tombstone deletes accumulate.
@@ -1326,7 +1372,16 @@ class DeltaStore:
         via the vacuum-generation check in the seek readers.  The rewrite
         goes through a temp file + ``os.replace`` so a crash mid-vacuum
         (``cell.vacuum`` fault point) leaves every chunk either fully old
-        or fully new — both readable.  Returns rewrite counters."""
+        or fully new — both readable.  Returns rewrite counters.
+
+        ``canonical=True`` additionally orders each rewritten chunk's
+        live records by record key instead of preserving their append
+        offsets, making the chunk bytes a pure function of the live
+        record *set* — the byte-identical-convergence anchor when N
+        concurrent writer lanes interleave differently per replica (the
+        default arrival-order rewrite is only deterministic under a
+        single writer).  Idempotent: a chunk already in canonical form
+        is left untouched."""
         out = {"chunks_scanned": 0, "chunks_rewritten": 0,
                "chunks_removed": 0, "bytes_before": 0, "bytes_after": 0}
         if self.backend != "file":
@@ -1364,8 +1419,10 @@ class DeltaStore:
                         parts: List[bytes] = []
                         new_cache: Dict[bytes, Tuple[int, int]] = {}
                         pos = 0
-                        for rec_key, (boff, blen) in sorted(
-                                cache.items(), key=lambda kv: kv[1][0]):
+                        order = (sorted(cache.items())  # by record key
+                                 if canonical else
+                                 sorted(cache.items(), key=lambda kv: kv[1][0]))
+                        for rec_key, (boff, blen) in order:
                             blob = data[boff:boff + blen]
                             if len(blob) != blen:
                                 continue  # torn extent: drop the record
@@ -1377,9 +1434,9 @@ class DeltaStore:
                             parts.append(rec)
                             pos += len(rec)
                         new_data = b"".join(parts)
-                        if len(new_data) == len(data):
+                        if new_data == data:
                             out["bytes_after"] += len(new_data)
-                            continue  # nothing dead: leave untouched
+                            continue  # already exact: leave untouched
                         tmp_c = cpath.parent / (cpath.name + ".tmp")
                         tmp_c.write_bytes(new_data)
                         ext_parts = []

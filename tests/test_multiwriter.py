@@ -1,0 +1,523 @@
+"""Lease-fenced multi-writer write plane.
+
+Families:
+
+* seeded interleave property tests — 2-3 writers' ``(epoch, seq)``
+  lanes applied to replicas in shuffled arrival orders must converge
+  (after a canonical vacuum) to files byte-identical to a single-order
+  oracle replay, with per-key winners = max combined vseq;
+* live multi-writer convergence — concurrent ``RemoteDeltaStore``
+  writers under distinct lease epochs against one cluster, verified
+  against the union of their acked-op logs;
+* fencing — a lane force-sealed under a live writer turns that
+  writer's next write into a typed ``LeaseFenced`` (never applied),
+  and the writer recovers under a fresh epoch;
+* quorum loss — writes degrade to fast typed ``WriteUnavailable``
+  while reads keep failing over, and the writer re-acquires
+  automatically once a quorum returns;
+* the stranded-seq regression — a SIGKILLed writer process freezes
+  its lane's ack watermark (feed truncation starves) until orphan-seq
+  reconciliation seals the lane and coverage advances past it, with
+  zero acked writes lost;
+* mid-reconcile crash points (``cell.reconcile``) — an aborted
+  reconciliation leaves nothing sealed and a retry converges;
+* shared-secret wire auth — wrong/missing keys and fuzzed MACs are
+  rejected with the typed ``AuthFailed`` and a closed connection.
+
+``REPRO_SEED_OFFSET`` shifts every schedule's seed so CI's stress job
+runs the same suite under genuinely distinct interleavings.
+"""
+import hashlib
+import os
+import socket
+import struct
+import subprocess
+import sys
+import threading
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import faultpoints
+from repro.service import (AuthFailed, ClusterSpec, LeaseFenced,
+                           LocalCluster, StorageCell, WriteUnavailable)
+from repro.service import wire
+from repro.service.client import RemoteDeltaStore
+from repro.service.stress import (encode_token, key_for, payload_arrays,
+                                  read_acked_log)
+from repro.storage.kvstore import (KeyMissing, StorageNodeDown, make_vseq,
+                                   replica_nodes, split_vseq)
+
+SEED_OFFSET = int(os.environ.get("REPRO_SEED_OFFSET", "0"))
+HOST = "127.0.0.1"
+
+
+def _lane_stream(epoch, n_ops, keyspace, seed):
+    """One writer's deterministic (epoch, seq) record stream over the
+    shared keyspace: PUTs with seeded payload tokens, every 7th op a
+    DELETE.  Token = epoch * 100_000 + seq, so the oracle can rebuild
+    any record's payload from its vseq alone."""
+    rng = np.random.RandomState(seed)
+    recs = []
+    for s in range(1, n_ops + 1):
+        key = key_for(int(rng.randint(0, keyspace)))
+        if s % 7 == 0:
+            recs.append(wire.FeedRecord(make_vseq(epoch, s),
+                                        wire.OP_DELETE, key, 0, b""))
+        else:
+            blob, raw = encode_token(key, epoch * 100_000 + s)
+            recs.append(wire.FeedRecord(make_vseq(epoch, s),
+                                        wire.OP_PUT, key, raw, blob))
+    return recs
+
+
+def _matches(got, token):
+    want = payload_arrays(token)
+    return (set(got) == set(want)
+            and all(np.array_equal(got[f], want[f]) for f in want))
+
+
+# ---------------------------------------------------------------------------
+# seeded interleave property tests vs a single-order oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.timeout(180)
+@pytest.mark.parametrize("seed", [101, 211, 307])
+def test_interleaved_lanes_converge_to_single_order_oracle(tmp_path, seed):
+    """Three lanes' streams, delivered to each replica in a different
+    shuffled order, must land every replica on the SAME state as an
+    oracle that applied the merged stream in vseq order — per-key
+    winners AND (after a canonical vacuum) chunk/extent file bytes."""
+    seed += SEED_OFFSET
+    lanes = [_lane_stream(e, 40, 10, seed * 7 + e) for e in (1, 2, 3)]
+    recs = [r for lane in lanes for r in lane]
+    order = sorted(recs, key=lambda r: r.seq)
+
+    def build(root, node, sequence):
+        cell = StorageCell(node_id=node, n_cells=2, r=2, backend="file",
+                           root=str(root), feed_keep=10**6)
+        for r in sequence:
+            cell.apply(r)
+        cell.store.vacuum(canonical=True)
+        return cell
+
+    def hashes(root):
+        return {str(p.relative_to(root)):
+                hashlib.sha256(p.read_bytes()).hexdigest()
+                for p in sorted(Path(root).rglob("*"))
+                if p.is_file() and p.suffix in (".tgi", ".tgx")}
+
+    rng = np.random.RandomState(seed)
+    winners = {}
+    for r in order:
+        winners[r.key] = r
+    for node in range(2):
+        shuffled = list(recs)
+        rng.shuffle(shuffled)
+        cell = build(tmp_path / f"shuf{node}", node, shuffled)
+        oracle = build(tmp_path / f"oracle{node}", node, order)
+        assert cell._key_seq == oracle._key_seq
+        assert cell._lane_seq == oracle._lane_seq == {1: 40, 2: 40, 3: 40}
+        got_h = hashes(tmp_path / f"shuf{node}")
+        assert got_h and got_h == hashes(tmp_path / f"oracle{node}")
+        for key, r in winners.items():
+            e, s = split_vseq(r.seq)
+            if r.op == wire.OP_PUT:
+                assert _matches(cell.store.get(key), e * 100_000 + s), key
+            else:
+                with pytest.raises(KeyMissing):
+                    cell.store.get(key)
+
+
+def test_fence_check_rejects_stale_epoch_write():
+    """The cell-level gate: a write above a lane's seal is refused with
+    the typed LeaseFenced; at-or-below the seal is a dup/gap-fill, and
+    the legacy lane 0 is never fenced."""
+    cell = StorageCell(node_id=0, n_cells=1, r=1, backend="mem")
+    key = key_for(0)
+    blob, raw = encode_token(key, 1)
+    cell.apply(wire.FeedRecord(make_vseq(3, 1), wire.OP_PUT, key, raw, blob))
+    cell.apply_seal(3, 1)
+    with pytest.raises(LeaseFenced):
+        cell.fence_check(make_vseq(3, 2), "stale-writer")
+    cell.fence_check(make_vseq(3, 1), "stale-writer")  # dup: dedupe's job
+    cell.fence_check(make_vseq(0, 5))  # legacy single-writer lane
+    assert cell.fenced_writes == 1
+
+
+@pytest.mark.timeout(120)
+def test_mid_reconcile_crash_leaves_lane_open_and_retry_converges(tmp_path):
+    """cell.reconcile fires after anti-entropy, before the seal
+    persists: an aborted pass must seal NOTHING anywhere, and a clean
+    retry seals both replicas at the merged high-water mark, resuming
+    feed truncation past the dead lane."""
+    b = StorageCell(node_id=1, n_cells=2, r=2, backend="file",
+                    root=str(tmp_path / "b"), feed_keep=4)
+    b.start()
+    a = StorageCell(node_id=0, n_cells=2, r=2, backend="file",
+                    root=str(tmp_path / "a"), feed_keep=4)
+    a.start(peers=[(HOST, b.port)])
+    try:
+        recs = _lane_stream(1, 24, 8, 5 + SEED_OFFSET)
+        for i, r in enumerate(recs):
+            if i % 5 != 3:  # a missed some of the dead writer's records
+                a.apply(r)
+            if i % 5 != 1:  # ...and b missed a different subset
+                b.apply(r)
+        with faultpoints.scoped("cell.reconcile", 1, "raise"):
+            with pytest.raises(faultpoints.FaultError):
+                a.reconcile_lane(1)
+        assert a._sealed.get(1) is None and b._sealed.get(1) is None
+        assert a.reconcile_lane(1) is True
+        assert a._sealed[1] == b._sealed[1] == 24
+        assert a._lane_seq[1] == b._lane_seq[1] == 24  # anti-entropied
+        assert a._key_seq == b._key_seq
+        # coverage advanced past the dead lane: truncation resumed
+        assert a._floors[1] == b._floors[1] == 24
+    finally:
+        a.stop()
+        b.stop()
+
+
+# ---------------------------------------------------------------------------
+# live clusters: concurrent writers, fencing, quorum loss
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.timeout(180)
+def test_three_concurrent_writers_converge_on_max_vseq_winners(tmp_path):
+    """Three leased writers hammer overlapping keys through one thread
+    cluster; afterwards every key serves the max-(epoch, seq) winner
+    across the union of the writers' acked-op logs."""
+    seed = 5 + SEED_OFFSET
+    spec = ClusterSpec(n_cells=3, r=2, backend="file",
+                       root=str(tmp_path / "cluster"), lease_ttl=5.0)
+    with LocalCluster(spec, mode="thread") as cl:
+        logs, errs = {}, []
+
+        def work(wseed):
+            rng = np.random.default_rng(wseed)
+            st = cl.client(timeout=5.0, pool_bytes=0,
+                           writer_id=f"w{wseed}")
+            rows = []
+            try:
+                for i in range(60):
+                    key = key_for(int(rng.integers(0, 10)))
+                    token = wseed * 1_000_003 + i
+                    if i % 10 == 9:
+                        st.delete(key)
+                        token = 0
+                    else:
+                        blob, raw = encode_token(key, token)
+                        st.put_encoded(key, blob, raw)
+                    ls = st.lease_status()
+                    rows.append(("DEL" if not token else "PUT", key,
+                                 make_vseq(ls["epoch"], ls["seq"]), token))
+                st.quiesce()
+            except Exception as exc:  # surfaced to the main thread
+                errs.append((wseed, repr(exc)))
+            finally:
+                st.close()
+            logs[wseed] = rows
+
+        threads = [threading.Thread(target=work, args=(seed * 10 + j,))
+                   for j in range(3)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errs, errs
+        epochs = {split_vseq(rows[0][2])[0] for rows in logs.values()}
+        assert len(epochs) == 3  # every writer got its own lane
+        winners = {}
+        for rows in logs.values():
+            for op, key, vseq, token in rows:
+                if key not in winners or vseq > winners[key][1]:
+                    winners[key] = (op, vseq, token)
+        reader = cl.client(timeout=5.0, pool_bytes=0)
+        for key, (op, vseq, token) in winners.items():
+            if op == "PUT":
+                assert _matches(reader.get(key), token), key
+            else:
+                with pytest.raises(KeyMissing):
+                    reader.get(key)
+        reader.close()
+
+
+@pytest.mark.timeout(60)
+def test_stale_writer_fenced_after_forced_reconcile(tmp_path):
+    """Force-sealing a live writer's lane turns its next write into a
+    typed LeaseFenced — the write is never applied — and the fenced
+    writer transparently recovers under a fresh epoch."""
+    spec = ClusterSpec(n_cells=3, r=2, backend="file",
+                       root=str(tmp_path / "cluster"), lease_ttl=30.0)
+    with LocalCluster(spec, mode="thread") as cl:
+        w = cl.client(timeout=2.0, pool_bytes=0)
+        ops = cl.client(timeout=2.0, pool_bytes=0)
+        key = key_for(0)
+        w.put(key, payload_arrays(1))
+        epoch = w.lease_status()["epoch"]
+        seal = ops.reconcile_lane(epoch, force=True)  # the stale drill
+        assert seal >= 1
+        with pytest.raises(LeaseFenced):
+            w.put(key, payload_arrays(2))
+        assert _matches(ops.get(key), 1)  # fenced write left no trace
+        w.put(key, payload_arrays(3))  # re-acquires a fresh lane
+        assert w.lease_status()["epoch"] > epoch
+        assert w.stats.lease_fenced >= 1
+        assert _matches(ops.get(key), 3)
+        w.close()
+        ops.close()
+
+
+@pytest.mark.timeout(120)
+def test_quorum_loss_degrades_then_auto_recovers(tmp_path):
+    """Killing 2/3 cells starves lease renewal: writes degrade to a
+    fast typed WriteUnavailable while reads keep serving from the
+    survivor; restoring the quorum re-acquires automatically under a
+    fresh epoch with no client restart."""
+    spec = ClusterSpec(n_cells=3, r=2, backend="file",
+                       root=str(tmp_path / "cluster"), lease_ttl=0.5)
+    # a slot whose replica chain includes the surviving cell 0
+    slot = next(s for s in range(8)
+                if 0 in replica_nodes(7, s % 2, 3, 2))
+    key = key_for(slot)
+    with LocalCluster(spec, mode="thread") as cl:
+        w = cl.client(timeout=0.5, retries=0, backoff=0.01, pool_bytes=0)
+        w.put(key, payload_arrays(10))
+        epoch0 = w.lease_status()["epoch"]
+        cl.kill(1)
+        cl.kill(2)
+        deadline = time.monotonic() + 10
+        while time.monotonic() < deadline:
+            try:
+                w.put(key, payload_arrays(11))
+            except WriteUnavailable:
+                break
+            except StorageNodeDown:
+                pass  # replica set fully dark for this op: keep going
+            time.sleep(0.05)
+        else:
+            pytest.fail("writes kept succeeding without a renew quorum")
+        assert "src" in w.get(key)  # reads fail over to the survivor
+        t0 = time.monotonic()
+        with pytest.raises(WriteUnavailable):  # degraded -> fail FAST
+            w.put(key, payload_arrays(12))
+        assert time.monotonic() - t0 < 0.5
+        cl.restart(1)
+        cl.restart(2)
+        w._suspects.clear()
+        deadline = time.monotonic() + 20
+        while True:  # the background lease loop re-acquires on its own
+            try:
+                w.put(key, payload_arrays(13))
+                break
+            except (WriteUnavailable, StorageNodeDown):
+                if time.monotonic() > deadline:
+                    raise
+                time.sleep(0.1)
+        st = w.lease_status()
+        assert st["epoch"] > epoch0 and not st["degraded"]
+        assert _matches(w.get(key), 13)
+        w.close()
+
+
+# ---------------------------------------------------------------------------
+# the stranded-seq regression: SIGKILLed writer process
+# ---------------------------------------------------------------------------
+
+
+def _spawn_writer(cl, seed, out, n_writes=100_000, keyspace=12,
+                  lease_ttl=1.0):
+    import repro
+    src = str(Path(next(iter(repro.__path__))).parent)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [src] + [p for p in env.get("PYTHONPATH", "").split(os.pathsep)
+                 if p])
+    addrs = ",".join(f"{h}:{p}" for h, p in cl.addrs)
+    cmd = [sys.executable, "-m", "repro.service.stress",
+           "--addrs", addrs, "--r", str(cl.spec.r),
+           "--n-writes", str(n_writes), "--keyspace", str(keyspace),
+           "--seed", str(seed), "--out", str(out),
+           "--lease-ttl", str(lease_ttl)]
+    proc = subprocess.Popen(cmd, env=env, stdout=subprocess.PIPE,
+                            stderr=subprocess.DEVNULL, text=True)
+    line = proc.stdout.readline()
+    assert line.startswith("WRITER READY"), line
+    return proc
+
+
+def _wait_lines(path, n, timeout=60.0):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if path.exists() and len(path.read_text().splitlines()) >= n:
+            return
+        time.sleep(0.05)
+    raise TimeoutError(f"writer log never reached {n} acked ops")
+
+
+@pytest.mark.timeout(300)
+def test_sigkilled_writer_strands_ack_until_reconciliation(tmp_path):
+    """The stranded-seq bug, regression-tested end to end: SIGKILL a
+    real writer process mid-storm.  Its lane's ack watermark freezes
+    (the pre-fix symptom: feed truncation starves behind the dead
+    lane's coverage), until lease expiry triggers orphan-seq
+    reconciliation — the lane seals at the max replica-acked record,
+    coverage advances past it, truncation resumes, and every acked
+    write is still served."""
+    seed = 1 + SEED_OFFSET
+    keyspace = 12
+    spec = ClusterSpec(n_cells=3, r=2, backend="file",
+                       root=str(tmp_path / "cluster"), feed_keep=8,
+                       lease_ttl=1.0)
+    with LocalCluster(spec, mode="subprocess") as cl:
+        log = tmp_path / "writer.log"
+        proc = _spawn_writer(cl, seed, log, keyspace=keyspace)
+        try:
+            _wait_lines(log, 40)
+        finally:
+            proc.kill()  # SIGKILL: no release, no goodbye
+            proc.wait(timeout=10)
+        rows = read_acked_log(log)
+        assert len(rows) >= 40
+        epoch = split_vseq(rows[-1][2])[0]
+        max_acked = max(split_vseq(v)[1] for _, _, v, _ in rows)
+        reader = cl.client(timeout=2.0, retries=1, backoff=0.02,
+                           pool_bytes=0)
+        # the stranded state: lane un-sealed, ack water frozen short of
+        # the lane's high-water mark on every reporting cell
+        frozen = {}
+        for i, st in enumerate(reader.feed_status()):
+            lane = (st or {}).get("lanes", {}).get(str(epoch))
+            if lane is None:
+                continue
+            assert lane["seal"] is None
+            frozen[i] = st["ack_water"]
+        assert frozen
+        # lease expiry (1s) + sweep (ttl/2) -> reconciliation seals it
+        deadline = time.monotonic() + 60
+        while time.monotonic() < deadline:
+            lanes = [(st or {}).get("lanes", {}).get(str(epoch))
+                     for st in reader.feed_status()]
+            lanes = [l for l in lanes if l]
+            if len(lanes) == 3 and all(l["seal"] is not None
+                                       for l in lanes):
+                break
+            time.sleep(0.25)
+        else:
+            pytest.fail("dead lane never sealed by the sweeper")
+        assert all(l["seal"] >= max_acked for l in lanes)
+        # one agreed seal everywhere (lane seqs may differ per cell —
+        # each only holds the placements it replicates)
+        assert len({l["seal"] for l in lanes}) == 1
+        # coverage advanced past the dead lane; truncation resumes
+        reader.quiesce(truncate=True)
+        for i, st in enumerate(reader.feed_status()):
+            assert st is not None
+            lane = st["lanes"][str(epoch)]
+            assert lane["floor"] == lane["seal"] and not lane["lease"]
+            assert st["ack_water"] >= make_vseq(epoch, max_acked)
+            if i in frozen:
+                assert st["ack_water"] > frozen[i]
+        # zero acked writes lost: every key serves its max-vseq acked
+        # winner — or the writer's single possibly-in-flight next op
+        # (killed after the cluster applied it, before the log landed),
+        # which reconciliation replicated everywhere
+        n_acked = len(rows)
+        rng = np.random.default_rng(seed)
+        slots = [int(rng.integers(0, keyspace))
+                 for _ in range(n_acked + 1)]
+        cand_key = key_for(slots[n_acked])
+        cand_op = "DEL" if n_acked % 10 == 9 else "PUT"
+        cand_token = seed * 1_000_003 + n_acked
+        winners = {}
+        for op, key, vseq, token in rows:
+            if key not in winners or vseq > winners[key][1]:
+                winners[key] = (op, vseq, token)
+        for key, (op, vseq, token) in winners.items():
+            cand = key == cand_key
+            try:
+                got = reader.get(key)
+            except KeyMissing:
+                assert op == "DEL" or (cand and cand_op == "DEL"), key
+                continue
+            ok = op == "PUT" and _matches(got, token)
+            if cand and cand_op == "PUT":
+                ok = ok or _matches(got, cand_token)
+            assert ok, key
+        reader.close()
+
+
+# ---------------------------------------------------------------------------
+# shared-secret wire auth
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.timeout(60)
+def test_wire_auth_accepts_key_and_rejects_typed(tmp_path):
+    """ClusterSpec(auth_key=...) flows to every cell and client; a
+    wrong or missing key is a typed AuthFailed — never wrapped into
+    NodeUnavailable, never retried into a hang."""
+    spec = ClusterSpec(n_cells=2, r=2, backend="file",
+                       root=str(tmp_path / "cluster"),
+                       auth_key="open-sesame")
+    with LocalCluster(spec, mode="thread") as cl:
+        w = cl.client(timeout=2.0, pool_bytes=0)
+        key = key_for(2)
+        w.put(key, payload_arrays(9))
+        assert _matches(w.get(key), 9)
+        w.close()
+        for bad_key in ("wrong-key", None):
+            bad = RemoteDeltaStore(cl.addrs, r=2, timeout=1.0, retries=2,
+                                   backoff=0.01, pool_bytes=0,
+                                   auth_key=bad_key)
+            t0 = time.monotonic()
+            with pytest.raises(AuthFailed):
+                bad.get(key)
+            assert time.monotonic() - t0 < 1.0  # typed, not retried
+            bad.close()
+
+
+@pytest.mark.timeout(60)
+def test_wire_auth_fuzzed_macs_rejected_and_connection_closed():
+    """Fuzz the HELLO challenge: random MACs (including empty and
+    oversized) and skipped-auth requests all get ERR_AUTH_FAILED and a
+    closed connection; the cell stays healthy for the right key."""
+    cell = StorageCell(node_id=0, n_cells=1, r=1, backend="mem",
+                       auth_key="k3y")
+    cell.start()
+    try:
+        rng = np.random.RandomState(7 + SEED_OFFSET)
+        for i in range(20):
+            with socket.create_connection((HOST, cell.port),
+                                          timeout=5) as s:
+                s.settimeout(5)
+                wire.send_frame(s, wire.MSG_HELLO, 1)
+                chal = wire.recv_frame(s)
+                assert chal.msg_type == wire.MSG_AUTH
+                assert len(chal.body) == wire.AUTH_NONCE_LEN
+                if i % 3 == 0:  # skip auth, go straight to a request
+                    wire.send_frame(s, wire.MSG_PING, 2,
+                                    struct.pack("<Q", 0))
+                else:
+                    mac = rng.bytes(int(rng.randint(0, 64)))
+                    wire.send_frame(s, wire.MSG_AUTH, 2, mac)
+                reply = wire.recv_frame(s)
+                assert reply.msg_type == wire.MSG_ERR
+                code, _ = wire.unpack_err(reply.body)
+                assert code == wire.ERR_AUTH_FAILED
+                try:
+                    assert s.recv(1) == b""  # server hung up
+                except ConnectionError:
+                    pass
+        ok = RemoteDeltaStore([(HOST, cell.port)], r=1, auth_key="k3y",
+                              pool_bytes=0)
+        with pytest.raises(KeyMissing):
+            ok.get(key_for(0))
+        ok.close()
+    finally:
+        cell.stop()

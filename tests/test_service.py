@@ -19,7 +19,8 @@ from repro.service import ClusterSpec, LocalCluster, StorageCell
 from repro.service import wire
 from repro.service.client import RemoteDeltaStore
 from repro.storage import serialize
-from repro.storage.kvstore import DeltaKey, DeltaStore, KeyMissing
+from repro.storage.kvstore import (DeltaKey, DeltaStore, KeyMissing,
+                                   split_vseq)
 from repro.taf.query import HistoricalGraphStore
 
 
@@ -164,9 +165,11 @@ def test_cell_roundtrip_and_projection_pushdown(one_cell):
     np.testing.assert_array_equal(full["big"], arrays["big"])
     full_io = one_cell.store.stats.bytes_io
     assert 0 < proj_io < full_io / 10, (proj_io, full_io)
-    # server-side status report agrees with the client-held accounting
+    # server-side status report agrees with the client-held accounting:
+    # one write, stamped (epoch, seq=1) under the client's writer lease
     status = store.cell_status(0)
-    assert status["n_keys"] == 1 and status["last_seq"] == 1
+    epoch, seq = split_vseq(status["last_seq"])
+    assert status["n_keys"] == 1 and seq == 1 and epoch >= 1
     store.close()
 
 
@@ -481,7 +484,7 @@ def test_interior_gap_repaired_by_redelivery(tmp_path):
     np.testing.assert_array_equal(got["x"], v2)
     assert store.stats.redelivered >= 1
     assert not store._pending[1]
-    assert cells[1].last_seq == 2
+    assert split_vseq(cells[1].last_seq) == (1, 2)
     store.close()
     for c in cells.values():
         c.stop()
@@ -588,12 +591,13 @@ def test_delete_with_all_replicas_down_raises(one_cell):
 
 
 @pytest.mark.timeout(60)
-def test_attach_requires_every_cell_reachable(tmp_path):
-    """A fresh client must refuse to attach while any cell is down: the
-    write-seq high-water mark could live only on the dead cell, and
-    re-stamping its seqs would be silently dropped by dedupe.  An
-    explicit require_full_attach=False still allows degraded reads."""
-    from repro.storage.kvstore import StorageNodeDown
+def test_quorum_loss_degrades_writes_but_reads_survive(tmp_path):
+    """Attach is lazy (a lease is acquired at the first write), so a
+    client can always come up against a degraded cluster — but without
+    a cell quorum the write plane must fail with the typed
+    WriteUnavailable (fast once degraded, not one timeout per call)
+    while reads keep failing over to the surviving replica."""
+    from repro.storage.kvstore import WriteUnavailable
 
     spec = ClusterSpec(n_cells=2, r=2, backend="file",
                        root=str(tmp_path / "cluster"))
@@ -603,11 +607,17 @@ def test_attach_requires_every_cell_reachable(tmp_path):
         w.put(key, {"x": np.arange(12)})
         w.close()
         cl.kill(0)
-        with pytest.raises(StorageNodeDown):
-            cl.client(timeout=1.0, retries=0, backoff=0.01)
-        ro = cl.client(timeout=1.0, retries=0, backoff=0.01,
-                       require_full_attach=False)
+        # quorum is 2/2 — with a cell dead, no lease can be granted
+        ro = cl.client(timeout=0.5, retries=0, backoff=0.01)
         assert "x" in ro.get(key)  # served by the surviving replica
+        with pytest.raises(WriteUnavailable):
+            ro.put(key, {"x": np.arange(3)})
+        assert ro.lease_status()["degraded"]
+        t0 = time.monotonic()
+        with pytest.raises(WriteUnavailable):  # degraded -> fail fast
+            ro.put(key, {"x": np.arange(3)})
+        assert time.monotonic() - t0 < 0.25
+        assert "x" in ro.get(key)  # reads still fine after the refusals
         ro.close()
 
 

@@ -23,7 +23,7 @@ from repro.service import ClusterSpec, FeedTruncated, LocalCluster, StorageCell
 from repro.service import wire
 from repro.service.client import RemoteDeltaStore
 from repro.storage.kvstore import (DeltaKey, DeltaStore, NodeUnavailable,
-                                   StorageNodeDown)
+                                   StorageNodeDown, make_vseq)
 
 HOST = "127.0.0.1"
 
@@ -551,7 +551,12 @@ def test_feed_truncation_bounded_under_churn_and_boot_floor(tmp_path):
             got = store.get(k)
             for f in ("t", "v"):
                 assert np.array_equal(got[f], want[k][f])
-        assert store.quiesce() > 0  # watermark resumes past the floor
+        # a rebooted writer acquires a FRESH epoch lane above the sealed
+        # one — re-stamping seqs below the old floor is impossible by
+        # construction, and its watermark lands above every old lane
+        store.put(keys[0], want[keys[0]])
+        assert store.lease_status()["epoch"] >= 2
+        assert store.quiesce() > make_vseq(1, 0)
         store.close()
 
 
@@ -592,7 +597,8 @@ def test_truncated_restart_catch_up_converges_byte_identical(tmp_path):
                 assert "t" in store.get(k)
             # drive every cell to the common final feed state
             water = store.quiesce(truncate=True)
-            assert water == store._seq
+            assert water == make_vseq(store.lease_status()["epoch"],
+                                      store._seq)
             feeds = store.feed_status()
             assert all(f is not None and f["floor"] == water for f in feeds)
             if kill:  # truncation actually happened during/after churn
@@ -666,13 +672,12 @@ def test_mem_cell_raises_typed_feed_truncated(tmp_path):
                                     DeltaKey(0, 0, "E:0", seq - 1),
                                     40, blob))
         a.note_ack(3)
-        assert a.feed_floor == 3 and a.truncations == 1
+        assert a._floors.get(0) == 3 and a.truncations == 1
         b = StorageCell(node_id=1, n_cells=2, r=2, backend="mem")
         with pytest.raises(FeedTruncated):
             b.catch_up([(HOST, a.port)])
         # and over the wire: STATE_PULL against a mem cell is typed too
-        store = RemoteDeltaStore([(HOST, a.port)], r=1,
-                                 require_full_attach=False)
+        store = RemoteDeltaStore([(HOST, a.port)], r=1)
         with pytest.raises(wire.RemoteError) as ei:
             store._request(0, wire.MSG_STATE_PULL, struct.pack("<qq", 0, 0))
         assert ei.value.code == wire.ERR_FEED_TRUNCATED
